@@ -1,0 +1,65 @@
+"""Exchange-routing selection (paper §MPI Communication behavior).
+
+Times all-to-all / pairwise / crystal-router over a message-size sweep on 8
+emulated ranks — reproducing the paper's claim structure: crystal router
+wins small (latency-bound) messages, pairwise wins large (bandwidth-bound)
+ones, and the library's autotuner picks per size.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+
+_CHILD = r"""
+import os, json, time
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from functools import partial
+from repro.comms.exchange import EXCHANGES
+
+mesh = jax.make_mesh((8,), ("r",), axis_types=(jax.sharding.AxisType.Auto,))
+out = {}
+for chunk in [16, 256, 4096, 65536]:
+    x = jnp.zeros((64, chunk), jnp.float32)
+    row = {}
+    for name, fn in EXCHANGES.items():
+        f = jax.jit(jax.shard_map(partial(fn, axis_name="r"), mesh=mesh,
+                                  in_specs=P("r"), out_specs=P("r")))
+        f(x).block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(10):
+            f(x).block_until_ready()
+        row[name] = (time.perf_counter() - t0) / 10
+    row["winner"] = min(row, key=row.get)
+    out[chunk] = row
+print(json.dumps(out))
+"""
+
+
+def main(quick: bool = True) -> list[str]:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    res = subprocess.run(
+        [sys.executable, "-c", _CHILD], capture_output=True, text=True,
+        env=env, timeout=600,
+    )
+    if res.returncode != 0:
+        raise RuntimeError(res.stderr[-2000:])
+    data = json.loads(res.stdout.strip().splitlines()[-1])
+    rows = ["exchange,chunk_floats,all_to_all_us,pairwise_us,crystal_us,winner"]
+    for chunk, row in data.items():
+        rows.append(
+            f"exchange,{chunk},{row['all_to_all']*1e6:.0f},"
+            f"{row['pairwise']*1e6:.0f},{row['crystal_router']*1e6:.0f},"
+            f"{row['winner']}"
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -1,0 +1,80 @@
+"""Fig. 3 reproduction: fused Poisson operator performance vs degree N.
+
+The paper measures GFLOPS of the operator kernel for N = 1..15 on three
+GPUs against an empirically calibrated streaming roofline (Eq. 4). Here:
+  * measured: wall-clock of the jit'd operator on THIS host (CPU), with an
+    empirically measured CPU streaming bandwidth calibrating the same
+    roofline form — the paper's methodology, ported to the host we have;
+  * modeled: the TPU-v5e roofline targets (197 TF peak / 819 GB/s HBM)
+    that §Roofline uses for the dry-run cells.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import build_problem, fom
+from repro.core.operator import local_poisson
+from repro.kernels import ops
+
+
+def _time(f, *args, reps=5) -> float:
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else jax.block_until_ready(f(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(f(*args))
+    return (time.perf_counter() - t0) / reps
+
+
+def measure_stream_bandwidth() -> float:
+    """Empirical streaming rate with the paper's 8:1 read:write kernel shape."""
+    n = 4 * 2**20
+    xs = [jnp.arange(n, dtype=jnp.float32) + i for i in range(8)]
+
+    @jax.jit
+    def stream(*arrs):
+        return sum(arrs)
+
+    dt = _time(stream, *xs)
+    return 9 * n * 4 / dt  # 8 reads + 1 write
+
+
+def main(quick: bool = True) -> list[str]:
+    rows = ["fig3,N,dofs,elements,cpu_us,cpu_gflops,cpu_roofline_gflops,tpu_roofline_gflops,ai_f32"]
+    bw = measure_stream_bandwidth()
+    target_dofs = 80_000 if quick else 2_000_000
+    for n in range(1, 16):
+        # mesh sized to ~target DOFs (paper: fixed ~40M per degree)
+        e_per_dim = max(2, round((target_dofs / n**3) ** (1 / 3)))
+        shape = (e_per_dim,) * 3
+        prob = build_problem(n, shape, lam=1.0, dtype=jnp.float32)
+        e = prob.mesh.n_elements
+        u = jnp.ones((e, prob.mesh.points_per_element), jnp.float32)
+
+        op = jax.jit(
+            lambda u, g, d, w: local_poisson(u, g, d, 1.0, w)
+        )
+        dt = _time(op, u, prob.g, prob.d, prob.w_local)
+        flops = fom.operator_flops(e, n)
+        ai = flops / fom.operator_bytes(e, n, word=4)
+        cpu_gflops = flops / dt / 1e9
+        cpu_roof = min(
+            # CPU peak unknown; streaming bound is the relevant arm
+            1e12, ai * bw
+        ) / 1e9
+        tpu_roof = fom.roofline_gflops(
+            n, peak_gflops=197_000, bandwidth_gbs=819, word=4
+        )
+        rows.append(
+            f"fig3,{n},{prob.n_global},{e},{dt*1e6:.0f},{cpu_gflops:.2f},"
+            f"{cpu_roof:.2f},{tpu_roof:.0f},{ai:.3f}"
+        )
+    rows.append(f"fig3_meta,stream_bw_gbs,{bw/1e9:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -1,0 +1,49 @@
+"""Benchmark driver — one section per paper table/figure.
+
+``python -m benchmarks.run [--full]`` prints CSV rows per benchmark:
+  fig3     — operator GFLOPS vs N + roofline      (paper Fig. 3)
+  table1   — kernel occupancy/VMEM analogue       (paper Table 1)
+  fig456   — multi-rank scaling + throughput      (paper Figs. 4-6)
+  table2   — peak FOM / weak scaling / NekBone-vs-hipBone (paper Table 2)
+  exchange — routing-algorithm selection          (paper §MPI Communication)
+"""
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="larger problem sizes")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    quick = not args.full
+
+    from benchmarks import exchange_select, fig3_operator, fig456_scaling, table1_blocks, table2_fom
+
+    sections = {
+        "fig3": fig3_operator.main,
+        "table1": table1_blocks.main,
+        "fig456": fig456_scaling.main,
+        "table2": table2_fom.main,
+        "exchange": exchange_select.main,
+    }
+    failures = 0
+    for name, fn in sections.items():
+        if args.only and name != args.only:
+            continue
+        t0 = time.time()
+        print(f"# --- {name} ---", flush=True)
+        try:
+            for row in fn(quick=quick):
+                print(row, flush=True)
+        except Exception as e:  # report and continue
+            failures += 1
+            print(f"{name},ERROR,{type(e).__name__}: {e}", flush=True)
+        print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Table 1 analogue: occupancy metrics for the Pallas operator kernel.
+
+The paper's Table 1 explains high-N roofline deviations via GPU occupancy
+(registers/warp, wavefronts/CU). The TPU analogue (DESIGN.md §3): VMEM
+working-set per grid step vs the 16 MB budget, pipelining headroom
+(double-buffer fit), element block size, and MXU lane alignment of the
+contraction shapes.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.fom import TPU_V5E
+from repro.kernels.poisson import pick_block_e, vmem_bytes_per_block
+
+
+def main(quick: bool = True) -> list[str]:
+    rows = [
+        "table1,N,block_e,vmem_kb_per_block,vmem_util_pct,double_buffer_fit,"
+        "matmul_k,lane_pad_eff_pct,elements_resident"
+    ]
+    vmem = TPU_V5E.vmem_bytes
+    for n in range(1, 16):
+        n1 = n + 1
+        eb = pick_block_e(n, jnp.float32)
+        ws = vmem_bytes_per_block(eb, n1, jnp.float32)
+        # MXU processes 128-lane tiles; the contraction K dim is n+1.
+        lane_eff = min(1.0, n1 / 128) if n1 < 128 else 1.0
+        # effective element-batched M dim is eb*(n+1)^2 — sublane (8) padding
+        m = eb * n1 * n1
+        sublane_eff = m / (-(-m // 8) * 8)
+        rows.append(
+            f"table1,{n},{eb},{ws/1024:.0f},{100*ws/vmem:.1f},"
+            f"{'yes' if 2*ws <= vmem else 'NO'},{n1},"
+            f"{100*lane_eff*sublane_eff:.1f},{eb}"
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -1,0 +1,54 @@
+"""Generate EXPERIMENTS.md §Dry-run and §Roofline tables from results/cells."""
+import glob
+import json
+import sys
+
+
+def load(pattern="results/cells/*.json"):
+    rows = []
+    for f in sorted(glob.glob(pattern)):
+        rows.append(json.load(open(f))[0])
+    return rows
+
+
+def fmt_table(rows):
+    out = [
+        "| arch | shape | mesh | dominant | compute_s | memory_s | collective_s "
+        "| roofline_frac | useful_flops | mem/chip GB | compile_s |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r.get("status") == "skipped":
+            continue
+        ro = r["roofline"]
+        m = r["memory"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {ro['dominant'].replace('_s','')} "
+            f"| {ro['compute_s']:.3f} | {ro['memory_s']:.3f} | {ro['collective_s']:.3f} "
+            f"| {ro.get('roofline_fraction',0):.4f} | {ro.get('useful_flop_fraction',0):.3f} "
+            f"| {m['total_nonaliased_bytes']/2**30:.2f} | {r.get('compile_s','')} |"
+        )
+    return "\n".join(out)
+
+
+def fmt_skips(rows):
+    out = ["| arch | shape | mesh | reason |", "|---|---|---|---|"]
+    for f in sorted(glob.glob("results/cells/*.json")):
+        r = json.load(open(f))[0]
+        if r.get("status") == "skipped":
+            parts = f.split("/")[-1][:-5].rsplit("_", 2)
+            out.append(f"| {parts[0]} | {parts[1]}_{parts[2].split('_')[0] if '_' in parts[2] else parts[2]} | | {r['reason']} |")
+    # simpler: derive from filename
+    out = ["| cell file | reason |", "|---|---|"]
+    for f in sorted(glob.glob("results/cells/*.json")):
+        r = json.load(open(f))[0]
+        if r.get("status") == "skipped":
+            out.append(f"| {f.split('/')[-1][:-5]} | {r['reason']} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    rows = load(sys.argv[1] if len(sys.argv) > 1 else "results/cells/*.json")
+    print(fmt_table([r for r in rows if r.get("status") == "ok"]))
+    print()
+    print(fmt_skips(rows))

@@ -1,0 +1,197 @@
+"""§Perf kernel-substitution accounting for the three hillclimb cells.
+
+Methodology (see EXPERIMENTS.md §Perf): restructuring changes are measured
+directly from the re-compiled dry-run HLO; Pallas-kernel changes are
+measured by substitution — compile the jnp subgraph the kernel replaces in
+isolation (same per-chip shapes), charge its loop-aware HBM proxy as
+"eliminated", and charge the kernel's operand/result streams (its HBM
+traffic by construction; internals are VMEM-resident, budget verified in
+benchmarks/table1) as "added".
+
+Run:  PYTHONPATH=src python scripts/perf_kernel_substitution.py
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fom import TPU_V5E
+from repro.roofline.hlo_model import analyze_hlo
+
+W = 4  # f32 bytes (CPU-lowered HLO is f32 for these subgraphs)
+
+
+def measure(fn, *args) -> float:
+    """Loop-aware HBM proxy bytes of a jit'd subgraph."""
+    txt = jax.jit(fn).lower(*args).compile().as_text()
+    return analyze_hlo(txt).hbm_bytes
+
+
+# ---------------------------------------------------------------- hipbone
+def hipbone_n15_large():
+    """Per-chip, per-CG-iteration traffic, jnp operator vs Pallas kernels."""
+    from repro.core import sem
+    from repro.core.operator import local_poisson
+
+    n = 15
+    e_loc = 512
+    p = (n + 1) ** 3
+    d = jnp.asarray(sem.derivative_matrix(n), jnp.float32)
+    u = jax.ShapeDtypeStruct((e_loc, p), jnp.float32)
+    g = jax.ShapeDtypeStruct((e_loc, 6, p), jnp.float32)
+    w = jax.ShapeDtypeStruct((e_loc, p), jnp.float32)
+
+    jnp_op_bytes = measure(
+        lambda u_, g_, w_: local_poisson(u_, g_, d, 1.0, w_), u, g, w
+    )
+    # kernel true traffic: one pass over u, G(6), W in; y out
+    kernel_bytes = (p * e_loc * (1 + 6 + 1 + 1)) * W
+
+    # CG vector-op fusion: r/p/x updates + dots (assembled, m3 DOFs/chip)
+    m3 = (8 * n + 1) ** 3
+
+    def cg_vec(r, ap, x, pvec, mask):
+        pap = jnp.vdot(pvec * mask, ap)
+        alpha = 1.7 / pap
+        r2 = r - alpha * ap
+        rr = jnp.vdot(r2 * mask, r2)
+        x2 = x + alpha * pvec
+        p2 = r2 + (rr / 3.0) * pvec
+        return x2, r2, p2, rr
+
+    vs = [jax.ShapeDtypeStruct((m3,), jnp.float32)] * 5
+    jnp_vec_bytes = measure(cg_vec, *vs)
+    # fused kernels: fused_axpy_dot (3 streams) + xpay (3) + axpy (3) + wdot (3)
+    kernel_vec_bytes = 12 * m3 * W
+
+    return {
+        "cell": "hipbone_n15_large x multi (paper-representative)",
+        "per_iter": {
+            "operator_jnp_bytes": jnp_op_bytes,
+            "operator_kernel_bytes": kernel_bytes,
+            "cg_vec_jnp_bytes": jnp_vec_bytes,
+            "cg_vec_kernel_bytes": kernel_vec_bytes,
+        },
+        "eliminated_per_iter": (jnp_op_bytes - kernel_bytes)
+        + (jnp_vec_bytes - kernel_vec_bytes),
+    }
+
+
+# ------------------------------------------------------- chameleon prefill
+def chameleon_prefill():
+    """Per-chip per-layer attention traffic, jnp chunked vs flash kernel."""
+    from repro.models import attention
+
+    # per-chip shapes on the multi-pod mesh: B = 32/32 = 1, q heads 64/16 = 4.
+    # kv heads are replicated (8 not divisible by 16); we measure with
+    # kv = h_loc = 4 — the dominant score traffic (b*s^2*h_loc) is exact,
+    # the small k/v streams are slightly under-counted (4 of 8 heads).
+    b, h_loc, kv, s, dh = 1, 4, 4, 32768, 128
+    q = jax.ShapeDtypeStruct((b, s, h_loc, dh), jnp.float32)
+    k = jax.ShapeDtypeStruct((b, s, kv, dh), jnp.float32)
+    v = jax.ShapeDtypeStruct((b, s, kv, dh), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def jnp_attn(q_, k_, v_):
+        chunk = 1024
+
+        def kv_fn(c):
+            sl = lambda a: jax.lax.dynamic_slice_in_dim(a, c * chunk, chunk, 1)
+            return sl(k_), sl(v_), sl(pos)
+
+        return attention.flash_attention(
+            q_, kv_fn, s // chunk, q_positions=pos,
+            n_kv_heads=kv, window=None, scale=dh**-0.5, dv=dh,
+        )
+
+    jnp_bytes = measure(jnp_attn, q, k, v)
+    kernel_bytes = (b * s * dh * (h_loc * 2 + kv * 2)) * W  # q,o,k,v one pass
+    return {
+        "cell": "chameleon-34b x prefill_32k x multi (worst memory-bound)",
+        "per_layer": {
+            "attention_jnp_bytes": jnp_bytes,
+            "attention_kernel_bytes": kernel_bytes,
+        },
+        "eliminated_per_layer": jnp_bytes - kernel_bytes,
+        "n_layers": 48,
+    }
+
+
+# --------------------------------------------------------- deepseek train
+def deepseek_attn():
+    """Absorbed-MLA + flash: per-layer traffic, measured both jnp forms."""
+    from repro.models import attention
+    from repro.configs import ARCHS
+
+    cfg = ARCHS["deepseek-v3-671b"]
+    # per-chip: batch 256/32=8, heads 128/16=8, seq 4096
+    b, h_loc, s = 8, 8, 4096
+    r, rope, nope, dv = cfg.kv_lora_rank, cfg.qk_rope_head_dim, cfg.qk_nope_head_dim, cfg.v_head_dim
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    scale = (nope + rope) ** -0.5
+
+    q = jax.ShapeDtypeStruct((b, s, h_loc, nope + rope), jnp.float32)
+    ckv = jax.ShapeDtypeStruct((b, s, r), jnp.float32)
+    krope = jax.ShapeDtypeStruct((b, s, rope), jnp.float32)
+    wukv = jax.ShapeDtypeStruct((r, h_loc, nope + dv), jnp.float32)
+
+    def expanded(q_, c_, kr_, w_):
+        chunk = 1024
+        def kv_fn(c):
+            sl = lambda a: jax.lax.dynamic_slice_in_dim(a, c * chunk, chunk, 1)
+            kv = jnp.einsum("bcr,rhk->bchk", sl(c_), w_)
+            k_nope, vv = kv[..., :nope], kv[..., nope:]
+            kr = jnp.broadcast_to(sl(kr_)[:, :, None, :], k_nope.shape[:3] + (rope,))
+            return jnp.concatenate([k_nope, kr], -1), vv, sl(pos)
+        return attention.flash_attention(
+            q_, kv_fn, s // chunk, q_positions=pos, n_kv_heads=h_loc,
+            window=None, scale=scale, dv=dv,
+        )
+
+    def absorbed(q_, c_, kr_, w_):
+        w_uk, w_uv = w_[..., :nope], w_[..., nope:]
+        q_abs = jnp.einsum("bshn,rhn->bshr", q_[..., :nope], w_uk)
+        q_full = jnp.concatenate([q_abs, q_[..., nope:]], -1)
+        k_full = jnp.concatenate([c_, kr_], -1)[:, :, None, :]
+        v_c = c_[:, :, None, :]
+        chunk = 1024
+        def kv_fn(c):
+            sl = lambda a: jax.lax.dynamic_slice_in_dim(a, c * chunk, chunk, 1)
+            return sl(k_full), sl(v_c), sl(pos)
+        out_c = attention.flash_attention(
+            q_full, kv_fn, s // chunk, q_positions=pos, n_kv_heads=1,
+            window=None, scale=scale, dv=r,
+        )
+        return jnp.einsum("bshr,rhv->bshv", out_c, w_uv)
+
+    exp_bytes = measure(expanded, q, ckv, krope, wukv)
+    abs_bytes = measure(absorbed, q, ckv, krope, wukv)
+    # absorbed + flash kernel: q_full, k_full, v_c, out_c streams once
+    flash_bytes = (
+        b * s * (h_loc * (r + rope)       # q_full
+                 + (r + rope) + r         # k_full + v_c
+                 + h_loc * r              # out_c
+                 + h_loc * (nope + rope)  # q in
+                 + h_loc * dv)            # out
+    ) * W
+    return {
+        "cell": "deepseek-v3-671b x train_4k x multi (paper-technique cell)",
+        "per_layer_fwd": {
+            "mla_expanded_jnp_bytes": exp_bytes,
+            "mla_absorbed_jnp_bytes": abs_bytes,
+            "mla_absorbed_flash_bytes": flash_bytes,
+        },
+        "n_layers": 61,
+    }
+
+
+if __name__ == "__main__":
+    out = {
+        "hipbone": hipbone_n15_large(),
+        "chameleon_prefill": chameleon_prefill(),
+        "deepseek_attn": deepseek_attn(),
+    }
+    print(json.dumps(out, indent=2, default=float))
+    with open("results/perf/kernel_substitution.json", "w") as f:
+        json.dump(out, f, indent=2, default=float)

@@ -1,0 +1,3 @@
+"""repro — hipBone (NekBone-on-GPU) rebuilt TPU-native in JAX, plus the
+multi-pod LM framework that shares its communication machinery."""
+__version__ = "1.0.0"

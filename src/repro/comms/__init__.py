@@ -1,0 +1,19 @@
+"""repro.comms — device-aware nearest-neighbor collectives (the gslib rewrite).
+
+Exchange algorithms (all-to-all / pairwise / crystal router), structured
+halo sum/copy exchanges, process-grid topology, and the autotune harness
+that times the algorithms and picks the fastest — hipBone's setup-time
+exchange selection.
+"""
+from .autotune import autotune_exchange
+from .exchange import (
+    EXCHANGES,
+    exchange_all_to_all,
+    exchange_crystal_router,
+    exchange_pairwise,
+    get_exchange,
+)
+from .halo import copy_exchange, rank_coords, sum_exchange
+from .topology import ProcessGrid, factor3, hypercube_stages
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,72 @@
+"""Exchange-algorithm autotuning — hipBone's setup-time routing selection.
+
+"During the initial setup of the gather-scatter library, each of the
+exchange routines is timed, and the fastest exchange is selected for use in
+subsequent communication operations." (paper §MPI Communication)
+
+We do the same: jit each exchange over the actual mesh axis and buffer
+shape, time a few repetitions, and cache the winner per
+(axis, shape, dtype) key. On this CPU container the timings are host
+emulation, but the machinery (and its tests) carry to real ICI unchanged.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .exchange import EXCHANGES
+
+__all__ = ["autotune_exchange"]
+
+_CACHE: dict[tuple, str] = {}
+
+
+def autotune_exchange(
+    mesh: jax.sharding.Mesh,
+    axis_name: str,
+    chunk_shape: tuple[int, ...],
+    dtype=jnp.float32,
+    *,
+    repeats: int = 3,
+    candidates: tuple[str, ...] | None = None,
+) -> str:
+    """Time each exchange algorithm on (P, *chunk_shape) buffers; return winner."""
+    key = (id(mesh), axis_name, tuple(chunk_shape), jnp.dtype(dtype).name)
+    if key in _CACHE:
+        return _CACHE[key]
+
+    p = mesh.shape[axis_name]
+    names = list(candidates or EXCHANGES)
+    if p & (p - 1):  # crystal router needs a power of two
+        names = [n for n in names if n != "crystal_router"]
+
+    global_shape = (p * p,) + tuple(chunk_shape)
+    x = jnp.zeros(global_shape, dtype)
+    best_name, best_t = names[0], float("inf")
+    for name in names:
+        fn = EXCHANGES[name]
+        shmapped = jax.jit(
+            jax.shard_map(
+                functools.partial(fn, axis_name=axis_name),
+                mesh=mesh,
+                in_specs=P(axis_name),
+                out_specs=P(axis_name),
+            )
+        )
+        try:
+            shmapped(x).block_until_ready()  # compile + warm
+            t0 = time.perf_counter()
+            for _ in range(repeats):
+                shmapped(x).block_until_ready()
+            dt = (time.perf_counter() - t0) / repeats
+        except Exception:  # algorithm unavailable on this topology
+            continue
+        if dt < best_t:
+            best_name, best_t = name, dt
+    _CACHE[key] = best_name
+    return best_name

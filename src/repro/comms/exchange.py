@@ -1,0 +1,112 @@
+"""Nearest-neighbor exchange algorithms — the paper's gslib routing, JAX-native.
+
+hipBone re-implements gslib with three interchangeable exchange routines
+(paper §MPI Communication): **all-to-all**, **pairwise**, and **crystal
+router**. We provide the same three over ``shard_map`` collectives for the
+dense uniform-chunk case (every rank holds a (P, chunk) buffer; after the
+exchange, rank d holds src-indexed chunks — lax.all_to_all convention).
+This is the exchange primitive the MoE expert-parallel dispatch uses, and
+the benchmark harness times all three (the paper's setup-time autotuning).
+
+Cost model (per rank), matching the paper's analysis:
+  pairwise:        P-1 messages,  (P-1)·chunk bytes     — min data, max msgs
+  crystal router:  log2 P msgs,   (P/2)·log2(P)·chunk   — min msgs, more data
+  all-to-all:      library's choice (XLA/ICI native)
+
+All functions run INSIDE shard_map over ``axis_name`` and are jit-safe.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .topology import hypercube_stages
+
+__all__ = [
+    "exchange_all_to_all",
+    "exchange_pairwise",
+    "exchange_crystal_router",
+    "EXCHANGES",
+    "get_exchange",
+]
+
+
+def _axis_size(axis_name) -> int:
+    return lax.axis_size(axis_name)
+
+
+def exchange_all_to_all(buf: jax.Array, axis_name: str) -> jax.Array:
+    """Dense exchange via the native collective (XLA picks the routing)."""
+    return lax.all_to_all(buf, axis_name, split_axis=0, concat_axis=0, tiled=True)
+
+
+def exchange_pairwise(buf: jax.Array, axis_name: str) -> jax.Array:
+    """P-1 direct messages — the paper's MPI_Isend/Irecv pairwise exchange.
+
+    Step d sends chunk[(r+d) % P] to rank (r+d) % P; minimal total bytes,
+    maximal message count. Ring-scheduled so each step is a disjoint
+    permutation (no congestion), as an MPI implementation would.
+    """
+    p = _axis_size(axis_name)
+    me = lax.axis_index(axis_name)
+    out = jnp.zeros_like(buf)
+    out = lax.dynamic_update_index_in_dim(
+        out, lax.dynamic_index_in_dim(buf, me, 0, keepdims=False), me, 0
+    )
+
+    # Unrolled python loop: ppermute permutations must be static.
+    for d in range(1, p):
+        dst = (me + d) % p
+        src = (me - d) % p
+        send = lax.dynamic_index_in_dim(buf, dst, 0, keepdims=False)
+        perm = [(r, (r + d) % p) for r in range(p)]
+        recv = lax.ppermute(send, axis_name, perm)
+        out = lax.dynamic_update_index_in_dim(out, recv, src, 0)
+    return out
+
+
+def exchange_crystal_router(buf: jax.Array, axis_name: str) -> jax.Array:
+    """Recursive hypercube folding (Lamb et al. 1988), log2(P) messages.
+
+    Stage s pairs each rank with ``rank XOR 2^s`` and forwards every chunk
+    whose destination lies in the partner's half. Chunk count per rank is
+    invariant (P): after stage s, slot-index bit s is reinterpreted from
+    "destination bit" to "source bit". Fewer, larger messages — the
+    latency-optimal routing for small problems (paper §Crystal Router).
+    """
+    p = _axis_size(axis_name)
+    k = hypercube_stages(p)
+    me = lax.axis_index(axis_name)
+
+    for s in range(k):
+        bit = 1 << s
+        mybit = (me >> s) & 1
+        pre = p >> (s + 1)
+        # view slots as (pre, 2, bit) — axis 1 is slot-index bit s
+        b4 = buf.reshape((pre, 2, bit) + buf.shape[1:])
+        # send the half whose bit differs from mine; receive partner's
+        send = lax.dynamic_index_in_dim(b4, 1 - mybit, 1, keepdims=False)
+        perm = [(r, r ^ bit) for r in range(p)]
+        recv = lax.ppermute(send, axis_name, perm)
+        # partner's sent half slots had bit s == my bit on their side; placing
+        # them at my (1 - mybit) half performs the src/dst bit swap in place
+        b4 = lax.dynamic_update_index_in_dim(b4, recv, 1 - mybit, 1)
+        buf = b4.reshape(buf.shape)
+    return buf
+
+
+EXCHANGES: dict[str, Callable[[jax.Array, str], jax.Array]] = {
+    "all_to_all": exchange_all_to_all,
+    "pairwise": exchange_pairwise,
+    "crystal_router": exchange_crystal_router,
+}
+
+
+def get_exchange(name: str) -> Callable[[jax.Array, str], jax.Array]:
+    if name not in EXCHANGES:
+        raise KeyError(f"unknown exchange '{name}', have {sorted(EXCHANGES)}")
+    return EXCHANGES[name]

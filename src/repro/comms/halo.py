@@ -1,0 +1,113 @@
+"""Structured 3-D halo communication for the distributed Poisson operator.
+
+Each rank owns a padded DOF box of shape (mx, my, mz); interface points are
+replicated on every sharing rank. Two primitives, both built from static
+``lax.ppermute`` face shifts (2 per partitioned dimension):
+
+  * ``sum_exchange``  — assemble partial sums at interface points AND leave
+    every replica holding the summed value (the gather Z^T fused with the
+    scatter-side refresh; see DESIGN.md: the padded-consistent storage
+    merges hipBone's two communication phases into one).
+  * ``copy_exchange`` — refresh replicas from the canonical owner only
+    (used by the paper-faithful two-phase mode and by tests).
+
+Sequential dimension sweeps propagate edge/corner contributions without
+explicit 26-neighbor messages — the structured-grid trick NekBone's
+gslib setup discovers generically.
+
+All functions run inside shard_map over ``axis_name`` whose size equals
+``grid.size``. Boxes are passed as 3-D arrays indexed [z, y, x]
+(x fastest in the flat layout).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .topology import ProcessGrid
+
+__all__ = ["sum_exchange", "copy_exchange", "rank_coords"]
+
+
+def rank_coords(grid: ProcessGrid, axis_name: str) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Traced (i, j, k) coordinates of this rank in the process grid."""
+    r = lax.axis_index(axis_name)
+    px, py, _ = grid.shape
+    return r % px, (r // px) % py, r // (px * py)
+
+
+# Boxes are stored flat with x fastest (flat = x + mx*(y + my*z)), so the
+# reshaped 3-D array is indexed [z, y, x]: spatial dim d lives on array
+# axis (2 - d).
+
+
+def _axis(dim: int) -> int:
+    return 2 - dim
+
+
+def _face(box: jax.Array, dim: int, idx: int) -> jax.Array:
+    sl = [slice(None)] * 3
+    sl[_axis(dim)] = slice(idx, idx + 1)
+    return box[tuple(sl)]
+
+
+def _set_face(box: jax.Array, dim: int, idx: int, val: jax.Array) -> jax.Array:
+    sl = [slice(None)] * 3
+    sl[_axis(dim)] = slice(idx, idx + 1)
+    return box.at[tuple(sl)].set(val)
+
+
+def _add_face(box: jax.Array, dim: int, idx: int, val: jax.Array) -> jax.Array:
+    sl = [slice(None)] * 3
+    sl[_axis(dim)] = slice(idx, idx + 1)
+    return box.at[tuple(sl)].add(val)
+
+
+def sum_exchange(box: jax.Array, grid: ProcessGrid, axis_name: str) -> jax.Array:
+    """Assemble interface partial sums; all replicas end up consistent.
+
+    Per partitioned dim: (1) low faces shift down and accumulate into the
+    -neighbor's high face (which is the canonical interface slab); (2) the
+    summed high face shifts back up into the +neighbor's low face.
+    Boundary ranks receive ppermute zero-fill and are masked.
+    """
+    coords = rank_coords(grid, axis_name)
+    for dim in range(3):
+        pd = grid.shape[dim]
+        if pd == 1:
+            continue
+        m = box.shape[_axis(dim)]
+        c = coords[dim]
+        # (1) low face -> -neighbor high face (sum)
+        low = _face(box, dim, 0)
+        recv = lax.ppermute(low, axis_name, grid.shift_perm(dim, -1))
+        box = _add_face(box, dim, m - 1, recv)
+        # (2) summed high face -> +neighbor low face (copy)
+        hi = _face(box, dim, m - 1)
+        recv = lax.ppermute(hi, axis_name, grid.shift_perm(dim, +1))
+        keep = _face(box, dim, 0)
+        new_low = jnp.where(c > 0, recv, keep)
+        box = _set_face(box, dim, 0, new_low)
+    return box
+
+
+def copy_exchange(box: jax.Array, grid: ProcessGrid, axis_name: str) -> jax.Array:
+    """Refresh replica slabs from owners (owner = low-side rank).
+
+    The canonical copy of an interface point lives on the rank where it sits
+    on the HIGH face of the padded box; the +neighbor's low-face replica is
+    overwritten. This is hipBone's scatter-side halo exchange in isolation.
+    """
+    coords = rank_coords(grid, axis_name)
+    for dim in range(3):
+        pd = grid.shape[dim]
+        if pd == 1:
+            continue
+        m = box.shape[_axis(dim)]
+        c = coords[dim]
+        hi = _face(box, dim, m - 1)
+        recv = lax.ppermute(hi, axis_name, grid.shift_perm(dim, +1))
+        keep = _face(box, dim, 0)
+        box = _set_face(box, dim, 0, jnp.where(c > 0, recv, keep))
+    return box

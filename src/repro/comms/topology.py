@@ -1,0 +1,87 @@
+"""Process-grid topology for nearest-neighbor communication.
+
+Maps a flat list of P ranks (the flattened device mesh) onto a 3-D process
+grid for the Poisson element partition, and provides the static
+src->dst permutation tables that lax.ppermute consumes. This replaces the
+rank bookkeeping that gslib/MPI communicators do in hipBone.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+__all__ = ["ProcessGrid", "factor3", "hypercube_stages"]
+
+
+def factor3(p: int) -> tuple[int, int, int]:
+    """Factor P into a near-cubic (px, py, pz) grid (px >= py >= pz)."""
+    best = (p, 1, 1)
+    best_cost = float("inf")
+    for a in range(1, int(round(p ** (1 / 3))) + 2):
+        if p % a:
+            continue
+        q = p // a
+        for b in range(a, int(math.isqrt(q)) + 1):
+            if q % b:
+                continue
+            c = q // b
+            dims = tuple(sorted((a, b, c), reverse=True))
+            cost = dims[0] / dims[2]  # aspect ratio
+            if cost < best_cost:
+                best, best_cost = dims, cost
+    return best  # type: ignore[return-value]
+
+
+@dataclasses.dataclass(frozen=True)
+class ProcessGrid:
+    """A (px, py, pz) grid over P ranks, x fastest (rank = i + px*(j + py*k))."""
+
+    shape: tuple[int, int, int]
+
+    @property
+    def size(self) -> int:
+        px, py, pz = self.shape
+        return px * py * pz
+
+    def strides(self) -> tuple[int, int, int]:
+        px, py, _ = self.shape
+        return (1, px, px * py)
+
+    def coords(self, rank: int) -> tuple[int, int, int]:
+        px, py, _ = self.shape
+        return (rank % px, (rank // px) % py, rank // (px * py))
+
+    def rank(self, i: int, j: int, k: int) -> int:
+        px, py, _ = self.shape
+        return i + px * (j + py * k)
+
+    def shift_perm(self, dim: int, direction: int) -> list[tuple[int, int]]:
+        """ppermute pairs sending along ``dim`` by ``direction`` (+1/-1).
+
+        Ranks on the boundary simply don't send (and receive zeros) —
+        lax.ppermute's fill semantics implement the non-periodic mesh edge.
+        """
+        pairs = []
+        pd = self.shape[dim]
+        stride = self.strides()[dim]
+        for r in range(self.size):
+            c = self.coords(r)[dim]
+            if 0 <= c + direction < pd:
+                pairs.append((r, r + direction * stride))
+        return pairs
+
+    def neighbor_count(self, rank: int) -> int:
+        """Number of face neighbors (the paper's pairwise message count /2... per direction)."""
+        n = 0
+        for dim in range(3):
+            c = self.coords(rank)[dim]
+            n += (c > 0) + (c < self.shape[dim] - 1)
+        return n
+
+
+def hypercube_stages(p: int) -> int:
+    """log2(P) for the crystal router; P must be a power of two."""
+    k = p.bit_length() - 1
+    if (1 << k) != p:
+        raise ValueError(f"crystal router needs power-of-two ranks, got {p}")
+    return k

@@ -1,0 +1,57 @@
+"""Architecture registry: ``--arch <id>`` resolves here.
+
+Ten assigned LM architectures (full + reduced smoke variants) plus the
+paper's own hipBone Poisson configs.
+"""
+from repro.models.config import ModelConfig
+
+from . import (
+    chameleon_34b,
+    command_r_35b,
+    deepseek_v3_671b,
+    gemma3_1b,
+    gemma_2b,
+    hipbone,
+    jamba_v01_52b,
+    mamba2_780m,
+    mixtral_8x7b,
+    musicgen_medium,
+    yi_9b,
+)
+
+_MODULES = {
+    "chameleon-34b": chameleon_34b,
+    "mamba2-780m": mamba2_780m,
+    "command-r-35b": command_r_35b,
+    "gemma3-1b": gemma3_1b,
+    "gemma-2b": gemma_2b,
+    "yi-9b": yi_9b,
+    "mixtral-8x7b": mixtral_8x7b,
+    "deepseek-v3-671b": deepseek_v3_671b,
+    "jamba-v0.1-52b": jamba_v01_52b,
+    "musicgen-medium": musicgen_medium,
+}
+
+ARCHS: dict[str, ModelConfig] = {k: m.CONFIG for k, m in _MODULES.items()}
+REDUCED: dict[str, ModelConfig] = {k: m.REDUCED for k, m in _MODULES.items()}
+POISSON = hipbone.CONFIGS
+
+# assignment shape table: (seq_len, global_batch, step kind)
+SHAPES = {
+    "train_4k": dict(seq_len=4096, global_batch=256, step="train"),
+    "prefill_32k": dict(seq_len=32768, global_batch=32, step="prefill"),
+    "decode_32k": dict(seq_len=32768, global_batch=128, step="decode"),
+    "long_500k": dict(seq_len=524288, global_batch=1, step="decode"),
+}
+
+
+def get_config(arch: str, reduced: bool = False) -> ModelConfig:
+    table = REDUCED if reduced else ARCHS
+    if arch not in table:
+        raise KeyError(f"unknown arch '{arch}'; have {sorted(table)}")
+    return table[arch]
+
+
+def long_context_eligible(cfg: ModelConfig) -> bool:
+    """long_500k runs only for sub-quadratic archs (DESIGN.md skip list)."""
+    return cfg.sub_quadratic

@@ -1,0 +1,38 @@
+"""chameleon-34b [vlm] — early-fusion, VQ image tokens (arXiv:2405.09818).
+
+48L d_model=8192 64H (GQA kv=8) d_ff=22016 vocab=65536. The modality
+frontend is a STUB per the assignment: the vocabulary already contains the
+VQ image codes, so ``input_specs`` provides the precomputed token stream
+(text + image codes interleaved); the VQ-VAE encoder is out of scope.
+Chameleon stabilizes early fusion with QK-norm — kept.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="chameleon-34b",
+    family="vlm",
+    n_layers=48,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=22016,
+    vocab_size=65536,
+    qk_norm=True,
+    rope_theta=10000.0,
+    act="silu",
+)
+
+REDUCED = ModelConfig(
+    name="chameleon-34b-reduced",
+    family="vlm",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=256,
+    qk_norm=True,
+    dtype="float32",
+)

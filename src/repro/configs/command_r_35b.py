@@ -1,0 +1,39 @@
+"""command-r-35b [dense] — Cohere c4ai-command-r-v01.
+
+40L d_model=8192 64H (GQA kv=8) d_ff=22528 vocab=256000. No-bias,
+parallel attention+FFN residual, LayerNorm, rope theta 8M, tied embeddings.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="command-r-35b",
+    family="dense",
+    n_layers=40,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=22528,
+    vocab_size=256000,
+    parallel_residual=True,
+    norm_type="layernorm",
+    rope_theta=8_000_000.0,
+    tie_embeddings=True,
+    norm_eps=1e-5,
+)
+
+REDUCED = ModelConfig(
+    name="command-r-35b-reduced",
+    family="dense",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=256,
+    parallel_residual=True,
+    norm_type="layernorm",
+    tie_embeddings=True,
+    dtype="float32",
+)

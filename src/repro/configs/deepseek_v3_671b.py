@@ -1,0 +1,69 @@
+"""deepseek-v3-671b [moe] — arXiv:2412.19437.
+
+61L d_model=7168 128H, MLA (q_lora 1536 / kv_lora 512 / rope 64 / nope 128
+/ v 128), MoE: 1 shared + 256 routed experts (d_ff 2048 each), top-8 with
+sigmoid scoring, normalization, and routed scaling 2.5; depth-1 MTP.
+
+Per the assignment spec all 61 layers are MoE (the release's 3 dense lead
+layers are not part of the assigned config). Node-limited routing is
+omitted (single-pass top-k); noted in DESIGN.md.
+
+Memory posture (the 671B-on-16GB-chips problem): bf16 params + FSDP over
+(pod, data) + EP over model + factored Adafactor second moment + full
+remat + 4-way microbatching — see EXPERIMENTS.md §Dry-run.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v3-671b",
+    family="moe",
+    n_layers=61,
+    d_model=7168,
+    n_heads=128,
+    n_kv_heads=128,
+    head_dim=128,
+    d_ff=2048,
+    vocab_size=129280,
+    attn_kind="mla",
+    q_lora_rank=1536,
+    kv_lora_rank=512,
+    qk_rope_head_dim=64,
+    qk_nope_head_dim=128,
+    v_head_dim=128,
+    n_experts=256,
+    n_shared_experts=1,
+    experts_per_token=8,
+    moe_every=1,
+    router_score="sigmoid",
+    routed_scaling=2.5,
+    capacity_factor=1.25,
+    aux_loss_weight=0.0001,
+    mtp_depth=1,
+    mtp_loss_weight=0.3,
+)
+
+REDUCED = ModelConfig(
+    name="deepseek-v3-671b-reduced",
+    family="moe",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    head_dim=16,
+    d_ff=64,
+    vocab_size=256,
+    attn_kind="mla",
+    q_lora_rank=32,
+    kv_lora_rank=32,
+    qk_rope_head_dim=8,
+    qk_nope_head_dim=16,
+    v_head_dim=16,
+    n_experts=8,
+    n_shared_experts=1,
+    experts_per_token=2,
+    moe_every=1,
+    router_score="sigmoid",
+    routed_scaling=2.5,
+    mtp_depth=1,
+    dtype="float32",
+)

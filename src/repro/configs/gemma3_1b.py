@@ -1,0 +1,49 @@
+"""gemma3-1b [dense] — google/gemma-3-1b-pt.
+
+26L d_model=1152 4H (GQA kv=1) d_ff=6912 vocab=262144. 5:1 local:global
+attention (window 512 on local layers), QK-norm, head_dim=256, GeGLU,
+tied embeddings, Gemma (1+w) RMSNorm, 128k context (rope theta 1M on the
+global layers; we use the global theta throughout — noted in DESIGN.md).
+26 = 4 full periods of 6 + 2 remainder local layers.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma3-1b",
+    family="dense",
+    n_layers=26,
+    d_model=1152,
+    n_heads=4,
+    n_kv_heads=1,
+    head_dim=256,
+    d_ff=6912,
+    vocab_size=262144,
+    sliding_window=512,
+    global_every=6,
+    qk_norm=True,
+    act="gelu",
+    gemma_norm=True,
+    emb_scale=True,
+    tie_embeddings=True,
+    rope_theta=1_000_000.0,
+)
+
+REDUCED = ModelConfig(
+    name="gemma3-1b-reduced",
+    family="dense",
+    n_layers=8,                # 1 period of 6 + 2 remainder, same pattern
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=1,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=256,
+    sliding_window=8,
+    global_every=6,
+    qk_norm=True,
+    act="gelu",
+    gemma_norm=True,
+    emb_scale=True,
+    tie_embeddings=True,
+    dtype="float32",
+)

@@ -1,0 +1,39 @@
+"""gemma-2b [dense] — arXiv:2403.08295.
+
+18L d_model=2048 8H (MQA kv=1) d_ff=16384 vocab=256000. GeGLU,
+head_dim=256, tied embeddings, sqrt(d) embedding scale, (1+w) RMSNorm.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma-2b",
+    family="dense",
+    n_layers=18,
+    d_model=2048,
+    n_heads=8,
+    n_kv_heads=1,
+    head_dim=256,
+    d_ff=16384,
+    vocab_size=256000,
+    act="gelu",
+    gemma_norm=True,
+    emb_scale=True,
+    tie_embeddings=True,
+)
+
+REDUCED = ModelConfig(
+    name="gemma-2b-reduced",
+    family="dense",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=1,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=256,
+    act="gelu",
+    gemma_norm=True,
+    emb_scale=True,
+    tie_embeddings=True,
+    dtype="float32",
+)

@@ -1,0 +1,35 @@
+"""hipBone — the paper's own benchmark as a selectable 'architecture'.
+
+Shapes follow the paper's scaling studies: degree N=7 (3-D-threadblock
+regime) and N=15 (2-D regime / peak-FOM degree), with per-rank element
+boxes sized so the per-rank DOF counts bracket the paper's sweep. These
+cells are EXTRA, beyond the 40 assigned LM cells.
+"""
+import dataclasses
+
+__all__ = ["PoissonConfig", "CONFIGS"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PoissonConfig:
+    name: str
+    n_degree: int
+    local_elems: tuple[int, int, int]   # elements per rank
+    lam: float = 1.0
+    n_iter: int = 100                   # NekBone's fixed CG iteration count
+    dtype: str = "float32"
+
+    def dofs_per_rank(self) -> int:
+        n = self.n_degree
+        bx, by, bz = self.local_elems
+        return bx * by * bz * n**3
+
+
+CONFIGS = {
+    "hipbone_n7": PoissonConfig("hipbone_n7", 7, (8, 8, 8)),      # ~176k DOF/rank
+    "hipbone_n7_large": PoissonConfig("hipbone_n7_large", 7, (16, 16, 16)),
+    "hipbone_n15": PoissonConfig("hipbone_n15", 15, (4, 4, 4)),   # ~216k DOF/rank
+    "hipbone_n15_large": PoissonConfig("hipbone_n15_large", 15, (8, 8, 8)),
+}
+
+REDUCED = PoissonConfig("hipbone_reduced", 3, (2, 2, 2))

@@ -1,0 +1,59 @@
+"""jamba-v0.1-52b [hybrid] — arXiv:2403.19887.
+
+32L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=65536. Mamba+attention
+1:7 interleave (attention at offset 4 of each 8-layer block), MoE 16
+experts top-2 on every other layer (offset 1). SSM state 16.
+
+Adaptation note (DESIGN.md): Jamba v0.1 uses Mamba-1 mixers; we use our
+Mamba-2 SSD mixer with the same d_state=16 and d_inner=8192 (head_dim 64
+-> 128 SSD heads) — the SSD formulation is the TPU-friendly chunked form.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="jamba-v0.1-52b",
+    family="hybrid",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=65536,
+    attn_every=8,
+    attn_offset=4,
+    ssm_state=16,
+    ssm_heads=128,         # d_inner 8192 / head_dim 64
+    ssm_expand=2,
+    ssm_groups=1,
+    conv_width=4,
+    ssm_chunk=128,
+    n_experts=16,
+    experts_per_token=2,
+    moe_every=2,
+    moe_offset=1,
+    router_score="softmax",
+)
+
+REDUCED = ModelConfig(
+    name="jamba-v0.1-52b-reduced",
+    family="hybrid",
+    n_layers=8,            # one full period: same 1:7 + MoE-every-other pattern
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=16,
+    d_ff=96,
+    vocab_size=256,
+    attn_every=8,
+    attn_offset=4,
+    ssm_state=16,
+    ssm_heads=4,
+    ssm_expand=2,
+    ssm_chunk=8,
+    n_experts=4,
+    experts_per_token=2,
+    moe_every=2,
+    moe_offset=1,
+    dtype="float32",
+)

@@ -1,0 +1,46 @@
+"""mamba2-780m [ssm] — SSD state-space duality (arXiv:2405.21060).
+
+48L d_model=1536, attention-free, vocab=50280, ssm_state=128.
+d_inner = 2*1536 = 3072, head_dim 64 -> 48 SSD heads, depthwise conv 4.
+No FFN sublayers (the Mamba mixer is the whole block).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-780m",
+    family="ssm",
+    n_layers=48,
+    d_model=1536,
+    n_heads=0,
+    n_kv_heads=0,
+    head_dim=0,
+    d_ff=0,
+    vocab_size=50280,
+    attn_kind="none",
+    ssm_state=128,
+    ssm_heads=48,          # d_inner 3072 / head_dim 64
+    ssm_expand=2,
+    ssm_groups=1,
+    conv_width=4,
+    ssm_chunk=128,
+    tie_embeddings=True,
+)
+
+REDUCED = ModelConfig(
+    name="mamba2-780m-reduced",
+    family="ssm",
+    n_layers=3,
+    d_model=64,
+    n_heads=0,
+    n_kv_heads=0,
+    head_dim=0,
+    d_ff=0,
+    vocab_size=256,
+    attn_kind="none",
+    ssm_state=16,
+    ssm_heads=4,           # d_inner 128 / head_dim 32
+    ssm_expand=2,
+    ssm_chunk=8,
+    tie_embeddings=True,
+    dtype="float32",
+)

@@ -1,0 +1,44 @@
+"""mixtral-8x7b [moe] — arXiv:2401.04088.
+
+32L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=32000, 8 experts top-2,
+sliding-window attention (4096). Softmax-after-top-k router.
+
+On a 16-way model axis the 8 experts are not EP-divisible, so the MoE runs
+in ff-sharded TP mode (see models/blocks.py) — no dispatch exchange.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mixtral-8x7b",
+    family="moe",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=32000,
+    sliding_window=4096,
+    n_experts=8,
+    experts_per_token=2,
+    moe_every=1,
+    router_score="softmax",
+    norm_eps=1e-5,
+)
+
+REDUCED = ModelConfig(
+    name="mixtral-8x7b-reduced",
+    family="moe",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=16,
+    d_ff=96,
+    vocab_size=256,
+    sliding_window=8,
+    n_experts=4,
+    experts_per_token=2,
+    moe_every=1,
+    dtype="float32",
+)

@@ -1,0 +1,42 @@
+"""musicgen-medium [audio] — arXiv:2306.05284. Decoder over EnCodec tokens.
+
+48L d_model=1536 24H (MHA kv=24) d_ff=6144 vocab=2048.
+
+Frontend STUB per assignment: the EnCodec residual-VQ codebooks and the
+delay-pattern interleaver are out of scope; ``input_specs`` provides the
+flattened precomputed token stream (vocab 2048 = one codebook level).
+Text-conditioning cross-attention omitted (backbone only). LayerNorm as in
+the fairseq-style original; our gated GeGLU FFN replaces its plain GELU
+MLP (parameter-count delta noted in DESIGN.md).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-medium",
+    family="audio",
+    n_layers=48,
+    d_model=1536,
+    n_heads=24,
+    n_kv_heads=24,
+    head_dim=64,
+    d_ff=6144,
+    vocab_size=2048,
+    norm_type="layernorm",
+    act="gelu",
+    norm_eps=1e-5,
+)
+
+REDUCED = ModelConfig(
+    name="musicgen-medium-reduced",
+    family="audio",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=256,
+    norm_type="layernorm",
+    act="gelu",
+    dtype="float32",
+)

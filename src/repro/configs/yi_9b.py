@@ -1,0 +1,31 @@
+"""yi-9b [dense] — arXiv:2403.04652. Llama-architecture GQA.
+
+48L d_model=4096 32H (GQA kv=4) d_ff=11008 vocab=64000. SwiGLU, RMSNorm.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="yi-9b",
+    family="dense",
+    n_layers=48,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=4,
+    head_dim=128,
+    d_ff=11008,
+    vocab_size=64000,
+    norm_eps=1e-5,
+)
+
+REDUCED = ModelConfig(
+    name="yi-9b-reduced",
+    family="dense",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=256,
+    dtype="float32",
+)

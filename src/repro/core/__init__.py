@@ -1,0 +1,37 @@
+"""repro.core — the paper's contribution: hipBone in JAX.
+
+Screened-Poisson SEM operator (assembled + scattered storage), CG solver
+with hipBone's fusion/overlap schedule, gather-scatter machinery, and the
+paper's FOM/roofline models.
+"""
+from .cg import CGResult, cg_assembled, cg_scattered, fused_residual_update
+from .fom import (
+    TPU_V5E,
+    TpuSpec,
+    cg_iter_bytes,
+    fom_gflops,
+    hipbone_flops_per_iter,
+    nekbone_flops_per_iter,
+    operator_bytes,
+    operator_flops,
+    roofline_gflops,
+)
+from .gather_scatter import (
+    gather,
+    gather_scatter,
+    inverse_degree,
+    local_inverse_degree,
+    scatter,
+)
+from .geometry import geometric_factors
+from .mesh import BoxMesh, build_box_mesh, partition_elements
+from .operator import (
+    PoissonProblem,
+    build_problem,
+    local_poisson,
+    poisson_assembled,
+    poisson_scattered,
+)
+from .sem import derivative_matrix, gll_nodes_weights, reference_element
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,126 @@
+"""Figure-of-merit, FLOP counts, data-motion and roofline models (Eqs. 3-6).
+
+All formulas are per the paper, parameterized by element count E, degree N,
+and the runtime word size (the paper is FP64; TPUs run FP32/BF16 — the
+byte counts scale with ``word`` and the index size stays 4 bytes).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = [
+    "nekbone_flops_per_iter",
+    "hipbone_flops_per_iter",
+    "operator_flops",
+    "operator_bytes",
+    "cg_iter_bytes",
+    "roofline_gflops",
+    "fom_gflops",
+    "TpuSpec",
+    "TPU_V5E",
+]
+
+
+def _np1(n: int) -> int:
+    return n + 1
+
+
+def nekbone_flops_per_iter(e: int, n: int) -> float:
+    """Eq. (3): NekBone's historical FLOP count per CG iteration (the FOM)."""
+    return 12.0 * e * _np1(n) ** 4 + 34.0 * e * _np1(n) ** 3
+
+
+def hipbone_flops_per_iter(e: int, n: int) -> float:
+    """Eq. (5): hipBone's true FLOP count per CG iteration."""
+    return 12.0 * e * _np1(n) ** 4 + 19.0 * e * _np1(n) ** 3 + 10.0 * e * n**3
+
+
+def operator_flops(e: int, n: int) -> float:
+    """Fused (S_L + λW)Z kernel FLOPs: 12E(N+1)^4 + 18E(N+1)^3."""
+    return 12.0 * e * _np1(n) ** 4 + 18.0 * e * _np1(n) ** 3
+
+
+def operator_bytes(e: int, n: int, *, word: int = 8, index: int = 4) -> float:
+    """Fused operator data motion, perfect caching: 8 N_G + 68 N_L  (FP64).
+
+    Generalized: word*N_G + (index + 7*word + word)*N_L
+      = x_G read + [Z index + 6 G factors + W + y_L write] per local node.
+    """
+    n_l = e * _np1(n) ** 3
+    n_g = e * n**3
+    return word * n_g + (index + 8 * word) * n_l
+
+
+def cg_iter_bytes(e: int, n: int, *, word: int = 8, index: int = 4) -> float:
+    """Per-CG-iteration data motion, assembled form: 108 N_G + 80 N_L (FP64).
+
+    operator (8 N_G + 68 N_L) + gather (index-CSR 12 N_L + 12 N_G read/write)
+    + 11 vector reads/writes (88 N_G). Generalized to ``word`` bytes/value:
+    the 4-byte index streams stay fixed.
+    """
+    n_l = e * _np1(n) ** 3
+    n_g = e * n**3
+    op = word * n_g + (index + 8 * word) * n_l
+    # gather: read y_L (word*N_L) + CSR cols (index*N_L) + CSR rows (index*N_G)
+    # + write b_G (word*N_G)
+    gather = (word + index) * n_l + (word + index) * n_g
+    vectors = 11 * word * n_g
+    return op + gather + vectors
+
+
+def nekbone_iter_bytes(e: int, n: int, *, word: int = 8, index: int = 4) -> float:
+    """Per-iteration data motion for the scattered NekBone baseline.
+
+    Everything streams N_L-length vectors; the two inner products also read
+    the weight vector; gather-scatter touches y_L twice plus indices.
+    Operator: word*(2 N_L) + 7*word N_L + index N_L   (x_L read, 6G+W, y write)
+    Gather-scatter ZZ^T: read+write N_L + indices.
+    Vector ops: 11 N_L streams + 2 weight reads.
+    """
+    n_l = e * _np1(n) ** 3
+    n_g = e * n**3
+    op = (2 + 7) * word * n_l
+    gs_bytes = (2 * word + index) * n_l + (word + index) * n_g
+    vectors = 11 * word * n_l + 2 * word * n_l  # + weight reads in both dots
+    return op + gs_bytes + vectors
+
+
+def roofline_gflops(
+    n: int, *, peak_gflops: float, bandwidth_gbs: float, word: int = 8
+) -> float:
+    """Eq. (4): modelled operator rate min(C, AI * B) in GFLOPS.
+
+    AI uses per-element counts: (12(N+1)^4 + 18(N+1)^3) FLOPs over
+    (word N^3 + (index + 8 word)(N+1)^3) bytes.
+    """
+    flops = 12.0 * _np1(n) ** 4 + 18.0 * _np1(n) ** 3
+    bts = word * n**3 + (4 + 8 * word) * _np1(n) ** 3
+    return min(peak_gflops, flops / bts * bandwidth_gbs)
+
+
+def fom_gflops(e: int, n: int, n_iter: int, seconds: float) -> float:
+    """The benchmark FOM: NekBone FLOP count (Eq. 3) over wall time."""
+    return nekbone_flops_per_iter(e, n) * n_iter / seconds / 1e9
+
+
+@dataclasses.dataclass(frozen=True)
+class TpuSpec:
+    """Roofline hardware constants (per chip)."""
+
+    name: str
+    peak_flops: float          # FLOP/s at the benchmark dtype
+    hbm_bandwidth: float       # bytes/s
+    ici_bandwidth: float       # bytes/s per link
+    hbm_bytes: float           # capacity
+    vmem_bytes: float = 16 * 2**20
+
+
+# Constants given by the assignment: 197 TFLOP/s bf16, 819 GB/s HBM,
+# ~50 GB/s/link ICI. (f32 peak is half of bf16 on the MXU.)
+TPU_V5E = TpuSpec(
+    name="tpu-v5e-like",
+    peak_flops=197e12,
+    hbm_bandwidth=819e9,
+    ici_bandwidth=50e9,
+    hbm_bytes=16 * 2**30,
+)

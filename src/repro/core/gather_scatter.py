@@ -1,0 +1,66 @@
+"""Gather/scatter operators Z, Z^T, ZZ^T and the inverse-degree weight W.
+
+Terminology follows the paper:
+  Z      ('scatter'):  x_L = Z x_G      — copy each global DOF to every
+                                          element-local node that shares it.
+  Z^T    ('gather'):   b_G = Z^T y_L    — sum element-local contributions
+                                          into the assembled DOF vector.
+  ZZ^T   ('gather-scatter'): the NekBone combined operation on scattered
+                             vectors (sum shared values, write the sum back
+                             to every copy).
+  W:     diagonal inverse-degree weights with Z^T W Z = I; used (a) fused
+         into the hipBone operator kernel as the screen term λW, and (b) as
+         the weighting for inner products on scattered vectors in the
+         NekBone baseline.
+
+On TPU, Z is an XLA dynamic-gather (``take``) and Z^T a ``segment_sum``
+scatter-add — see DESIGN.md §3 for why the indirect load lives at the XLA
+level rather than inside the Pallas kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "scatter",
+    "gather",
+    "gather_scatter",
+    "inverse_degree",
+    "local_inverse_degree",
+]
+
+
+def scatter(x_g: jax.Array, l2g: jax.Array) -> jax.Array:
+    """x_L = Z x_G. Shapes: x_G (N_G,), l2g (E, p) -> (E, p)."""
+    return jnp.take(x_g, l2g, axis=0)
+
+
+def gather(y_l: jax.Array, l2g: jax.Array, n_global: int) -> jax.Array:
+    """b_G = Z^T y_L. Shapes: y_L (E, p), l2g (E, p) -> (N_G,)."""
+    return jax.ops.segment_sum(
+        y_l.reshape(-1), l2g.reshape(-1), num_segments=n_global
+    )
+
+
+def gather_scatter(y_l: jax.Array, l2g: jax.Array, n_global: int) -> jax.Array:
+    """ZZ^T y_L — NekBone's combined gather-scatter on scattered vectors."""
+    return scatter(gather(y_l, l2g, n_global), l2g)
+
+
+def inverse_degree(l2g: np.ndarray, n_global: int) -> np.ndarray:
+    """Global inverse-degree vector diag(Z^T Z)^{-1} as numpy float64."""
+    counts = np.zeros((n_global,), dtype=np.float64)
+    np.add.at(counts, l2g.reshape(-1), 1.0)
+    return 1.0 / counts
+
+
+def local_inverse_degree(l2g: np.ndarray, n_global: int) -> np.ndarray:
+    """W in scattered layout: (E, p) inverse multiplicity of each local node.
+
+    Satisfies Z^T W Z = I; this is the weight hipBone fuses into the operator
+    kernel (λW term) and NekBone uses for weighted inner products.
+    """
+    inv = inverse_degree(l2g, n_global)
+    return inv[l2g]

@@ -1,0 +1,81 @@
+"""Geometric factors G^e for the SEM Laplacian.
+
+For each element, the metric tensor combined with GLL quadrature weights:
+
+    G_ab = J * w_ijk * sum_c (dr_a/dx_c)(dr_b/dx_c),   a, b in {r, s, t}
+
+packed as six independent entries (G is symmetric). hipBone stores all six
+factors (plus the inverse-degree weight W) per node — 7 float64 = 56 bytes
+per local node (paper, "Poisson Operator" section). We keep the same seven
+streams; the layout is factor-major (E, 6, p) rather than the paper's
+node-major packing, because TPU vector units want a contiguous lane
+dimension per factor (see DESIGN.md §3).
+
+The Jacobian is computed discretely by applying the SEM derivative matrix to
+the node coordinates, which is exact for the (tri-)polynomial coordinate
+maps produced by ``mesh.build_box_mesh``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from . import sem
+from .mesh import BoxMesh
+
+__all__ = ["geometric_factors"]
+
+
+def _apply_d(d: np.ndarray, u: np.ndarray, axis: int) -> np.ndarray:
+    """Apply the 1-D derivative matrix along one tensor axis of (E,n,n,n,...)."""
+    return np.apply_along_axis(lambda v: d @ v, axis, u)
+
+
+def geometric_factors(mesh: BoxMesh) -> dict[str, np.ndarray]:
+    """Compute geometric factors and quadrature data for a mesh.
+
+    Returns dict with:
+      G:    (E, 6, p) float64 — packed [G_rr, G_rs, G_rt, G_ss, G_st, G_tt]
+      J:    (E, p) float64 — Jacobian determinant at each node
+      JW:   (E, p) float64 — J * quadrature weight (the SEM mass diagonal)
+    """
+    n = mesh.n_degree
+    npts = n + 1
+    e_total = mesh.n_elements
+    d = sem.derivative_matrix(n)
+    _, w1 = sem.gll_nodes_weights(n)
+    w3 = (w1[:, None, None] * w1[None, :, None] * w1[None, None, :]).reshape(-1)
+
+    # coords: (E, p, 3) with local ordering (c=t slow, b=s mid, a=r fast)
+    xyz = mesh.coords.reshape(e_total, npts, npts, npts, 3)  # (E, t, s, r, 3)
+
+    # dX/dr etc: derivative along each reference axis
+    dxdr = np.einsum("ia,etsac->etsic", d, xyz)   # d/dr  (axis r = 3rd)
+    dxds = np.einsum("jb,etbrc->etjrc", d, xyz)   # d/ds
+    dxdt = np.einsum("kc,ecsrx->eksrx", d, xyz)   # d/dt
+
+    # Jacobian matrix dX/dR: (E, t, s, r, 3[x], 3[r])
+    jac = np.stack([dxdr, dxds, dxdt], axis=-1)
+    det = np.linalg.det(jac)
+    if np.any(det <= 0):
+        raise ValueError("mesh has non-positive Jacobian (too much deformation?)")
+    inv = np.linalg.inv(jac)  # rows: dR/dX -> inv[..., a, c] = dr_a/dx_c
+
+    p = npts**3
+    det_f = det.reshape(e_total, p)
+    inv_f = inv.reshape(e_total, p, 3, 3)
+    jw = det_f * w3[None, :]
+
+    gmat = np.einsum("epac,epbc->epab", inv_f, inv_f)  # (E, p, 3, 3)
+    gmat = gmat * jw[..., None, None]
+    g = np.stack(
+        [
+            gmat[..., 0, 0],
+            gmat[..., 0, 1],
+            gmat[..., 0, 2],
+            gmat[..., 1, 1],
+            gmat[..., 1, 2],
+            gmat[..., 2, 2],
+        ],
+        axis=1,
+    )  # (E, 6, p)
+    return {"G": g, "J": det_f, "JW": jw}

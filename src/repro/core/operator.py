@@ -1,0 +1,176 @@
+"""The screened Poisson operator A = S + λI in both storage modes.
+
+hipBone (assembled) mode — paper's central contribution:
+    y_L = (S_L + λW) Z x_G        (single fused kernel)
+    A x_G = Z^T y_L               (gather; all MPI lives here + halo)
+
+NekBone (scattered) baseline mode:
+    b_L = (Z Z^T S_L + λ I) x_L   (combined gather-scatter after local op)
+
+The element-local stiffness is the tensor-product SEM Laplacian
+    S_L^e = D^T G^e D
+with D the 3-D gradient stack of the 1-D derivative matrix. This module is
+the pure-jnp reference implementation; ``repro.kernels`` provides the
+Pallas TPU kernel with identical semantics (validated against this).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import geometry, sem
+from .gather_scatter import gather, gather_scatter, inverse_degree, scatter
+from .mesh import BoxMesh, build_box_mesh
+
+__all__ = [
+    "local_poisson",
+    "PoissonProblem",
+    "build_problem",
+    "poisson_assembled",
+    "poisson_scattered",
+]
+
+
+def local_poisson(
+    u: jax.Array,
+    g: jax.Array,
+    d: jax.Array,
+    lam: jax.Array | float,
+    w: jax.Array | None,
+    jw: jax.Array | None = None,
+) -> jax.Array:
+    """Element-local screened Poisson action  (S_L + λ M) u  (pure jnp).
+
+    Args:
+      u:  (E, p) element-local field, p = (N+1)^3, node order (t, s, r).
+      g:  (E, 6, p) packed geometric factors [rr, rs, rt, ss, st, tt].
+      d:  (N+1, N+1) 1-D derivative matrix.
+      lam: screen parameter λ.
+      w:  (E, p) inverse-degree weights for the hipBone fused form
+          (λW screen on assembled DOFs), or None for plain λI (NekBone
+          scattered form applies λ to x_L directly).
+      jw: (E, p) mass diagonal J*w_q. When given, the screen term is
+          λ·(JW∘W)·u (resp. λ·JW·u) — the proper SEM mass-weighted screen.
+          NekBone uses the unweighted algebraic screen λI; pass None to
+          match NekBone exactly (benchmarks do).
+
+    Returns:
+      (E, p) result.
+    """
+    e, p = u.shape
+    n1 = d.shape[0]
+    u3 = u.reshape(e, n1, n1, n1)  # (E, t, s, r)
+
+    # Gradient: three batched contractions — these hit the MXU.
+    ur = jnp.einsum("ia,etsa->etsi", d, u3)
+    us = jnp.einsum("jb,etbr->etjr", d, u3)
+    ut = jnp.einsum("kc,ecsr->eksr", d, u3)
+
+    g3 = g.reshape(e, 6, n1, n1, n1)
+    wr = g3[:, 0] * ur + g3[:, 1] * us + g3[:, 2] * ut
+    ws = g3[:, 1] * ur + g3[:, 3] * us + g3[:, 4] * ut
+    wt = g3[:, 2] * ur + g3[:, 4] * us + g3[:, 5] * ut
+
+    # Divergence: transposed contractions.
+    out = (
+        jnp.einsum("ia,etsi->etsa", d, wr)
+        + jnp.einsum("jb,etjr->etbr", d, ws)
+        + jnp.einsum("kc,eksr->ecsr", d, wt)
+    ).reshape(e, p)
+
+    screen = u if jw is None else jw * u
+    if w is not None:
+        screen = w * screen
+    return out + lam * screen
+
+
+@dataclasses.dataclass(frozen=True)
+class PoissonProblem:
+    """A ready-to-run screened Poisson problem (single shard).
+
+    All arrays are jnp in the runtime dtype; setup metadata stays numpy.
+    """
+
+    mesh: BoxMesh
+    lam: float
+    d: jax.Array            # (N+1, N+1)
+    g: jax.Array            # (E, 6, p)
+    jw: jax.Array           # (E, p) mass diagonal
+    l2g: jax.Array          # (E, p) int32
+    w_local: jax.Array      # (E, p) inverse degree (scattered layout)
+    w_global: jax.Array     # (N_G,) inverse degree (assembled layout)
+    dtype: Any
+
+    @property
+    def n_global(self) -> int:
+        return self.mesh.n_global
+
+    @property
+    def n_local(self) -> int:
+        return self.mesh.n_local
+
+
+def build_problem(
+    n_degree: int,
+    shape: tuple[int, int, int],
+    *,
+    lam: float = 1.0,
+    deform: float = 0.0,
+    dtype: Any = jnp.float32,
+) -> PoissonProblem:
+    """Construct mesh, geometric factors and gather-scatter data."""
+    m = build_box_mesh(n_degree, shape, deform=deform)
+    geo = geometry.geometric_factors(m)
+    d = sem.derivative_matrix(n_degree)
+    w_g = inverse_degree(m.l2g, m.n_global)
+    w_l = w_g[m.l2g]
+    return PoissonProblem(
+        mesh=m,
+        lam=float(lam),
+        d=jnp.asarray(d, dtype=dtype),
+        g=jnp.asarray(geo["G"], dtype=dtype),
+        jw=jnp.asarray(geo["JW"], dtype=dtype),
+        l2g=jnp.asarray(m.l2g),
+        w_local=jnp.asarray(w_l, dtype=dtype),
+        w_global=jnp.asarray(w_g, dtype=dtype),
+        dtype=dtype,
+    )
+
+
+def poisson_assembled(
+    prob: PoissonProblem,
+    local_op: Callable[..., jax.Array] | None = None,
+) -> Callable[[jax.Array], jax.Array]:
+    """hipBone operator: x_G (N_G,) -> A x_G (N_G,).
+
+    y_L = (S_L + λW) Z x_G in one fused step, then the gather Z^T y_L.
+    ``local_op`` lets callers swap in the Pallas kernel; default is the
+    pure-jnp reference.
+    """
+    op = local_op or local_poisson
+
+    def apply(x_g: jax.Array) -> jax.Array:
+        x_l = scatter(x_g, prob.l2g)
+        y_l = op(x_l, prob.g, prob.d, prob.lam, prob.w_local)
+        return gather(y_l, prob.l2g, prob.n_global)
+
+    return apply
+
+
+def poisson_scattered(
+    prob: PoissonProblem,
+    local_op: Callable[..., jax.Array] | None = None,
+) -> Callable[[jax.Array], jax.Array]:
+    """NekBone baseline operator: x_L (E, p) -> b_L = (ZZ^T S_L + λI) x_L."""
+    op = local_op or local_poisson
+
+    def apply(x_l: jax.Array) -> jax.Array:
+        s_l = op(x_l, prob.g, prob.d, 0.0, None)  # S_L x_L only
+        return gather_scatter(s_l, prob.l2g, prob.n_global) + prob.lam * x_l
+
+    return apply

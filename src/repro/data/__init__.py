@@ -1,0 +1,4 @@
+"""repro.data — deterministic, restartable data pipelines."""
+from .pipeline import SyntheticLM, TextLM
+
+__all__ = ["SyntheticLM", "TextLM"]

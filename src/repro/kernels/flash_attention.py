@@ -1,0 +1,144 @@
+"""Pallas TPU flash-attention (forward) — the LM-side memory hot spot.
+
+§Roofline showed the pure-XLA chunked attention dominates every prefill/
+train cell's memory term: the (Sq x C) score tensors are real HBM buffers
+on any backend without a fused kernel (e.g. chameleon-34b prefill_32k:
+~8.6 GB of score traffic per layer per chunk pass). This kernel keeps the
+whole online-softmax tile pipeline in VMEM — HBM traffic collapses to one
+pass over q, k, v, o, exactly like the hipBone Poisson kernel collapses
+the operator to one pass over its seven streams (paper C2, transplanted).
+
+Layout: q (B, H, Sq, D), k/v (B, KV, Sk, D), grid (B, H, Sq/bq, Sk/bk)
+with the kv-block axis innermost-sequential; VMEM scratch carries the
+(acc, m, l) online-softmax state across kv blocks; GQA maps head h to kv
+head h // (H/KV) inside the BlockSpec index maps. Causal/window masking
+via iota against absolute positions. Backward runs the rematerializing
+jnp path through jax.custom_vjp (Pallas backward kernel: future work,
+noted in EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_fwd_pallas", "flash_vmem_bytes"]
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+    *, scale: float, causal: bool, window: int | None,
+    bq: int, bk: int, n_kv_blocks: int,
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale        # (bq, D)
+    k = k_ref[0, 0].astype(jnp.float32)                # (bk, D)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                                   # (bq, bk)
+
+    q_pos = qi * bq + lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ki * bk + lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                                 # (bq, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)                              # (bq, bk)
+    corr = jnp.exp(m_prev - m_new)                      # (bq, 1)
+    l_new = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    v = v_ref[0, 0].astype(jnp.float32)                 # (bk, D)
+    pv = jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    acc_ref[...] = acc_ref[...] * corr + pv
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finish():
+        o_ref[0, 0] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-37)
+        ).astype(o_ref.dtype)
+
+
+def flash_vmem_bytes(bq: int, bk: int, d: int, dv: int | None = None) -> int:
+    """VMEM working set per grid step (the Table-1 occupancy metric)."""
+    dv = dv or d
+    tiles = (bq * d + bk * d + bk * dv + bq * dv) * 4   # q, k, v, o
+    scratch = (bq * dv + 2 * bq) * 4                    # acc, m, l
+    score = 2 * bq * bk * 4                             # s, p
+    return tiles + scratch + score
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale", "causal", "window", "bq", "bk", "interpret"),
+)
+def flash_attention_fwd_pallas(
+    q: jax.Array,            # (B, H, Sq, Dq)
+    k: jax.Array,            # (B, KV, Sk, Dq)
+    v: jax.Array,            # (B, KV, Sk, Dv) — Dv may differ (absorbed MLA)
+    *,
+    scale: float,
+    causal: bool = True,
+    window: int | None = None,
+    bq: int = 256,
+    bk: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    b, h, sq, d = q.shape
+    _, kvh, sk, _ = k.shape
+    dv = v.shape[-1]
+    g = h // kvh
+    bq = min(bq, sq)
+    bk = min(bk, sk)
+    if sq % bq or sk % bk:
+        raise ValueError(f"seq ({sq},{sk}) not divisible by blocks ({bq},{bk})")
+    n_kv = sk // bk
+    grid = (b, h, sq // bq, n_kv)
+
+    return pl.pallas_call(
+        functools.partial(
+            _kernel, scale=scale, causal=causal, window=window,
+            bq=bq, bk=bk, n_kv_blocks=n_kv,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h_, qi, ki: (b_, h_, qi, 0)),
+            pl.BlockSpec(
+                (1, 1, bk, d), lambda b_, h_, qi, ki, g=g: (b_, h_ // g, ki, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, bk, dv), lambda b_, h_, qi, ki, g=g: (b_, h_ // g, ki, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, bq, dv), lambda b_, h_, qi, ki: (b_, h_, qi, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, dv), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,140 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Handles padding to tile shapes, the CPU/TPU interpret switch, and the
+reference fallback. Everything downstream (core.operator, core.cg,
+benchmarks) calls these, never pl.pallas_call directly.
+
+``interpret`` defaults to True off-TPU so the same code validates on CPU;
+on a real TPU backend it compiles via Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .poisson import pick_block_e, poisson_local_pallas
+from .streams import (
+    LANES,
+    fused_axpy_dot_pallas,
+    fused_xpay_pallas,
+    weighted_dot_pallas,
+)
+
+__all__ = [
+    "default_interpret",
+    "poisson_local",
+    "fused_axpy_dot",
+    "fused_xpay",
+    "weighted_dot",
+    "make_local_op",
+]
+
+
+def default_interpret() -> bool:
+    """Interpret Pallas kernels unless running on a real TPU."""
+    return jax.default_backend() != "tpu"
+
+
+def _pad_rows(x: jax.Array, multiple: int) -> tuple[jax.Array, int]:
+    n = x.shape[0]
+    pad = (-n) % multiple
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad,) + x.shape[1:], x.dtype)])
+    return x, n
+
+
+def poisson_local(
+    u: jax.Array,
+    g: jax.Array,
+    w: jax.Array | None,
+    d: jax.Array,
+    *,
+    lam: float,
+    block_e: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused (S_L + λW) u with element padding. See kernels/poisson.py."""
+    interp = default_interpret() if interpret is None else interpret
+    e = u.shape[0]
+    n1 = d.shape[0]
+    eb = block_e or pick_block_e(n1 - 1, u.dtype)
+    eb = max(1, min(eb, e))
+    if w is None:
+        w = jnp.ones_like(u)
+    u_p, _ = _pad_rows(u, eb)
+    g_p, _ = _pad_rows(g, eb)
+    w_p, _ = _pad_rows(w, eb)
+    out = poisson_local_pallas(
+        u_p, g_p, w_p, d, lam=lam, block_e=eb, interpret=interp
+    )
+    return out[:e]
+
+
+def _pad_vec(x: jax.Array, multiple: int) -> tuple[jax.Array, int]:
+    n = x.size
+    pad = (-n) % multiple
+    if pad:
+        x = jnp.concatenate([x.reshape(-1), jnp.zeros((pad,), x.dtype)])
+    return x.reshape(-1), n
+
+
+def _stream_block_rows(padded_size: int, want: int = 512) -> int:
+    rows = padded_size // LANES
+    br = min(want, rows)
+    while rows % br:
+        br -= 1
+    return br
+
+
+def fused_axpy_dot(
+    r: jax.Array, ap: jax.Array, alpha: jax.Array, *, interpret: bool | None = None
+) -> tuple[jax.Array, jax.Array]:
+    """One-pass (r - α·Ap, ||r - α·Ap||²) for arbitrary-length vectors."""
+    interp = default_interpret() if interpret is None else interpret
+    shape = r.shape
+    r_p, n = _pad_vec(r, LANES)
+    ap_p, _ = _pad_vec(ap, LANES)
+    br = _stream_block_rows(r_p.size)
+    r_new, rr = fused_axpy_dot_pallas(
+        r_p, ap_p, alpha, block_rows=br, interpret=interp
+    )
+    # padded tail contributes alpha*0 - 0 = 0 to both outputs
+    return r_new[:n].reshape(shape), rr
+
+
+def fused_xpay(
+    r: jax.Array, p: jax.Array, beta: jax.Array, *, interpret: bool | None = None
+) -> jax.Array:
+    interp = default_interpret() if interpret is None else interpret
+    shape = r.shape
+    r_p, n = _pad_vec(r, LANES)
+    p_p, _ = _pad_vec(p, LANES)
+    br = _stream_block_rows(r_p.size)
+    out = fused_xpay_pallas(r_p, p_p, beta, block_rows=br, interpret=interp)
+    return out[:n].reshape(shape)
+
+
+def weighted_dot(
+    w: jax.Array, a: jax.Array, b: jax.Array, *, interpret: bool | None = None
+) -> jax.Array:
+    interp = default_interpret() if interpret is None else interpret
+    w_p, _ = _pad_vec(w, LANES)
+    a_p, _ = _pad_vec(a, LANES)
+    b_p, _ = _pad_vec(b, LANES)
+    br = _stream_block_rows(w_p.size)
+    return weighted_dot_pallas(w_p, a_p, b_p, block_rows=br, interpret=interp)
+
+
+def make_local_op(*, block_e: int | None = None, interpret: bool | None = None):
+    """Adapter with core.operator's local_op signature (u, g, d, lam, w)."""
+
+    def op(u, g, d, lam, w, jw=None):
+        del jw
+        return poisson_local(
+            u, g, w, d, lam=float(lam), block_e=block_e, interpret=interpret
+        )
+
+    return op

@@ -1,0 +1,158 @@
+"""Pallas TPU kernel for the fused hipBone operator  y_L = (S_L + λW) x_L.
+
+TPU adaptation of the paper's CUDA/HIP operator kernel (DESIGN.md §3):
+
+* GPU version: one threadblock per element (3-D block for N<9, 2-D
+  layer-by-layer for N>=9), shared memory as scratchpad, multiple elements
+  per block to avoid masked lanes.
+* TPU version: grid over *blocks of elements*; each grid step streams a
+  (block_e, p) tile of DOFs plus its (block_e, 6, p) geometric factors and
+  (block_e, p) weights HBM->VMEM, performs the three tensor-product
+  contractions as element-batched ``dot_general``s (element batch folded
+  into the matmul M dimension so the MXU sees tall-skinny matmuls instead
+  of (N+1)x(N+1) crumbs), and writes the single output tile. The kernel is
+  a single pass over all seven input streams — the paper's "perfect
+  caching" traffic bound  word*N_G + (4 + 8*word)*N_L  is met by
+  construction, because nothing is re-read.
+* The GPU occupancy knob (registers/warp) becomes the VMEM-footprint knob
+  ``block_e``, swept in benchmarks/table1_blocks.py.
+
+The scatter Z (indirect read of x_G) happens outside at the XLA level —
+TPU has no efficient per-lane random HBM gather inside a kernel; XLA's
+dynamic-gather already streams it (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["poisson_local_pallas", "vmem_bytes_per_block", "pick_block_e"]
+
+
+def _kernel(u_ref, g_ref, w_ref, d_ref, out_ref, *, lam: float, n1: int):
+    """One grid step: apply (S_L + λW) to block_e elements resident in VMEM."""
+    u = u_ref[...]          # (Eb, p)
+    g = g_ref[...]          # (Eb, 6, p)
+    w = w_ref[...]          # (Eb, p)
+    d = d_ref[...]          # (n1, n1)
+    eb, p = u.shape
+    f32 = jnp.float32
+    acc = jnp.promote_types(u.dtype, f32)
+
+    u3 = u.reshape(eb, n1, n1, n1).astype(acc)
+    dd = d.astype(acc)
+
+    # --- gradient: three element-batched contractions --------------------
+    # r-derivative: fold (e, t, s) into M -> (M, n1) @ (n1, n1)^T, MXU-shaped.
+    ur = jax.lax.dot_general(
+        u3.reshape(eb * n1 * n1, n1), dd,
+        ((((1,), (1,)), ((), ()))),
+        preferred_element_type=acc,
+    ).reshape(eb, n1, n1, n1)
+    # s-derivative: contract the middle axis; einsum lowers to
+    # dot_general + layout change, which Mosaic pipelines with the matmul.
+    us = jnp.einsum("jb,etbr->etjr", dd, u3, preferred_element_type=acc)
+    # t-derivative
+    ut = jnp.einsum("kc,ecsr->eksr", dd, u3, preferred_element_type=acc)
+
+    # --- metric: 15 (N+1)^3 FLOPs/elt, pure VPU ---------------------------
+    g3 = g.reshape(eb, 6, n1, n1, n1).astype(acc)
+    wr = g3[:, 0] * ur + g3[:, 1] * us + g3[:, 2] * ut
+    ws = g3[:, 1] * ur + g3[:, 3] * us + g3[:, 4] * ut
+    wt = g3[:, 2] * ur + g3[:, 4] * us + g3[:, 5] * ut
+
+    # --- divergence: transposed contractions ------------------------------
+    out = jax.lax.dot_general(
+        wr.reshape(eb * n1 * n1, n1), dd,
+        ((((1,), (0,)), ((), ()))),
+        preferred_element_type=acc,
+    ).reshape(eb, n1, n1, n1)
+    out = out + jnp.einsum("jb,etjr->etbr", dd, ws, preferred_element_type=acc)
+    out = out + jnp.einsum("kc,eksr->ecsr", dd, wt, preferred_element_type=acc)
+
+    # --- fused screen λW --------------------------------------------------
+    out = out.reshape(eb, p) + lam * (w.astype(acc) * u.astype(acc))
+    out_ref[...] = out.astype(out_ref.dtype)
+
+
+def vmem_bytes_per_block(block_e: int, n1: int, dtype=jnp.float32) -> int:
+    """Estimated VMEM working set of one grid step (inputs+outputs+temps)."""
+    p = n1**3
+    word = jnp.dtype(dtype).itemsize
+    io = block_e * p * (1 + 6 + 1 + 1) * word        # u, G, w, out tiles
+    tmp = block_e * p * 6 * 4                        # ur/us/ut + wr/ws/wt (f32)
+    return io + tmp
+
+
+def pick_block_e(
+    n_degree: int, dtype=jnp.float32, budget_bytes: int = 4 * 2**20
+) -> int:
+    """Largest power-of-two element block whose working set fits the budget.
+
+    The 4 MB default leaves VMEM room for double-buffered pipelining
+    (Mosaic overlaps the next tile's HBM->VMEM DMA with current compute,
+    the TPU analogue of the paper's >1 waves/CU occupancy goal).
+    """
+    n1 = n_degree + 1
+    eb = 256
+    while eb > 1 and vmem_bytes_per_block(eb, n1, dtype) > budget_bytes:
+        eb //= 2
+    return eb
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("lam", "block_e", "interpret"),
+)
+def poisson_local_pallas(
+    u: jax.Array,
+    g: jax.Array,
+    w: jax.Array,
+    d: jax.Array,
+    *,
+    lam: float,
+    block_e: int | None = None,
+    interpret: bool = True,
+) -> jax.Array:
+    """Fused (S_L + λW) u for element-blocked tiles.
+
+    Args:
+      u: (E, p) local DOFs, p=(N+1)^3. E must be a multiple of block_e
+         (ops.poisson_local pads).
+      g: (E, 6, p) packed geometric factors.
+      w: (E, p) inverse-degree weights (pass ones for the plain S_L + λI).
+      d: (n1, n1) derivative matrix.
+      lam: screen parameter (static).
+      block_e: elements per grid step; default via pick_block_e.
+      interpret: run the kernel body in interpret mode (CPU validation).
+
+    Returns:
+      (E, p) y_L.
+    """
+    e, p = u.shape
+    n1 = d.shape[0]
+    if n1**3 != p:
+        raise ValueError(f"p={p} is not (N+1)^3 for n1={n1}")
+    eb = block_e or pick_block_e(n1 - 1, u.dtype)
+    eb = min(eb, e)
+    if e % eb:
+        raise ValueError(f"E={e} not a multiple of block_e={eb}; use ops.poisson_local")
+    grid = (e // eb,)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, lam=lam, n1=n1),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((eb, p), lambda i: (i, 0)),
+            pl.BlockSpec((eb, 6, p), lambda i: (i, 0, 0)),
+            pl.BlockSpec((eb, p), lambda i: (i, 0)),
+            pl.BlockSpec((n1, n1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((eb, p), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((e, p), u.dtype),
+        interpret=interpret,
+    )(u, g, w, d)

@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for every Pallas kernel (ground truth for tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.operator import local_poisson
+
+__all__ = ["poisson_local_ref", "fused_axpy_dot_ref", "fused_xpay_ref", "weighted_dot_ref"]
+
+
+def poisson_local_ref(
+    u: jax.Array, g: jax.Array, w: jax.Array, d: jax.Array, *, lam: float
+) -> jax.Array:
+    """y = (S_L + λ diag(w)) u — reference for kernels/poisson.py."""
+    return local_poisson(u, g, d, lam, w)
+
+
+def fused_axpy_dot_ref(
+    r: jax.Array, ap: jax.Array, alpha: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    r_new = r - alpha * ap
+    rf = r_new.astype(jnp.float32)
+    return r_new, jnp.sum(rf * rf)
+
+
+def fused_xpay_ref(r: jax.Array, p: jax.Array, beta: jax.Array) -> jax.Array:
+    return r + beta * p
+
+
+def weighted_dot_ref(w: jax.Array, a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.sum(
+        w.astype(jnp.float32) * a.astype(jnp.float32) * b.astype(jnp.float32)
+    )

@@ -1,0 +1,169 @@
+"""Pallas TPU streaming kernels for the CG vector operations.
+
+The paper's CG-iteration optimizations are streaming fusions:
+  * ``fused_axpy_dot``:  r_new = r - α·Ap  AND  Σ r_new²  in ONE pass —
+    "Fusing this reduction with the update of r avoids the need for a
+    separate kernel to read the vector r again."
+  * ``fused_xpay``:      p = r + β·p  (the CG direction update).
+  * ``weighted_dot``:    Σ w·a·b — NekBone-baseline weighted inner product
+    (reads the extra weight stream, as the paper charges it).
+
+TPU mapping: 1-D vectors are viewed as (rows, 128) lane tiles; the grid
+walks row blocks; scalar reductions accumulate into a (1, 1) output block
+that every grid step revisits (TPU grids are sequential, so the
+accumulation is deterministic — unlike GPU atomics). α/β arrive as (1, 1)
+SMEM scalars so the same compiled kernel serves every iteration.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["fused_axpy_dot_pallas", "fused_xpay_pallas", "weighted_dot_pallas"]
+
+LANES = 128
+DEFAULT_BLOCK_ROWS = 512  # 512x128 f32 tile = 256 KB per stream
+
+
+def _axpy_dot_kernel(alpha_ref, r_ref, ap_ref, rnew_ref, acc_ref):
+    i = pl.program_id(0)
+    alpha = alpha_ref[0, 0]
+    r = r_ref[...]
+    ap = ap_ref[...]
+    r_new = r - alpha * ap
+    rnew_ref[...] = r_new
+    part = jnp.sum(r_new.astype(jnp.float32) * r_new.astype(jnp.float32))
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[0, 0] = 0.0
+
+    acc_ref[0, 0] += part
+
+
+def _xpay_kernel(beta_ref, r_ref, p_ref, out_ref):
+    beta = beta_ref[0, 0]
+    out_ref[...] = r_ref[...] + beta * p_ref[...]
+
+
+def _wdot_kernel(w_ref, a_ref, b_ref, acc_ref):
+    i = pl.program_id(0)
+    part = jnp.sum(
+        w_ref[...].astype(jnp.float32)
+        * a_ref[...].astype(jnp.float32)
+        * b_ref[...].astype(jnp.float32)
+    )
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[0, 0] = 0.0
+
+    acc_ref[0, 0] += part
+
+
+def _as_tiles(x: jax.Array) -> jax.Array:
+    """View a (rows*LANES,) vector as (rows, LANES); caller pre-pads."""
+    return x.reshape(-1, LANES)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def fused_axpy_dot_pallas(
+    r: jax.Array,
+    ap: jax.Array,
+    alpha: jax.Array,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """(r - α·Ap, Σ(r - α·Ap)²) in one pass. r, ap: (rows, 128) tiles."""
+    r2, ap2 = _as_tiles(r), _as_tiles(ap)
+    rows = r2.shape[0]
+    br = min(block_rows, rows)
+    if rows % br:
+        raise ValueError(f"rows={rows} not a multiple of block_rows={br}")
+    alpha2 = jnp.asarray(alpha, r2.dtype).reshape(1, 1)
+    grid = (rows // br,)
+    r_new, acc = pl.pallas_call(
+        _axpy_dot_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((br, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((br, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((br, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0), memory_space=pltpu.SMEM),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(r2.shape, r2.dtype),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(alpha2, r2, ap2)
+    return r_new.reshape(r.shape), acc[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def fused_xpay_pallas(
+    r: jax.Array,
+    p: jax.Array,
+    beta: jax.Array,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = True,
+) -> jax.Array:
+    """r + β·p, one pass."""
+    r2, p2 = _as_tiles(r), _as_tiles(p)
+    rows = r2.shape[0]
+    br = min(block_rows, rows)
+    if rows % br:
+        raise ValueError(f"rows={rows} not a multiple of block_rows={br}")
+    beta2 = jnp.asarray(beta, r2.dtype).reshape(1, 1)
+    out = pl.pallas_call(
+        _xpay_kernel,
+        grid=(rows // br,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((br, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((br, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(r2.shape, r2.dtype),
+        interpret=interpret,
+    )(beta2, r2, p2)
+    return out.reshape(r.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def weighted_dot_pallas(
+    w: jax.Array,
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = True,
+) -> jax.Array:
+    """Σ w·a·b — NekBone's weighted inner product (extra weight stream)."""
+    w2, a2, b2 = _as_tiles(w), _as_tiles(a), _as_tiles(b)
+    rows = w2.shape[0]
+    br = min(block_rows, rows)
+    if rows % br:
+        raise ValueError(f"rows={rows} not a multiple of block_rows={br}")
+    acc = pl.pallas_call(
+        _wdot_kernel,
+        grid=(rows // br,),
+        in_specs=[
+            pl.BlockSpec((br, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((br, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((br, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0), memory_space=pltpu.SMEM),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        interpret=interpret,
+    )(w2, a2, b2)
+    return acc[0, 0]

@@ -1,0 +1,4 @@
+"""repro.launch — production meshes and drivers (dryrun/train/serve)."""
+from .mesh import axis_sizes, flat_mesh, make_production_mesh
+
+__all__ = ["axis_sizes", "flat_mesh", "make_production_mesh"]

@@ -1,0 +1,40 @@
+"""Production device meshes.
+
+``make_production_mesh`` builds the assignment's single-pod 16x16
+("data", "model") or two-pod 2x16x16 ("pod", "data", "model") mesh. It is
+a FUNCTION so importing this module never touches jax device state — the
+caller (dryrun.py) is responsible for forcing the 512-device host platform
+before any jax initialization.
+
+The hipBone Poisson cells run over the same devices viewed as a single
+flattened ("ranks",) axis: a 3-D process grid (comms.topology.factor3) is
+laid over the flattened device list, so the pod boundary falls on the
+outermost grid dimension (nearest-neighbor faces cross the pod link only
+on one plane — the layout a real deployment would choose).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+__all__ = ["make_production_mesh", "flat_mesh", "axis_sizes"]
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def flat_mesh(mesh: jax.sharding.Mesh, name: str = "ranks") -> jax.sharding.Mesh:
+    """View the same devices as one flattened axis (Poisson process grid)."""
+    devices = mesh.devices.reshape(-1)
+    return jax.sharding.Mesh(
+        devices, (name,), axis_types=(jax.sharding.AxisType.Auto,)
+    )
+
+
+def axis_sizes(mesh: jax.sharding.Mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))

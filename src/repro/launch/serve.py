@@ -1,0 +1,30 @@
+"""Production serve driver: ``python -m repro.launch.serve --arch <id>``."""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models.model import init_model
+from repro.serving import Engine, ServeConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    params, _ = init_model(cfg, jax.random.key(0), jnp.float32)
+    eng = Engine(cfg, params, ServeConfig(batch=args.batch, capacity=64))
+    prompts = jax.random.randint(jax.random.key(1), (args.batch, 8), 0,
+                                 cfg.vocab_size)
+    out = eng.generate(prompts, max_new=args.max_new)
+    print("generated shape:", out.shape)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Production train driver: ``python -m repro.launch.train --arch <id> ...``
+
+On a real TPU pod this runs under `jax.distributed.initialize()` with the
+production mesh; on this container it runs reduced configs single-device.
+The step function is identical to the one the dry-run lowers.
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data import SyntheticLM
+from repro.models.blocks import MeshContext
+from repro.models.model import init_model
+from repro.training import (
+    RunnerConfig, TrainRunner, adafactor, make_train_step, warmup_cosine,
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced config (CPU-sized); full configs need a pod")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_launch_train")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    params, _ = init_model(cfg, jax.random.key(0), jnp.float32)
+    opt = adafactor()
+    step = jax.jit(make_train_step(
+        cfg, opt, warmup_cosine(peak_lr=1e-3, warmup=10, total=args.steps),
+        MeshContext(), microbatches=args.microbatches,
+    ))
+    data = SyntheticLM(vocab_size=cfg.vocab_size, batch=args.batch,
+                       seq_len=args.seq)
+    runner = TrainRunner(
+        RunnerConfig(total_steps=args.steps, checkpoint_dir=args.ckpt_dir,
+                     checkpoint_every=max(args.steps // 2, 1), log_every=10),
+        step, lambda i: {"tokens": jnp.asarray(data(i)["tokens"])},
+        params, opt.init(params),
+    )
+    runner.try_restore()
+    print(runner.run())
+
+
+if __name__ == "__main__":
+    main()

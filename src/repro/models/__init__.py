@@ -1,0 +1,15 @@
+"""repro.models — the ten assigned architectures as composable JAX modules."""
+from .blocks import MeshContext, init_layer, layer_decode, layer_forward
+from .config import LayerKind, ModelConfig
+from .model import decode_step, forward, init_caches, init_model, mtp_logits, prefill
+from .params import (
+    RULES_SINGLE,
+    RULES_TP_DP,
+    RULES_TP_FSDP,
+    ParamBuilder,
+    logical_to_spec,
+    tree_shardings,
+    tree_specs,
+)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,502 @@
+"""Attention: GQA/MQA/MHA, MLA (DeepSeek), sliding-window, local:global.
+
+Prefill/training uses a chunked online-softmax ("flash-style") pure-JAX
+attention — memory O(S·chunk) instead of O(S²), which is what lets the
+32k-prefill dry-runs fit. KV is produced chunk-by-chunk through a provider
+callback so MLA can expand its compressed cache lazily (never materializing
+the full K/V).
+
+Decode attends over a KV cache whose *sequence axis is sharded* across mesh
+axes (sequence-parallel flash-decode): each shard computes a partial
+softmax over its chunk of the cache, then partials merge with a max/psum
+combine. For 500k-token contexts on 512 chips this turns the KV-cache walk
+into a perfectly-parallel operation with one tiny collective — the paper's
+C4 philosophy (local compute ‖ small exchange) applied to serving.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .common import rms_norm, rope
+from .config import ModelConfig
+from .params import ParamBuilder
+
+__all__ = [
+    "init_attention",
+    "attn_forward",
+    "attn_decode",
+    "init_attn_cache",
+    "flash_attention",
+]
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# parameter init
+# --------------------------------------------------------------------------
+def init_attention(key, cfg: ModelConfig, dtype) -> tuple[dict, dict]:
+    pb = ParamBuilder(key, dtype=dtype)
+    d = cfg.d_model
+    if cfg.attn_kind == "mla":
+        qk = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+        pb.param("wdq", (d, cfg.q_lora_rank), ("embed", "lora"), scale=d**-0.5)
+        pb.param("q_norm", (cfg.q_lora_rank,), ("unsharded",), init="ones")
+        pb.param(
+            "wuq",
+            (cfg.q_lora_rank, cfg.n_heads, qk),
+            ("lora", "heads", "qk"),
+            scale=cfg.q_lora_rank**-0.5,
+        )
+        pb.param(
+            "wdkv",
+            (d, cfg.kv_lora_rank + cfg.qk_rope_head_dim),
+            ("embed", "lora"),
+            scale=d**-0.5,
+        )
+        pb.param("kv_norm", (cfg.kv_lora_rank,), ("unsharded",), init="ones")
+        pb.param(
+            "wukv",
+            (
+                cfg.kv_lora_rank,
+                cfg.n_heads,
+                cfg.qk_nope_head_dim + cfg.v_head_dim,
+            ),
+            ("lora", "heads", "qk"),
+            scale=cfg.kv_lora_rank**-0.5,
+        )
+        pb.param(
+            "wo",
+            (cfg.n_heads, cfg.v_head_dim, d),
+            ("heads", "qk", "embed"),
+            scale=(cfg.n_heads * cfg.v_head_dim) ** -0.5,
+        )
+    else:
+        hd = cfg.head_dim
+        pb.param("wq", (d, cfg.n_heads, hd), ("embed", "heads", "qk"), scale=d**-0.5)
+        pb.param(
+            "wk", (d, cfg.n_kv_heads, hd), ("embed", "kv_heads", "qk"), scale=d**-0.5
+        )
+        pb.param(
+            "wv", (d, cfg.n_kv_heads, hd), ("embed", "kv_heads", "qk"), scale=d**-0.5
+        )
+        pb.param(
+            "wo",
+            (cfg.n_heads, hd, d),
+            ("heads", "qk", "embed"),
+            scale=(cfg.n_heads * hd) ** -0.5,
+        )
+        if cfg.qk_norm:
+            pb.param("q_norm", (hd,), ("unsharded",), init="ones")
+            pb.param("k_norm", (hd,), ("unsharded",), init="ones")
+    return pb.collect()
+
+
+# --------------------------------------------------------------------------
+# chunked online-softmax attention
+# --------------------------------------------------------------------------
+class _Carry(NamedTuple):
+    o: jax.Array  # (B, Sq, H, Dv) f32 — unnormalized
+    m: jax.Array  # (B, Sq, H) running max
+    l: jax.Array  # (B, Sq, H) running sum
+
+
+def flash_attention(
+    q: jax.Array,                      # (B, Sq, H, Dq)
+    kv_fn: Callable[[int], tuple[jax.Array, jax.Array, jax.Array]],
+    n_chunks: int,
+    *,
+    q_positions: jax.Array,            # (B, Sq) global positions of queries
+    n_kv_heads: int,
+    window: int | None,
+    scale: float,
+    dv: int,
+) -> jax.Array:
+    """Online-softmax attention over KV chunks from ``kv_fn``.
+
+    kv_fn(c) -> (k, v, kv_pos): k (B, C, KV, Dq), v (B, C, KV, Dv),
+    kv_pos (B, C) global positions (negative = invalid slot).
+    Causal mask: kv_pos <= q_pos; window mask: kv_pos > q_pos - window.
+    """
+    b, sq, h, dq = q.shape
+    g = h // n_kv_heads
+    qf = q.astype(jnp.float32) * scale
+    q5 = qf.reshape(b, sq, n_kv_heads, g, dq)
+
+    def body(carry: _Carry, c: jax.Array) -> tuple[_Carry, None]:
+        k, v, kv_pos = kv_fn(c)
+        kf = k.astype(jnp.float32)
+        vf = v.astype(jnp.float32)
+        # scores: (B, Sq, KV, G, C)
+        s = jnp.einsum("bskgd,bckd->bskgc", q5, kf)
+        mask = kv_pos[:, None, None, None, :] <= q_positions[:, :, None, None, None]
+        mask &= kv_pos[:, None, None, None, :] >= 0
+        if window is not None:
+            mask &= (
+                kv_pos[:, None, None, None, :]
+                > q_positions[:, :, None, None, None] - window
+            )
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(carry.m, jnp.max(s, axis=-1).reshape(b, sq, h))
+        p = jnp.exp(s - m_new.reshape(b, sq, n_kv_heads, g)[..., None])
+        corr = jnp.exp(carry.m - m_new)
+        l_new = carry.l * corr + jnp.sum(p, axis=-1).reshape(b, sq, h)
+        pv = jnp.einsum("bskgc,bckd->bskgd", p, vf).reshape(b, sq, h, dv)
+        o_new = carry.o * corr[..., None] + pv
+        return _Carry(o_new, m_new, l_new), None
+
+    init = _Carry(
+        o=jnp.zeros((b, sq, h, dv), jnp.float32),
+        m=jnp.full((b, sq, h), NEG_INF, jnp.float32),
+        l=jnp.zeros((b, sq, h), jnp.float32),
+    )
+    carry, _ = lax.scan(body, init, jnp.arange(n_chunks))
+    out = carry.o / jnp.maximum(carry.l, 1e-37)[..., None]
+    return out.astype(q.dtype)
+
+
+def _pick_chunk(s: int, want: int = 1024) -> int:
+    c = min(want, s)
+    while s % c:
+        c -= 1
+    return c
+
+
+# --------------------------------------------------------------------------
+# Pallas flash-attention dispatch (TPU fast path; see kernels/flash_attention)
+# --------------------------------------------------------------------------
+# Switch for the fused-kernel path. Default: only on real TPUs (the CPU
+# dry-run keeps the jnp path so the HLO analysis reflects what runs there).
+USE_PALLAS_FLASH: bool | None = None
+
+
+def _pallas_flash_enabled() -> bool:
+    if USE_PALLAS_FLASH is not None:
+        return USE_PALLAS_FLASH
+    return jax.default_backend() == "tpu"
+
+
+def _jnp_attention_bhsd(q, k, v, *, scale, window):
+    """Chunked online-softmax reference in (B, H, S, D) layout (vjp bwd)."""
+    b, h, sq, d = q.shape
+    kvh = k.shape[1]
+    kt = jnp.swapaxes(k, 1, 2).reshape(b, k.shape[2], kvh, d)
+    vt = jnp.swapaxes(v, 1, 2).reshape(b, v.shape[2], kvh, d)
+    qt = jnp.swapaxes(q, 1, 2)                       # (B, S, H, D)
+    pos = jnp.broadcast_to(jnp.arange(sq, dtype=jnp.int32)[None], (b, sq))
+    chunk = _pick_chunk(k.shape[2])
+
+    def kv_fn(c):
+        sl = lambda a: lax.dynamic_slice_in_dim(a, c * chunk, chunk, axis=1)
+        return sl(kt), sl(vt), sl(pos)
+
+    out = flash_attention(
+        qt, kv_fn, k.shape[2] // chunk,
+        q_positions=pos, n_kv_heads=kvh, window=window, scale=scale, dv=d,
+    )
+    return jnp.swapaxes(out, 1, 2)                   # (B, H, S, D)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _flash_attn_op(q, k, v, scale, window):
+    """Causal attention, (B,H,S,D) layout. Pallas kernel fwd on TPU."""
+    if _pallas_flash_enabled():
+        from ..kernels.flash_attention import flash_attention_fwd_pallas
+
+        return flash_attention_fwd_pallas(
+            q, k, v, scale=scale, causal=True, window=window, interpret=False
+        )
+    return _jnp_attention_bhsd(q, k, v, scale=scale, window=window)
+
+
+def _flash_fwd(q, k, v, scale, window):
+    return _flash_attn_op(q, k, v, scale, window), (q, k, v)
+
+
+def _flash_bwd(scale, window, res, g):
+    q, k, v = res
+    # rematerializing backward through the chunked jnp path (Pallas backward
+    # kernel: future work — EXPERIMENTS.md §Perf)
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: _jnp_attention_bhsd(
+            q_, k_, v_, scale=scale, window=window
+        ),
+        q, k, v,
+    )
+    return vjp(g)
+
+
+_flash_attn_op.defvjp(_flash_fwd, _flash_bwd)
+
+
+# --------------------------------------------------------------------------
+# GQA / MLA forward (training & prefill)
+# --------------------------------------------------------------------------
+def _gqa_qkv(p: dict, x: jax.Array, positions: jax.Array, cfg: ModelConfig):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], eps=cfg.norm_eps, plus_one=False)
+        k = rms_norm(k, p["k_norm"], eps=cfg.norm_eps, plus_one=False)
+    q = rope(q, positions, theta=cfg.rope_theta)
+    k = rope(k, positions, theta=cfg.rope_theta)
+    return q, k, v
+
+
+def _mla_q(p: dict, x: jax.Array, positions: jax.Array, cfg: ModelConfig):
+    cq = jnp.einsum("bsd,dr->bsr", x, p["wdq"])
+    cq = rms_norm(cq, p["q_norm"], eps=cfg.norm_eps, plus_one=False)
+    q = jnp.einsum("bsr,rhk->bshk", cq, p["wuq"])
+    q_nope = q[..., : cfg.qk_nope_head_dim]
+    q_rope = rope(q[..., cfg.qk_nope_head_dim :], positions, theta=cfg.rope_theta)
+    return jnp.concatenate([q_nope, q_rope], axis=-1)
+
+
+def _mla_ckv(p: dict, x: jax.Array, positions: jax.Array, cfg: ModelConfig):
+    """Compressed KV: (c_kv normed, k_rope roped) — this is what gets cached."""
+    dkv = jnp.einsum("bsd,dr->bsr", x, p["wdkv"])
+    c_kv = rms_norm(
+        dkv[..., : cfg.kv_lora_rank], p["kv_norm"], eps=cfg.norm_eps, plus_one=False
+    )
+    k_rope = rope(dkv[..., cfg.kv_lora_rank :], positions, theta=cfg.rope_theta)
+    return c_kv, k_rope
+
+
+def _mla_expand(p: dict, c_kv: jax.Array, k_rope: jax.Array, cfg: ModelConfig):
+    """Expand compressed cache chunk to per-head K (nope+rope) and V."""
+    kv = jnp.einsum("bcr,rhk->bchk", c_kv, p["wukv"])
+    k_nope = kv[..., : cfg.qk_nope_head_dim]
+    v = kv[..., cfg.qk_nope_head_dim :]
+    kr = jnp.broadcast_to(
+        k_rope[:, :, None, :],
+        k_nope.shape[:3] + (cfg.qk_rope_head_dim,),
+    )
+    k = jnp.concatenate([k_nope, kr], axis=-1)
+    return k, v
+
+
+def attn_forward(
+    p: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    cfg: ModelConfig,
+    *,
+    local: bool,
+    make_cache: bool = False,
+):
+    """Full-sequence attention (training / prefill). Returns (out, cache|None)."""
+    b, s, _ = x.shape
+    window = cfg.sliding_window if local else None
+    chunk = _pick_chunk(s)
+    n_chunks = s // chunk
+
+    if cfg.attn_kind == "mla":
+        # ABSORBED form (beyond-paper optimization, EXPERIMENTS.md §Perf):
+        # scores q_nope·(W_uk c) == (q_nope W_uk)·c, so MLA becomes MQA over
+        # the compressed cache — one 1-head K of dim (kv_lora + rope), V = c.
+        # Eliminates the per-chunk (S, H, dqk+dv) K/V expansion entirely and
+        # makes the attention flash-kernel-eligible.
+        q = _mla_q(p, x, positions, cfg)                     # (b,s,h,nope+rope)
+        c_kv, k_rope = _mla_ckv(p, x, positions, cfg)
+        w_uk = p["wukv"][..., : cfg.qk_nope_head_dim]        # (r, h, nope)
+        w_uv = p["wukv"][..., cfg.qk_nope_head_dim :]        # (r, h, v)
+        q_abs = jnp.einsum("bshn,rhn->bshr", q[..., : cfg.qk_nope_head_dim], w_uk)
+        q_full = jnp.concatenate([q_abs, q[..., cfg.qk_nope_head_dim :]], axis=-1)
+        k_full = jnp.concatenate([c_kv, k_rope], axis=-1)[:, :, None, :]
+        v_c = c_kv[:, :, None, :]                            # (b,s,1,r)
+        scale = (cfg.qk_nope_head_dim + cfg.qk_rope_head_dim) ** -0.5
+
+        if _pallas_flash_enabled() and s % 256 == 0:
+            out_c = _flash_attn_op(
+                jnp.swapaxes(q_full, 1, 2), jnp.swapaxes(k_full, 1, 2),
+                jnp.swapaxes(v_c, 1, 2), scale, window,
+            )
+            out_c = jnp.swapaxes(out_c, 1, 2)
+        else:
+            def kv_fn(c):
+                sl = lambda a: lax.dynamic_slice_in_dim(a, c * chunk, chunk, axis=1)
+                return sl(k_full), sl(v_c), sl(positions)
+
+            out_c = flash_attention(
+                q_full, kv_fn, n_chunks,
+                q_positions=positions, n_kv_heads=1,
+                window=window, scale=scale, dv=cfg.kv_lora_rank,
+            )
+        out = jnp.einsum("bshr,rhv->bshv", out_c, w_uv)      # absorbed V proj
+        cache = {"c_kv": c_kv, "k_rope": k_rope} if make_cache else None
+    else:
+        q, k, v = _gqa_qkv(p, x, positions, cfg)
+        scale = cfg.head_dim**-0.5
+
+        if _pallas_flash_enabled() and s % 256 == 0 and cfg.head_dim % 64 == 0:
+            # fused-kernel path: scores never touch HBM (kernels/flash_attention)
+            out = _flash_attn_op(
+                jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2),
+                jnp.swapaxes(v, 1, 2), scale, window,
+            )
+            out = jnp.swapaxes(out, 1, 2)
+        else:
+            def kv_fn(c):
+                sl = lambda a: lax.dynamic_slice_in_dim(a, c * chunk, chunk, axis=1)
+                return sl(k), sl(v), sl(positions)
+
+            out = flash_attention(
+                q, kv_fn, n_chunks,
+                q_positions=positions, n_kv_heads=cfg.n_kv_heads,
+                window=window, scale=scale, dv=cfg.head_dim,
+            )
+        cache = {"k": k, "v": v} if make_cache else None
+
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, cache
+
+
+# --------------------------------------------------------------------------
+# decode (single token, cached KV; cache seq axis may be sharded)
+# --------------------------------------------------------------------------
+def init_attn_cache(cfg: ModelConfig, batch: int, capacity: int, dtype):
+    """Zeroed cache pytree for one attention layer."""
+    if cfg.attn_kind == "mla":
+        return {
+            "c_kv": jnp.zeros((batch, capacity, cfg.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((batch, capacity, cfg.qk_rope_head_dim), dtype),
+        }
+    return {
+        "k": jnp.zeros((batch, capacity, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, capacity, cfg.n_kv_heads, cfg.head_dim), dtype),
+    }
+
+
+def attn_decode(
+    p: dict,
+    x: jax.Array,            # (B, 1, d)
+    t: jax.Array,            # scalar int32 — current position
+    cache: dict,
+    cfg: ModelConfig,
+    *,
+    local: bool,
+    seq_axes=None,           # mesh axes the cache seq dim is sharded over
+    vary_axes=None,          # all shard_map axes the carry varies over
+):
+    """One decode step inside shard_map (seq_axes) or plain jit (None).
+
+    Writes the new token's KV into the cache slot ``t`` (which lives on
+    exactly one seq shard), attends over valid positions <= t with the
+    sequence-parallel partial-softmax combine, and returns (out, cache).
+    """
+    b = x.shape[0]
+    pos = jnp.full((b, 1), t, jnp.int32)
+
+    if seq_axes:
+        n_shards = lax.axis_size(seq_axes)
+        shard_id = lax.axis_index(seq_axes)
+    else:
+        n_shards, shard_id = 1, 0
+
+    if cfg.attn_kind == "mla":
+        q = _mla_q(p, x, pos, cfg)
+        c_kv_new, k_rope_new = _mla_ckv(p, x, pos, cfg)
+        local_cap = cache["c_kv"].shape[1]
+        offset = shard_id * local_cap
+        li = jnp.clip(t - offset, 0, local_cap - 1)
+        in_shard = (t >= offset) & (t < offset + local_cap)
+
+        def write(buf, new):
+            upd = lax.dynamic_update_slice_in_dim(buf, new.astype(buf.dtype), li, 1)
+            return jnp.where(in_shard, upd, buf)
+
+        cache = {
+            "c_kv": write(cache["c_kv"], c_kv_new),
+            "k_rope": write(cache["k_rope"], k_rope_new),
+        }
+        kv_pos_all = offset + jnp.arange(local_cap, dtype=jnp.int32)
+        chunk = _pick_chunk(local_cap, 2048)
+        n_chunks = local_cap // chunk
+        scale = (cfg.qk_nope_head_dim + cfg.qk_rope_head_dim) ** -0.5
+        dv = cfg.v_head_dim
+        n_kv = cfg.n_heads
+
+        def kv_fn(c):
+            sl = lambda a: lax.dynamic_slice_in_dim(a, c * chunk, chunk, axis=1)
+            k, v = _mla_expand(p, sl(cache["c_kv"]), sl(cache["k_rope"]), cfg)
+            kp = lax.dynamic_slice_in_dim(kv_pos_all, c * chunk, chunk, axis=0)
+            return k, v, jnp.broadcast_to(kp[None], (b, chunk))
+    else:
+        q, k_new, v_new = _gqa_qkv(p, x, pos, cfg)
+        local_cap = cache["k"].shape[1]
+        offset = shard_id * local_cap
+        li = jnp.clip(t - offset, 0, local_cap - 1)
+        in_shard = (t >= offset) & (t < offset + local_cap)
+
+        def write(buf, new):
+            upd = lax.dynamic_update_slice_in_dim(buf, new.astype(buf.dtype), li, 1)
+            return jnp.where(in_shard, upd, buf)
+
+        cache = {"k": write(cache["k"], k_new), "v": write(cache["v"], v_new)}
+        kv_pos_all = offset + jnp.arange(local_cap, dtype=jnp.int32)
+        chunk = _pick_chunk(local_cap, 2048)
+        n_chunks = local_cap // chunk
+        scale = cfg.head_dim**-0.5
+        dv = cfg.head_dim
+        n_kv = cfg.n_kv_heads
+
+        def kv_fn(c):
+            sl = lambda a: lax.dynamic_slice_in_dim(a, c * chunk, chunk, axis=1)
+            kp = lax.dynamic_slice_in_dim(kv_pos_all, c * chunk, chunk, axis=0)
+            return sl(cache["k"]), sl(cache["v"]), jnp.broadcast_to(kp[None], (b, chunk))
+
+    window = cfg.sliding_window if local else None
+
+    # local partial attention (unnormalized o, running m and l)
+    h = q.shape[2]
+    g = h // n_kv
+    qf = q.astype(jnp.float32) * scale
+    q5 = qf.reshape(b, 1, n_kv, g, q.shape[-1])
+
+    def body(carry: _Carry, c):
+        k, v, kv_pos = kv_fn(c)
+        s = jnp.einsum("bskgd,bckd->bskgc", q5, k.astype(jnp.float32))
+        mask = kv_pos[:, None, None, None, :] <= pos[:, :, None, None, None]
+        if window is not None:
+            mask &= kv_pos[:, None, None, None, :] > pos[:, :, None, None, None] - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(carry.m, jnp.max(s, axis=-1).reshape(b, 1, h))
+        pmat = jnp.exp(s - m_new.reshape(b, 1, n_kv, g)[..., None])
+        corr = jnp.exp(carry.m - m_new)
+        l_new = carry.l * corr + jnp.sum(pmat, axis=-1).reshape(b, 1, h)
+        pv = jnp.einsum("bskgc,bckd->bskgd", pmat, v.astype(jnp.float32))
+        o_new = carry.o * corr[..., None] + pv.reshape(b, 1, h, dv)
+        return _Carry(o_new, m_new, l_new), None
+
+    init = _Carry(
+        o=jnp.zeros((b, 1, h, dv), jnp.float32),
+        m=jnp.full((b, 1, h), NEG_INF, jnp.float32),
+        l=jnp.zeros((b, 1, h), jnp.float32),
+    )
+    if vary_axes:
+        # inside shard_map the body output varies across shards; the zero
+        # init must be marked varying too (scan carry type invariant)
+        init = jax.tree.map(
+            lambda a: lax.pcast(a, tuple(vary_axes), to="varying"), init
+        )
+    carry, _ = lax.scan(body, init, jnp.arange(n_chunks))
+
+    if seq_axes:
+        # sequence-parallel flash-decode combine: one pmax + two psums
+        m_g = lax.pmax(carry.m, seq_axes)
+        corr = jnp.exp(carry.m - m_g)
+        l_g = lax.psum(carry.l * corr, seq_axes)
+        o_g = lax.psum(carry.o * corr[..., None], seq_axes)
+    else:
+        l_g, o_g = carry.l, carry.o
+
+    out = (o_g / jnp.maximum(l_g, 1e-37)[..., None]).astype(x.dtype)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, cache

@@ -1,0 +1,262 @@
+"""Layer assembly: mixer + FFN with residuals/norms; MoE sharding modes.
+
+A layer is (pre-)norm -> mixer (attention or mamba) -> residual -> norm ->
+FFN (dense or MoE) -> residual, or the Cohere parallel-residual variant
+(one norm feeding mixer and FFN simultaneously).
+
+The MoE runs under an explicit shard_map:
+  * ``ep`` mode (n_experts divisible by the model-axis size): tokens are
+    sequence-split across expert shards and dispatched through the paper's
+    exchange library (comms.exchange) — C3 at work;
+  * ``tp`` mode (few large experts, e.g. Mixtral 8e on a 16-way axis):
+    every shard processes all tokens against ff-sharded experts and psums —
+    no exchange needed.
+The mode is picked statically per (config, mesh, token count).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from .attention import attn_decode, attn_forward, init_attention, init_attn_cache
+from .common import init_norm, norm
+from .config import LayerKind, ModelConfig
+from .mamba2 import init_mamba, init_mamba_cache, mamba_decode, mamba_forward
+from .mlp import init_mlp, mlp_apply
+from .moe import moe_apply
+from .moe import init_moe as _init_moe
+from .params import ParamBuilder
+
+__all__ = ["MeshContext", "init_layer", "layer_forward", "layer_decode", "init_layer_cache"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshContext:
+    """How this forward pass maps onto the device mesh (None = single device)."""
+
+    mesh: Any = None
+    batch_axes: tuple = ()          # mesh axes sharding the batch dim
+    tp_axis: str | None = None      # tensor/expert-parallel axis
+    seq_axes: tuple = ()            # decode: KV-cache sequence sharding
+    exchange: str = "all_to_all"    # MoE dispatch routing algorithm
+    act_seq_axis: str | None = None  # SP: shard stored layer inputs over seq
+
+    @property
+    def tp_size(self) -> int:
+        if self.mesh is None or self.tp_axis is None:
+            return 1
+        return self.mesh.shape[self.tp_axis]
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+def init_layer(key, cfg: ModelConfig, kind: LayerKind, dtype) -> tuple[dict, dict]:
+    pb = ParamBuilder(key, dtype=dtype)
+    params, axes = pb.collect()
+    params["norm1"], axes["norm1"] = init_norm(pb.fork(), cfg)
+    if kind.mixer == "mamba":
+        params["mixer"], axes["mixer"] = init_mamba(pb.fork(), cfg, dtype)
+    else:
+        params["mixer"], axes["mixer"] = init_attention(pb.fork(), cfg, dtype)
+    if not cfg.parallel_residual:
+        params["norm2"], axes["norm2"] = init_norm(pb.fork(), cfg)
+    if kind.ffn == "moe":
+        params["ffn"], axes["ffn"] = _init_moe(pb.fork(), cfg, dtype)
+    elif kind.ffn == "dense":
+        params["ffn"], axes["ffn"] = init_mlp(pb.fork(), cfg, dtype)
+    return params, axes
+
+
+def init_layer_cache(cfg: ModelConfig, kind: LayerKind, batch: int, capacity: int, dtype):
+    if kind.mixer == "mamba":
+        return init_mamba_cache(cfg, batch, dtype)
+    return init_attn_cache(cfg, batch, capacity, dtype)
+
+
+# --------------------------------------------------------------------------
+# FFN dispatch (dense / MoE under shard_map)
+# --------------------------------------------------------------------------
+def _moe_ffn(p: dict, x: jax.Array, cfg: ModelConfig, mc: MeshContext):
+    b, s, d = x.shape
+    tp = mc.tp_size
+    if tp == 1:
+        y, aux = moe_apply(p, x.reshape(b * s, d), cfg, ep_axis=None)
+        return y.reshape(b, s, d), aux
+
+    ep_ok = (cfg.n_experts % tp == 0) and (s % tp == 0)
+    ax = mc.tp_axis
+    b_ax = mc.batch_axes if mc.batch_axes else None
+    if ep_ok:
+        # EP: shard_map splits the sequence over the expert axis — each
+        # shard routes its own token slab and dispatches via the exchange.
+        xspec = P(b_ax, ax, None)
+        espec = P(ax, None, None)        # experts sharded over model axis
+
+        def inner(xs, wr, wg, wu, wd, *shared):
+            bl, sl, _ = xs.shape
+            pp = {"w_router": wr, "w_gate": wg, "w_up": wu, "w_down": wd}
+            if shared:
+                pp["ws_gate"], pp["ws_up"], pp["ws_down"] = shared
+            y, aux = moe_apply(
+                pp, xs.reshape(bl * sl, d), cfg, ep_axis=ax,
+                exchange=mc.exchange,
+            )
+            # aux varies over batch and expert axes — average both away
+            aux = lax.pmean(aux, tuple(mc.batch_axes) + (ax,))
+            return y.reshape(bl, sl, d), aux
+
+        in_specs = [xspec, P(None, None), espec, espec, espec]
+        out_specs = (xspec, P())
+        args = [x, p["w_router"], p["w_gate"], p["w_up"], p["w_down"]]
+        if cfg.n_shared_experts:
+            in_specs += [P(None, None)] * 3
+            args += [p["ws_gate"], p["ws_up"], p["ws_down"]]
+    else:
+        # TP: experts ff-sharded; every shard processes all tokens and the
+        # partial down-projections psum over the model axis.
+        xspec = P(b_ax, None, None)
+        wg_spec = P(None, None, ax)
+        wd_spec = P(None, ax, None)
+
+        def inner(xs, wr, wg, wu, wd, *shared):
+            bl, sl, _ = xs.shape
+            pp = {"w_router": wr, "w_gate": wg, "w_up": wu, "w_down": wd}
+            if shared:
+                pp["ws_gate"], pp["ws_up"], pp["ws_down"] = shared
+            y, aux = moe_apply(pp, xs.reshape(bl * sl, d), cfg, ep_axis=None)
+            y = lax.psum(y, ax)
+            if mc.batch_axes:       # aux is already invariant over ax
+                aux = lax.pmean(aux, tuple(mc.batch_axes))
+            return y.reshape(bl, sl, d), aux
+
+        in_specs = [xspec, P(None, None), wg_spec, wg_spec, wd_spec]
+        out_specs = (xspec, P())
+        args = [x, p["w_router"], p["w_gate"], p["w_up"], p["w_down"]]
+        if cfg.n_shared_experts:
+            in_specs += [P(None, ax), P(None, ax), P(ax, None)]
+            args += [p["ws_gate"], p["ws_up"], p["ws_down"]]
+
+    fn = jax.shard_map(
+        inner,
+        mesh=mc.mesh,
+        in_specs=tuple(in_specs),
+        out_specs=out_specs,
+    )
+    return fn(*args)
+
+
+def _axsize(mc: MeshContext, axes: tuple) -> int:
+    if not axes or mc.mesh is None:
+        return 1
+    n = 1
+    for a in axes:
+        n *= mc.mesh.shape[a]
+    return n
+
+
+def _ffn(p: dict, x: jax.Array, cfg: ModelConfig, kind: LayerKind, mc: MeshContext):
+    if kind.ffn == "moe":
+        return _moe_ffn(p["ffn"], x, cfg, mc)
+    if kind.ffn == "dense":
+        return mlp_apply(p["ffn"], x, cfg), jnp.zeros((), jnp.float32)
+    return jnp.zeros_like(x), jnp.zeros((), jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# forward / decode
+# --------------------------------------------------------------------------
+def layer_forward(
+    p: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    cfg: ModelConfig,
+    kind: LayerKind,
+    mc: MeshContext,
+    *,
+    make_cache: bool = False,
+):
+    h = norm(x, p["norm1"], cfg)
+    if kind.mixer == "mamba":
+        mix, cache = mamba_forward(p["mixer"], h, cfg, make_cache=make_cache)
+    else:
+        mix, cache = attn_forward(
+            p["mixer"], h, positions, cfg,
+            local=(kind.mixer == "attn_local"),
+            make_cache=make_cache,
+        )
+    if cfg.parallel_residual:
+        f, aux = _ffn(p, h, cfg, kind, mc)
+        x = x + mix + f
+    else:
+        x = x + mix
+        h2 = norm(x, p["norm2"], cfg)
+        f, aux = _ffn(p, h2, cfg, kind, mc)
+        x = x + f
+    return x, cache, aux
+
+
+def _attn_decode_dispatch(
+    p: dict,
+    h: jax.Array,
+    t: jax.Array,
+    cache: dict,
+    cfg: ModelConfig,
+    local: bool,
+    mc: MeshContext,
+):
+    """attn_decode, wrapped in shard_map when the KV seq axis is sharded."""
+    if not mc.seq_axes or mc.mesh is None:
+        return attn_decode(p, h, t, cache, cfg, local=local, seq_axes=None)
+
+    b_ax = mc.batch_axes if mc.batch_axes else None
+    seq = mc.seq_axes if len(mc.seq_axes) > 1 else mc.seq_axes[0]
+    xspec = P(b_ax, None, None)
+    pspec = jax.tree.map(lambda a: P(*([None] * a.ndim)), p)
+    cspec = jax.tree.map(
+        lambda a: P(*([b_ax, seq] + [None] * (a.ndim - 2))), cache
+    )
+
+    fn = jax.shard_map(
+        functools.partial(
+            attn_decode, cfg=cfg, local=local, seq_axes=mc.seq_axes,
+            vary_axes=tuple(mc.batch_axes) + tuple(mc.seq_axes),
+        ),
+        mesh=mc.mesh,
+        in_specs=(pspec, xspec, P(), cspec),
+        out_specs=(xspec, cspec),
+    )
+    return fn(p, h, t, cache)
+
+
+def layer_decode(
+    p: dict,
+    x: jax.Array,
+    t: jax.Array,
+    cache: dict,
+    cfg: ModelConfig,
+    kind: LayerKind,
+    mc: MeshContext,
+):
+    h = norm(x, p["norm1"], cfg)
+    if kind.mixer == "mamba":
+        mix, cache = mamba_decode(p["mixer"], h, cache, cfg)
+    else:
+        mix, cache = _attn_decode_dispatch(
+            p["mixer"], h, t, cache, cfg, kind.mixer == "attn_local", mc
+        )
+    if cfg.parallel_residual:
+        f, _ = _ffn(p, h, cfg, kind, mc)
+        x = x + mix + f
+    else:
+        x = x + mix
+        h2 = norm(x, p["norm2"], cfg)
+        f, _ = _ffn(p, h2, cfg, kind, mc)
+        x = x + f
+    return x, cache

@@ -1,0 +1,109 @@
+"""Shared model components: norms, RoPE, embeddings, activations."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .params import ParamBuilder
+
+__all__ = [
+    "rms_norm",
+    "layer_norm",
+    "norm",
+    "init_norm",
+    "rope",
+    "init_embedding",
+    "embed",
+    "unembed",
+    "act_fn",
+    "soft_cap",
+]
+
+
+def init_norm(key, cfg: ModelConfig, name: str = "norm") -> tuple[dict, dict]:
+    pb = ParamBuilder(key, dtype=jnp.float32)  # norms kept in f32
+    init = "zeros" if cfg.gemma_norm else "ones"
+    pb.param("scale", (cfg.d_model,), ("embed_act",), init=init)
+    return pb.collect()
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, *, eps: float, plus_one: bool) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    s = (1.0 + scale) if plus_one else scale
+    return (y * s).astype(dt)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, *, eps: float) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps) * scale).astype(dt)
+
+
+def norm(x: jax.Array, p: dict, cfg: ModelConfig) -> jax.Array:
+    if cfg.norm_type == "layernorm":
+        return layer_norm(x, p["scale"], eps=cfg.norm_eps)
+    return rms_norm(x, p["scale"], eps=cfg.norm_eps, plus_one=cfg.gemma_norm)
+
+
+def rope(x: jax.Array, positions: jax.Array, *, theta: float) -> jax.Array:
+    """Rotary embedding. x: (..., S, H, D) or (..., S, D); positions (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq  # (..., S, half)
+    if x.ndim == ang.ndim + 1:  # head axis present
+        ang = ang[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def init_embedding(key, cfg: ModelConfig, dtype) -> tuple[dict, dict]:
+    pb = ParamBuilder(key, dtype=dtype)
+    pb.param("tok", (cfg.vocab_size, cfg.d_model), ("vocab", "embed"), scale=1.0)
+    if not cfg.tie_embeddings:
+        pb.param(
+            "out",
+            (cfg.d_model, cfg.vocab_size),
+            ("embed", "vocab"),
+            scale=cfg.d_model**-0.5,
+        )
+    return pb.collect()
+
+
+def embed(tokens: jax.Array, p: dict, cfg: ModelConfig) -> jax.Array:
+    x = jnp.take(p["tok"], tokens, axis=0)
+    if cfg.emb_scale:
+        x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+    return x
+
+
+def unembed(x: jax.Array, p: dict, cfg: ModelConfig) -> jax.Array:
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("...d,vd->...v", x, p["tok"])
+    else:
+        logits = jnp.einsum("...d,dv->...v", x, p["out"])
+    return soft_cap(logits, cfg.logit_soft_cap)
+
+
+def soft_cap(x: jax.Array, cap: float | None) -> jax.Array:
+    if cap is None:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+def act_fn(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return lambda v: jax.nn.gelu(v, approximate=True)
+    raise ValueError(f"unknown activation {name}")

@@ -1,0 +1,245 @@
+"""Model configuration schema covering all ten assigned architectures.
+
+One frozen dataclass describes dense/GQA transformers, MLA (DeepSeek),
+MoE (Mixtral/DeepSeek/Jamba), SSM (Mamba-2), hybrid interleaves (Jamba),
+and the modality-stub backbones (Chameleon VLM, MusicGen audio).
+
+Layer heterogeneity (Jamba's 1:7 attn:mamba, Gemma-3's 5:1 local:global,
+MoE-every-other) is expressed as a repeating *period* of layer kinds; the
+model scans over full periods with stacked parameters and unrolls the
+remainder — no wasted parameters, no traced branching.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+__all__ = ["ModelConfig", "LayerKind"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerKind:
+    """Static structure of one layer inside the repeating period."""
+
+    mixer: Literal["attn", "attn_local", "mamba"]
+    ffn: Literal["dense", "moe", "none"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                       # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+
+    # attention
+    attn_kind: str = "gqa"            # gqa | mla | none
+    rope_theta: float = 10000.0
+    sliding_window: int | None = None  # SWA width (mixtral, gemma3 locals)
+    global_every: int = 0             # gemma3: every k-th layer is global attn
+    qk_norm: bool = False             # chameleon, gemma3
+    parallel_residual: bool = False   # command-r
+    norm_type: str = "rmsnorm"        # rmsnorm | layernorm
+    gemma_norm: bool = False          # RMSNorm scale is (1 + w)
+    emb_scale: bool = False           # embed * sqrt(d_model)  (gemma)
+    tie_embeddings: bool = False
+    attn_bias: bool = False
+    norm_eps: float = 1e-6
+    act: str = "silu"                 # silu (SwiGLU) | gelu (GeGLU)
+    logit_soft_cap: float | None = None
+
+    # MLA (deepseek-v3)
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_rope_head_dim: int = 0
+    qk_nope_head_dim: int = 0
+    v_head_dim: int = 0
+
+    # MoE
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    experts_per_token: int = 0
+    moe_every: int = 0                # MoE on layers with idx % moe_every == moe_offset
+    moe_offset: int = 0
+    router_score: str = "softmax"     # softmax (mixtral/jamba) | sigmoid (dsv3)
+    routed_scaling: float = 1.0
+    capacity_factor: float = 1.25
+    aux_loss_weight: float = 0.0
+
+    # SSM (mamba-2 SSD)
+    ssm_state: int = 0
+    ssm_heads: int = 0
+    ssm_head_dim: int = 0
+    ssm_expand: int = 2
+    ssm_groups: int = 1
+    conv_width: int = 4
+    ssm_chunk: int = 64
+
+    # hybrid (jamba): attention at idx % attn_every == attn_offset
+    attn_every: int = 0
+    attn_offset: int = 0
+
+    # deepseek multi-token prediction
+    mtp_depth: int = 0
+    mtp_loss_weight: float = 0.3
+
+    # runtime
+    dtype: str = "bfloat16"
+    remat: bool = True
+    scan_layers: bool = True
+
+    # ---------------------------------------------------------------- kinds
+    def layer_kind(self, idx: int) -> LayerKind:
+        if self.attn_kind == "none":
+            mixer = "mamba"
+        elif self.attn_every:
+            mixer = "attn" if idx % self.attn_every == self.attn_offset else "mamba"
+        elif self.global_every:
+            mixer = (
+                "attn" if (idx + 1) % self.global_every == 0 else "attn_local"
+            )
+        elif self.sliding_window:
+            mixer = "attn_local"
+        else:
+            mixer = "attn"
+        if self.n_experts and self.moe_every:
+            ffn = "moe" if idx % self.moe_every == self.moe_offset else "dense"
+        elif self.n_experts:
+            ffn = "moe"
+        else:
+            ffn = "dense"
+        if ffn == "dense" and self.d_ff == 0:
+            ffn = "none"                       # pure-SSM layers have no FFN
+        return LayerKind(mixer=mixer, ffn=ffn)
+
+    @property
+    def period(self) -> int:
+        """Length of the repeating layer-kind pattern."""
+        import math
+
+        p = 1
+        if self.attn_every:
+            p = math.lcm(p, self.attn_every)
+        if self.global_every:
+            p = math.lcm(p, self.global_every)
+        if self.n_experts and self.moe_every:
+            p = math.lcm(p, self.moe_every)
+        return p
+
+    @property
+    def n_periods(self) -> int:
+        return self.n_layers // self.period
+
+    @property
+    def n_remainder(self) -> int:
+        return self.n_layers % self.period
+
+    def period_kinds(self) -> tuple[LayerKind, ...]:
+        return tuple(self.layer_kind(i) for i in range(self.period))
+
+    def remainder_kinds(self) -> tuple[LayerKind, ...]:
+        start = self.n_periods * self.period
+        return tuple(self.layer_kind(start + i) for i in range(self.n_remainder))
+
+    # --------------------------------------------------------------- derived
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Eligible for long_500k decode (see DESIGN.md skip list)."""
+        if self.attn_kind == "none":
+            return True
+        if self.attn_every:           # hybrid: mostly SSM
+            return True
+        if self.global_every:         # gemma3 local:global
+            return True
+        if self.sliding_window:       # bounded-window KV
+            return True
+        return False
+
+    def n_params(self) -> int:
+        """Approximate parameter count (embeddings + blocks)."""
+        d = self.d_model
+        total = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        for i in range(self.n_layers):
+            kind = self.layer_kind(i)
+            if kind.mixer == "mamba":
+                di, g, ns, nh = (
+                    self.d_inner,
+                    self.ssm_groups,
+                    self.ssm_state,
+                    self.ssm_heads,
+                )
+                total += d * (2 * di + 2 * g * ns + nh) + di * d + di
+            elif self.attn_kind == "mla":
+                qk = self.qk_nope_head_dim + self.qk_rope_head_dim
+                total += d * self.q_lora_rank
+                total += self.q_lora_rank * self.n_heads * qk
+                total += d * (self.kv_lora_rank + self.qk_rope_head_dim)
+                total += self.kv_lora_rank * self.n_heads * (
+                    self.qk_nope_head_dim + self.v_head_dim
+                )
+                total += self.n_heads * self.v_head_dim * d
+            else:
+                total += d * self.head_dim * (self.n_heads + 2 * self.n_kv_heads)
+                total += self.n_heads * self.head_dim * d
+            if kind.ffn == "moe":
+                total += d * self.n_experts  # router
+                total += 3 * d * self.d_ff * (self.n_experts + self.n_shared_experts)
+            else:
+                ff = self.d_ff if kind.ffn == "dense" else 0
+                total += 3 * d * ff
+        return total
+
+    def n_active_params(self) -> int:
+        """Active parameters per token (MoE: only routed-to experts)."""
+        if not self.n_experts:
+            return self.n_params()
+        d = self.d_model
+        total = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        for i in range(self.n_layers):
+            kind = self.layer_kind(i)
+            if kind.mixer == "mamba":
+                di, g, ns, nh = (
+                    self.d_inner,
+                    self.ssm_groups,
+                    self.ssm_state,
+                    self.ssm_heads,
+                )
+                total += d * (2 * di + 2 * g * ns + nh) + di * d + di
+            elif self.attn_kind == "mla":
+                qk = self.qk_nope_head_dim + self.qk_rope_head_dim
+                total += d * self.q_lora_rank
+                total += self.q_lora_rank * self.n_heads * qk
+                total += d * (self.kv_lora_rank + self.qk_rope_head_dim)
+                total += self.kv_lora_rank * self.n_heads * (
+                    self.qk_nope_head_dim + self.v_head_dim
+                )
+                total += self.n_heads * self.v_head_dim * d
+            else:
+                total += d * self.head_dim * (self.n_heads + 2 * self.n_kv_heads)
+                total += self.n_heads * self.head_dim * d
+            if kind.ffn == "moe":
+                total += d * self.n_experts
+                total += 3 * d * self.d_ff * (
+                    self.experts_per_token + self.n_shared_experts
+                )
+            else:
+                total += 3 * d * self.d_ff
+        return total
+
+    def validate(self) -> None:
+        assert self.n_layers >= 1 and self.d_model >= 1
+        if self.attn_kind != "none":
+            assert self.n_heads % max(self.n_kv_heads, 1) == 0
+        if self.n_experts:
+            assert self.experts_per_token >= 1
+        if self.attn_every or self.global_every or (self.n_experts and self.moe_every):
+            assert self.n_layers >= self.period

@@ -1,0 +1,258 @@
+"""Mamba-2 (SSD — state-space duality) mixer, chunked and decode forms.
+
+Training/prefill uses the chunked SSD algorithm (arXiv:2405.21060): a
+quadratic intra-chunk term plus an inter-chunk state recurrence carried by
+``lax.scan`` — O(S·Q) work, O(S/Q) sequential steps. Decode carries the
+(H, N, P) SSM state and a (width-1) conv tail; cost per token is O(1) in
+context length, which is what makes the long_500k cells runnable for the
+SSM/hybrid architectures (DESIGN.md skip list).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .common import rms_norm
+from .config import ModelConfig
+from .params import ParamBuilder
+
+__all__ = [
+    "init_mamba",
+    "mamba_forward",
+    "mamba_decode",
+    "init_mamba_cache",
+    "ssd_chunked",
+    "ssd_sequential",
+]
+
+
+def init_mamba(key, cfg: ModelConfig, dtype) -> tuple[dict, dict]:
+    pb = ParamBuilder(key, dtype=dtype)
+    d = cfg.d_model
+    di = cfg.d_inner
+    g, n, nh = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = di + 2 * g * n
+    proj = 2 * di + 2 * g * n + nh
+    pb.param("w_in", (d, proj), ("embed", "mlp"), scale=d**-0.5)
+    pb.param("conv_w", (cfg.conv_width, conv_dim), ("conv", "mlp"), scale=0.5)
+    pb.param("conv_b", (conv_dim,), ("mlp",), init="zeros")
+    pb.param("a_log", (nh,), ("unsharded",), init="zeros")       # A = -exp(a_log)
+    pb.param("dt_bias", (nh,), ("unsharded",), init="zeros")
+    pb.param("d_skip", (nh,), ("unsharded",), init="ones")
+    pb.param("out_norm", (di,), ("mlp",), init="ones")
+    pb.param("w_out", (di, d), ("mlp", "embed"), scale=di**-0.5)
+    return pb.collect()
+
+
+# --------------------------------------------------------------------------
+# SSD core
+# --------------------------------------------------------------------------
+def ssd_chunked(
+    x: jax.Array,    # (B, S, H, P) — already dt-independent inputs
+    dt: jax.Array,   # (B, S, H) positive step sizes
+    a: jax.Array,    # (H,) negative decay rates
+    bmat: jax.Array,  # (B, S, G, N)
+    cmat: jax.Array,  # (B, S, G, N)
+    *,
+    chunk: int,
+    init_state: jax.Array | None = None,   # (B, H, N, P)
+) -> tuple[jax.Array, jax.Array]:
+    """Chunked SSD. Returns (y (B,S,H,P), final_state (B,H,N,P)). f32 math."""
+    b, s, h, p = x.shape
+    g, n = bmat.shape[2], bmat.shape[3]
+    rep = h // g
+    q = chunk
+    assert s % q == 0, (s, q)
+    nc = s // q
+
+    xf = x.astype(jnp.float32).reshape(b, nc, q, h, p)
+    dtf = dt.astype(jnp.float32).reshape(b, nc, q, h)
+    bh = jnp.repeat(bmat.astype(jnp.float32), rep, axis=2).reshape(b, nc, q, h, n)
+    ch = jnp.repeat(cmat.astype(jnp.float32), rep, axis=2).reshape(b, nc, q, h, n)
+
+    da = dtf * a.astype(jnp.float32)              # (b, nc, q, h), negative
+    da_cs = jnp.cumsum(da, axis=2)
+
+    # intra-chunk (quadratic) term
+    diff = da_cs[:, :, :, None, :] - da_cs[:, :, None, :, :]   # (b,nc,qi,qj,h)
+    ii = jnp.arange(q)
+    causal = ii[:, None] >= ii[None, :]
+    lmat = jnp.where(causal[None, None, :, :, None], jnp.exp(diff), 0.0)
+    scores = jnp.einsum("bcihn,bcjhn->bcijh", ch, bh) * lmat
+    y = jnp.einsum("bcijh,bcjh,bcjhp->bcihp", scores, dtf, xf)
+
+    # chunk-final states
+    decay_to_end = jnp.exp(da_cs[:, :, -1:, :] - da_cs)        # (b,nc,q,h)
+    states = jnp.einsum(
+        "bcjhn,bcjh,bcjhp->bchnp", bh, dtf * decay_to_end, xf
+    )
+    chunk_decay = jnp.exp(da_cs[:, :, -1, :])                  # (b,nc,h)
+
+    # inter-chunk recurrence
+    s0 = (
+        jnp.zeros((b, h, n, p), jnp.float32)
+        if init_state is None
+        else init_state.astype(jnp.float32)
+    )
+
+    def body(prev, inp):
+        st, dec = inp              # (b,h,n,p), (b,h)
+        return st + prev * dec[:, :, None, None], prev
+
+    final, prevs = lax.scan(
+        body,
+        s0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    prevs = prevs.transpose(1, 0, 2, 3, 4)       # (b, nc, h, n, p) state entering chunk
+
+    y_off = jnp.einsum(
+        "bcihn,bchnp,bcih->bcihp", ch, prevs, jnp.exp(da_cs)
+    )
+    out = (y + y_off).reshape(b, s, h, p)
+    return out.astype(x.dtype), final
+
+
+def ssd_sequential(x, dt, a, bmat, cmat, *, init_state=None):
+    """Token-by-token reference recurrence (oracle for tests)."""
+    b, s, h, p = x.shape
+    g, n = bmat.shape[2], bmat.shape[3]
+    rep = h // g
+    bh = jnp.repeat(bmat.astype(jnp.float32), rep, axis=2)
+    ch = jnp.repeat(cmat.astype(jnp.float32), rep, axis=2)
+    xf, dtf = x.astype(jnp.float32), dt.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+    s0 = (
+        jnp.zeros((b, h, n, p), jnp.float32)
+        if init_state is None
+        else init_state.astype(jnp.float32)
+    )
+
+    def body(state, inp):
+        xt, dtt, bt, ct = inp      # (b,h,p), (b,h), (b,h,n), (b,h,n)
+        state = state * jnp.exp(dtt * af)[:, :, None, None] + jnp.einsum(
+            "bhn,bh,bhp->bhnp", bt, dtt, xt
+        )
+        yt = jnp.einsum("bhn,bhnp->bhp", ct, state)
+        return state, yt
+
+    xs = (
+        xf.transpose(1, 0, 2, 3),
+        dtf.transpose(1, 0, 2),
+        bh.transpose(1, 0, 2, 3),
+        ch.transpose(1, 0, 2, 3),
+    )
+    final, ys = lax.scan(body, s0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), final
+
+
+# --------------------------------------------------------------------------
+# full mixer layer
+# --------------------------------------------------------------------------
+def _split_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    di, g, n, nh = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : 2 * di + 2 * g * n]
+    dt = zxbcdt[..., 2 * di + 2 * g * n :]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, bias: jax.Array) -> jax.Array:
+    """Depthwise causal conv along seq: xbc (B,S,C), w (width, C)."""
+    width = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc, shape=xbc.shape).astype(jnp.float32)
+    for i in range(width):
+        out = out + pad[:, i : i + xbc.shape[1], :].astype(jnp.float32) * w[i].astype(
+            jnp.float32
+        )
+    return jax.nn.silu(out + bias.astype(jnp.float32)).astype(xbc.dtype)
+
+
+def mamba_forward(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    make_cache: bool = False,
+):
+    """Full-sequence Mamba-2 mixer. Returns (out, cache|None)."""
+    b, s, d = x.shape
+    di, g, n, nh = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    hd = di // nh
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, p["w_in"])
+    z, xbc_pre, dt = _split_proj(cfg, zxbcdt)
+    xbc = _causal_conv(xbc_pre, p["conv_w"], p["conv_b"])
+    xs = xbc[..., :di].reshape(b, s, nh, hd)
+    bmat = xbc[..., di : di + g * n].reshape(b, s, g, n)
+    cmat = xbc[..., di + g * n :].reshape(b, s, g, n)
+    dtp = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+
+    chunk = min(cfg.ssm_chunk, s)
+    while s % chunk:
+        chunk -= 1
+    y, state = ssd_chunked(xs, dtp, a, bmat, cmat, chunk=chunk)
+    y = y + xs * p["d_skip"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(b, s, di)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    y = rms_norm(y, p["out_norm"], eps=cfg.norm_eps, plus_one=False)
+    out = jnp.einsum("bsk,kd->bsd", y, p["w_out"])
+    cache = None
+    if make_cache:
+        # conv tail: last (width-1) pre-activation inputs
+        tail = xbc_pre[:, -(cfg.conv_width - 1) :, :]
+        cache = {"state": state.astype(x.dtype), "conv": tail}
+    return out, cache
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype):
+    di, g, n, nh = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    hd = di // nh
+    return {
+        "state": jnp.zeros((batch, nh, n, hd), dtype),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, di + 2 * g * n), dtype),
+    }
+
+
+def mamba_decode(p: dict, x: jax.Array, cache: dict, cfg: ModelConfig):
+    """One-token decode: O(1) state update. x: (B, 1, d)."""
+    b = x.shape[0]
+    di, g, n, nh = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    hd = di // nh
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, p["w_in"])
+    z, xbc_new, dt = _split_proj(cfg, zxbcdt)
+
+    # conv over cached tail + new input
+    window = jnp.concatenate([cache["conv"], xbc_new], axis=1)  # (B, width, C)
+    w = p["conv_w"].astype(jnp.float32)
+    conv = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32), w)
+    xbc = jax.nn.silu(conv + p["conv_b"].astype(jnp.float32)).astype(x.dtype)
+
+    xs = xbc[:, :di].reshape(b, nh, hd)
+    bmat = xbc[:, di : di + g * n].reshape(b, g, n)
+    cmat = xbc[:, di + g * n :].reshape(b, g, n)
+    rep = nh // g
+    bh = jnp.repeat(bmat.astype(jnp.float32), rep, axis=1)
+    ch = jnp.repeat(cmat.astype(jnp.float32), rep, axis=1)
+    dtp = jax.nn.softplus(
+        dt[:, 0].astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+    )
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+
+    state = cache["state"].astype(jnp.float32)
+    state = state * jnp.exp(dtp * a)[:, :, None, None] + jnp.einsum(
+        "bhn,bh,bhp->bhnp", bh, dtp, xs.astype(jnp.float32)
+    )
+    y = jnp.einsum("bhn,bhnp->bhp", ch, state)
+    y = y + xs.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(b, 1, di).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    y = rms_norm(y, p["out_norm"], eps=cfg.norm_eps, plus_one=False)
+    out = jnp.einsum("bsk,kd->bsd", y, p["w_out"])
+    cache = {
+        "state": state.astype(cache["state"].dtype),
+        "conv": window[:, 1:, :],
+    }
+    return out, cache

@@ -1,0 +1,29 @@
+"""Gated MLPs: SwiGLU (llama/yi/mixtral/...) and GeGLU (gemma)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import act_fn
+from .config import ModelConfig
+from .params import ParamBuilder
+
+__all__ = ["init_mlp", "mlp_apply"]
+
+
+def init_mlp(key, cfg: ModelConfig, dtype, d_ff: int | None = None) -> tuple[dict, dict]:
+    pb = ParamBuilder(key, dtype=dtype)
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    pb.param("w_gate", (d, ff), ("embed", "mlp"), scale=d**-0.5)
+    pb.param("w_up", (d, ff), ("embed", "mlp"), scale=d**-0.5)
+    pb.param("w_down", (ff, d), ("mlp", "embed"), scale=ff**-0.5)
+    return pb.collect()
+
+
+def mlp_apply(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    act = act_fn(cfg.act)
+    h = act(jnp.einsum("...d,df->...f", x, p["w_gate"])) * jnp.einsum(
+        "...d,df->...f", x, p["w_up"]
+    )
+    return jnp.einsum("...f,fd->...d", h, p["w_down"])

@@ -1,0 +1,283 @@
+"""Decoder-only LM assembly: embeddings, scanned layer stack, prefill, decode.
+
+Layers are grouped into repeating *periods* (config.period_kinds); full
+periods run under ``lax.scan`` with parameters stacked on a leading
+"layers" axis (compile size O(period), not O(n_layers)), the remainder is
+unrolled. ``jax.checkpoint`` on the scan body gives per-period activation
+rematerialization for training.
+
+DeepSeek's multi-token prediction (MTP) is a single extra block combining
+the final hidden state with the next token's embedding (depth-1 MTP as in
+arXiv:2412.19437); enabled via ``cfg.mtp_depth``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .blocks import (
+    MeshContext,
+    init_layer,
+    init_layer_cache,
+    layer_decode,
+    layer_forward,
+)
+from .common import embed, init_embedding, init_norm, norm, unembed
+from .config import ModelConfig
+from .params import ParamBuilder
+
+__all__ = ["init_model", "forward", "prefill", "decode_step", "init_caches", "mtp_logits"]
+
+
+def _stack_trees(trees: list) -> Any:
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _mark_layer_axes(axes: Any) -> Any:
+    """Prefix a 'layers' logical axis onto every stacked leaf."""
+    return jax.tree.map(
+        lambda a: ("layers",) + a,
+        axes,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(e, (str, type(None))) for e in x),
+    )
+
+
+def init_model(cfg: ModelConfig, key: jax.Array, dtype=None) -> tuple[dict, dict]:
+    """Returns (params, logical_axes) trees."""
+    cfg.validate()
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    pb = ParamBuilder(key, dtype=dtype)
+    params: dict = {}
+    axes: dict = {}
+    params["embed"], axes["embed"] = init_embedding(pb.fork(), cfg, dtype)
+
+    kinds = cfg.period_kinds()
+    if cfg.n_periods:
+        reps_p, reps_a = [], []
+        for _ in range(cfg.n_periods):
+            lp, la = {}, {}
+            for j, kind in enumerate(kinds):
+                lp[f"pos{j}"], la[f"pos{j}"] = init_layer(pb.fork(), cfg, kind, dtype)
+            reps_p.append(lp)
+            reps_a.append(la)
+        params["blocks"] = _stack_trees(reps_p)
+        axes["blocks"] = _mark_layer_axes(reps_a[0])
+
+    tail_p, tail_a = {}, {}
+    for j, kind in enumerate(cfg.remainder_kinds()):
+        tail_p[f"t{j}"], tail_a[f"t{j}"] = init_layer(pb.fork(), cfg, kind, dtype)
+    if tail_p:
+        params["tail"] = tail_p
+        axes["tail"] = tail_a
+
+    params["final_norm"], axes["final_norm"] = init_norm(pb.fork(), cfg)
+
+    if cfg.mtp_depth:
+        mp, ma = {}, {}
+        mp["norm_h"], ma["norm_h"] = init_norm(pb.fork(), cfg)
+        mp["norm_e"], ma["norm_e"] = init_norm(pb.fork(), cfg)
+        pb2 = ParamBuilder(pb.fork(), dtype=dtype)
+        pb2.param(
+            "w",
+            (2 * cfg.d_model, cfg.d_model),
+            ("embed", "embed_act"),
+            scale=(2 * cfg.d_model) ** -0.5,
+        )
+        mp["proj"], ma["proj"] = pb2.collect()
+        mp["layer"], ma["layer"] = init_layer(
+            pb.fork(), cfg, cfg.layer_kind(cfg.n_layers - 1), dtype
+        )
+        params["mtp"] = mp
+        axes["mtp"] = ma
+    return params, axes
+
+
+# --------------------------------------------------------------------------
+# forward (training) and prefill
+# --------------------------------------------------------------------------
+def _run_stack(
+    params: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    cfg: ModelConfig,
+    mc: MeshContext,
+    *,
+    make_cache: bool,
+):
+    kinds = cfg.period_kinds()
+    aux = jnp.zeros((), jnp.float32)
+    caches = {}
+
+    if cfg.n_periods and "blocks" in params:
+        # Sequence-parallel residual stream: constrain the scan carry (the
+        # activation saved for backward) to be seq-sharded — Megatron-SP,
+        # the knob that fits the 4k-train cells in HBM (EXPERIMENTS §Perf).
+        def sp(x):
+            if mc.mesh is not None and mc.act_seq_axis is not None:
+                spec = jax.sharding.PartitionSpec(
+                    mc.batch_axes if mc.batch_axes else None, mc.act_seq_axis, None
+                )
+                return lax.with_sharding_constraint(
+                    x, jax.sharding.NamedSharding(mc.mesh, spec)
+                )
+            return x
+
+        def body(carry, block_p):
+            x, aux = carry
+            cs = {}
+            for j, kind in enumerate(kinds):
+                x, c, a = layer_forward(
+                    block_p[f"pos{j}"], x, positions, cfg, kind, mc,
+                    make_cache=make_cache,
+                )
+                if make_cache:
+                    cs[f"pos{j}"] = c
+                aux = aux + a
+            # the carry is what scan saves for backward — keep it seq-sharded
+            return (sp(x), aux), (cs if make_cache else 0)
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        (x, aux), ys = lax.scan(body, (sp(x), aux), params["blocks"])
+        if make_cache:
+            caches["blocks"] = ys
+
+    for j, kind in enumerate(cfg.remainder_kinds()):
+        x, c, a = layer_forward(
+            params["tail"][f"t{j}"], x, positions, cfg, kind, mc,
+            make_cache=make_cache,
+        )
+        if make_cache:
+            caches.setdefault("tail", {})[f"t{j}"] = c
+        aux = aux + a
+    return x, aux, caches
+
+
+def forward(
+    params: dict,
+    tokens: jax.Array,
+    cfg: ModelConfig,
+    mc: MeshContext | None = None,
+):
+    """Training forward: (B, S) tokens -> (logits (B,S,V), aux_loss, h_final)."""
+    mc = mc or MeshContext()
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x = embed(tokens, params["embed"], cfg)
+    x, aux, _ = _run_stack(params, x, positions, cfg, mc, make_cache=False)
+    h = norm(x, params["final_norm"], cfg)
+    return unembed(h, params["embed"], cfg), aux, x
+
+
+def mtp_logits(
+    params: dict,
+    tokens: jax.Array,
+    h_final: jax.Array,
+    cfg: ModelConfig,
+    mc: MeshContext | None = None,
+):
+    """Depth-1 MTP head: predict token t+2 from (h_t, emb(token_{t+1}))."""
+    mc = mc or MeshContext()
+    mp = params["mtp"]
+    b, s = tokens.shape
+    h = norm(h_final[:, : s - 1], mp["norm_h"], cfg)
+    e = norm(embed(tokens[:, 1:], params["embed"], cfg), mp["norm_e"], cfg)
+    hm = jnp.einsum("bsd,dk->bsk", jnp.concatenate([h, e], axis=-1), mp["proj"]["w"])
+    positions = jnp.broadcast_to(
+        jnp.arange(s - 1, dtype=jnp.int32)[None], (b, s - 1)
+    )
+    kind = cfg.layer_kind(cfg.n_layers - 1)
+    hm, _, aux = layer_forward(mp["layer"], hm, positions, cfg, kind, mc)
+    hm = norm(hm, params["final_norm"], cfg)
+    return unembed(hm, params["embed"], cfg), aux
+
+
+# --------------------------------------------------------------------------
+# serving
+# --------------------------------------------------------------------------
+def init_caches(cfg: ModelConfig, batch: int, capacity: int, dtype=None):
+    """Zeroed cache pytree matching the stacked/remainder layer layout.
+
+    Attention caches have local capacity ``capacity`` (callers divide by the
+    number of sequence shards when the cache is seq-sharded).
+    """
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    kinds = cfg.period_kinds()
+    caches = {}
+    if cfg.n_periods:
+        reps = []
+        for _ in range(cfg.n_periods):
+            reps.append(
+                {
+                    f"pos{j}": init_layer_cache(cfg, kind, batch, capacity, dtype)
+                    for j, kind in enumerate(kinds)
+                }
+            )
+        caches["blocks"] = _stack_trees(reps)
+    tail = {
+        f"t{j}": init_layer_cache(cfg, kind, batch, capacity, dtype)
+        for j, kind in enumerate(cfg.remainder_kinds())
+    }
+    if tail:
+        caches["tail"] = tail
+    return caches
+
+
+def prefill(
+    params: dict,
+    tokens: jax.Array,
+    cfg: ModelConfig,
+    mc: MeshContext | None = None,
+):
+    """Process a prompt; returns (last-position logits, caches)."""
+    mc = mc or MeshContext()
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x = embed(tokens, params["embed"], cfg)
+    x, _, caches = _run_stack(params, x, positions, cfg, mc, make_cache=True)
+    h = norm(x[:, -1:], params["final_norm"], cfg)
+    return unembed(h, params["embed"], cfg), caches
+
+
+def decode_step(
+    params: dict,
+    token: jax.Array,       # (B, 1) current input token
+    t: jax.Array,           # scalar position of this token
+    caches: dict,
+    cfg: ModelConfig,
+    mc: MeshContext | None = None,
+):
+    """One decode step; returns (logits (B,1,V), new caches)."""
+    mc = mc or MeshContext()
+    x = embed(token, params["embed"], cfg)
+    kinds = cfg.period_kinds()
+    new_caches = {}
+
+    if cfg.n_periods and "blocks" in params:
+
+        def body(x, xs):
+            block_p, block_c = xs
+            new_c = {}
+            for j, kind in enumerate(kinds):
+                x, c = layer_decode(
+                    block_p[f"pos{j}"], x, t, block_c[f"pos{j}"], cfg, kind, mc
+                )
+                new_c[f"pos{j}"] = c
+            return x, new_c
+
+        x, ys = lax.scan(body, x, (params["blocks"], caches["blocks"]))
+        new_caches["blocks"] = ys
+
+    for j, kind in enumerate(cfg.remainder_kinds()):
+        x, c = layer_decode(
+            params["tail"][f"t{j}"], x, t, caches["tail"][f"t{j}"], cfg, kind, mc
+        )
+        new_caches.setdefault("tail", {})[f"t{j}"] = c
+
+    h = norm(x, params["final_norm"], cfg)
+    return unembed(h, params["embed"], cfg), new_caches

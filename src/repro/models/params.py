@@ -1,0 +1,211 @@
+"""Parameter initialization with logical-axis sharding metadata.
+
+Minimal functional "module system": builders initialize nested param dicts
+while recording a parallel tree of logical-axis tuples. A rules table maps
+logical axes onto mesh axes (MaxText-style), giving NamedShardings for
+pjit in/out shardings — this is where DP/FSDP/TP/EP/SP policy lives.
+
+The FSDP rule realizes the paper's C1 (assembled storage): parameters and
+optimizer state are stored *sharded* over the data axes ("one canonical
+copy") and gathered on use, instead of replicated ("scattered") — the
+Z / Z^T algebra at the parameter level (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+__all__ = [
+    "ParamBuilder",
+    "ShardingRules",
+    "RULES_TP_FSDP",
+    "RULES_TP_DP",
+    "RULES_SINGLE",
+    "logical_to_spec",
+    "tree_shardings",
+    "tree_specs",
+]
+
+
+# logical axis -> mesh axis (or tuple of mesh axes, or None = replicated)
+ShardingRules = dict[str, Any]
+
+# Production profile: TP over "model"; FSDP ("assembled" parameter storage,
+# paper C1) over ("pod","data") applied to the embed axis of weight matrices;
+# experts over "model" (EP); batch over ("pod","data"); decode-time KV
+# sequence over "model" (flash-decode SP).
+RULES_TP_FSDP: ShardingRules = {
+    "batch": ("pod", "data"),
+    "embed": ("pod", "data"),      # FSDP shard dim of params
+    "embed_act": None,             # activations: d_model unsharded
+    "heads": "model",
+    "kv_heads": "model",
+    "qk": None,
+    "mlp": "model",
+    "vocab": "model",
+    "experts": "model",
+    "expert_mlp": None,
+    "seq": None,
+    "seq_shard": "model",          # SP constraint points / KV-cache seq
+    "layers": None,
+    "conv": None,
+    "state": None,
+    "lora": None,
+    "unsharded": None,
+}
+
+# Pure DP + TP (params replicated over data axes) — the "scattered" baseline.
+RULES_TP_DP: ShardingRules = dict(RULES_TP_FSDP, embed=None)
+
+# Single-device (smoke tests).
+RULES_SINGLE: ShardingRules = {k: None for k in RULES_TP_FSDP}
+
+
+def logical_to_spec(axes: tuple[str | None, ...], rules: ShardingRules, mesh: Mesh | None = None) -> P:
+    """Map a tuple of logical axis names to a PartitionSpec."""
+    out = []
+    for a in axes:
+        m = rules.get(a) if a else None
+        if m is None:
+            out.append(None)
+            continue
+        # drop mesh axes that don't exist (e.g. "pod" on single-pod meshes)
+        if mesh is not None:
+            names = mesh.axis_names
+            if isinstance(m, tuple):
+                m = tuple(x for x in m if x in names) or None
+                if m is not None and len(m) == 1:
+                    m = m[0]
+            elif m not in names:
+                m = None
+        out.append(m)
+    return P(*out)
+
+
+@dataclasses.dataclass
+class ParamBuilder:
+    """Initializes params and records their logical axes (flat, one level).
+
+    Init functions follow the convention ``init_x(key, ...) -> (params, axes)``
+    and nest children manually::
+
+        pb = ParamBuilder(key, dtype=jnp.bfloat16)
+        pb.param("wq", (d, h, hd), ("embed", "heads", "qk"), scale=d**-0.5)
+        params, axes = pb.collect()
+        params["ffn"], axes["ffn"] = init_ffn(pb.fork(), ...)
+    """
+
+    key: jax.Array
+    dtype: Any = jnp.float32
+    params: dict = dataclasses.field(default_factory=dict)
+    axes: dict = dataclasses.field(default_factory=dict)
+
+    def fork(self) -> jax.Array:
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+    def param(
+        self,
+        name: str,
+        shape: tuple[int, ...],
+        axes: tuple,
+        *,
+        scale: float | None = None,
+        init: str = "normal",
+    ) -> jax.Array:
+        if len(shape) != len(axes):
+            raise ValueError(f"{name}: shape {shape} vs axes {axes}")
+        if name in self.params:
+            raise KeyError(f"duplicate param {name}")
+        if init == "zeros":
+            v = jnp.zeros(shape, self.dtype)
+        elif init == "ones":
+            v = jnp.ones(shape, self.dtype)
+        else:
+            s = scale if scale is not None else 0.02
+            v = (jax.random.normal(self.fork(), shape, jnp.float32) * s).astype(
+                self.dtype
+            )
+        self.params[name] = v
+        self.axes[name] = tuple(axes)
+        return v
+
+    def collect(self) -> tuple[dict, dict]:
+        return self.params, self.axes
+
+
+def tree_specs(axes_tree: Any, rules: ShardingRules, mesh: Mesh | None = None) -> Any:
+    """Logical-axes tree -> PartitionSpec tree."""
+    return jax.tree.map(
+        lambda a: logical_to_spec(a, rules, mesh),
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x
+        ),
+    )
+
+
+def tree_shardings(axes_tree: Any, rules: ShardingRules, mesh: Mesh) -> Any:
+    """Logical-axes tree -> NamedSharding tree for pjit in/out shardings."""
+    specs = tree_specs(axes_tree, rules, mesh)
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def _spec_with_fallback(
+    shape: tuple[int, ...], axes: tuple, rules: ShardingRules, mesh: Mesh
+) -> P:
+    """Rules -> spec, dropping mesh axes that don't divide the dimension.
+
+    A 1-kv-head cache can't shard over a 16-way model axis; Mixtral's 8
+    experts can't EP over 16 shards — such dims fall back to replication
+    (or to a divisible prefix of a tuple assignment). Each mesh axis is
+    used at most once per spec.
+    """
+    used: set[str] = set()
+    parts: list = []
+    names = set(mesh.axis_names)
+    for dim, a in zip(shape, axes):
+        m = rules.get(a) if a else None
+        if m is None:
+            parts.append(None)
+            continue
+        cand = m if isinstance(m, tuple) else (m,)
+        cand = tuple(x for x in cand if x in names and x not in used)
+        # drop trailing axes until the product divides the dimension
+        while cand:
+            prod = 1
+            for x in cand:
+                prod *= mesh.shape[x]
+            if dim % prod == 0:
+                break
+            cand = cand[:-1]
+        if not cand:
+            parts.append(None)
+        else:
+            used.update(cand)
+            parts.append(cand if len(cand) > 1 else cand[0])
+    return P(*parts)
+
+
+def tree_shardings_for(
+    abstract_tree: Any, axes_tree: Any, rules: ShardingRules, mesh: Mesh
+) -> Any:
+    """Shape-aware shardings: like tree_shardings but checks divisibility."""
+    return jax.tree.map(
+        lambda leaf, a: NamedSharding(
+            mesh, _spec_with_fallback(tuple(leaf.shape), a, rules, mesh)
+        ),
+        abstract_tree,
+        axes_tree,
+        is_leaf=lambda x: hasattr(x, "shape"),
+    )

@@ -1,0 +1,5 @@
+"""repro.roofline — compiled-artifact analysis: loop-aware HLO accounting."""
+from .analysis import CollectiveStats, parse_collectives, roofline_report
+from .hlo_model import HloStats, analyze_hlo
+
+__all__ = ["CollectiveStats", "HloStats", "analyze_hlo", "parse_collectives", "roofline_report"]

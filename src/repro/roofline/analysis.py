@@ -1,0 +1,151 @@
+"""Three-term roofline from compiled dry-run artifacts (no hardware needed).
+
+    compute term    = HLO_FLOPs_per_chip / peak_FLOP/s
+    memory term     = HLO_bytes_per_chip / HBM_bw
+    collective term = link_bytes_per_chip / ICI_bw
+
+``compiled.cost_analysis()`` supplies per-chip FLOPs and bytes (the SPMD
+module is the per-device program). Collective bytes are NOT in
+cost_analysis: we parse the post-optimization HLO and charge each
+collective its ring-algorithm link traffic:
+
+    all-gather      (g-1)/g * result_bytes
+    reduce-scatter  (g-1)/g * operand_bytes
+    all-reduce      2(g-1)/g * operand_bytes
+    all-to-all      (g-1)/g * operand_bytes
+    collective-permute  operand_bytes
+
+with g parsed from replica_groups (both explicit {{...}} and iota
+[n,g]<=[N] forms).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+import numpy as np
+
+from ..core.fom import TPU_V5E, TpuSpec
+
+__all__ = ["CollectiveStats", "parse_collectives", "roofline_report"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+# result-type token, e.g. f32[8,128]{1,0} or (f32[8],f32[8]) for tuples
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|\S+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_SRC_TGT_RE = re.compile(r"source_target_pairs=\{")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict[str, int]
+    raw_bytes: dict[str, float]      # sum of result sizes per op kind
+    link_bytes: dict[str, float]     # ring-model per-device link traffic
+
+    @property
+    def total_link_bytes(self) -> float:
+        return sum(self.link_bytes.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    counts: dict[str, int] = {}
+    raw: dict[str, float] = {}
+    link: dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if m is None:
+            continue
+        type_str, kind = m.group(1), m.group(2)
+        size = _type_bytes(type_str)
+        if size == 0:
+            continue
+        # group size
+        g = None
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            g = len(gm.group(1).split(","))
+        else:
+            gm = _GROUPS_IOTA_RE.search(line)
+            if gm:
+                g = int(gm.group(2))
+        if g is None or g <= 1:
+            g = 2 if kind == "collective-permute" else 1
+        if kind == "all-reduce":
+            lb = 2 * (g - 1) / g * size
+        elif kind == "all-gather":
+            lb = (g - 1) / g * size       # size = gathered result
+        elif kind == "reduce-scatter":
+            lb = (g - 1) * size           # size = scattered result; operand = g*size
+        elif kind == "all-to-all":
+            lb = (g - 1) / g * size
+        else:  # collective-permute
+            lb = size
+        counts[kind] = counts.get(kind, 0) + 1
+        raw[kind] = raw.get(kind, 0.0) + size
+        link[kind] = link.get(kind, 0.0) + lb
+    return CollectiveStats(counts=counts, raw_bytes=raw, link_bytes=link)
+
+
+def roofline_report(
+    cost: dict[str, Any],
+    coll: CollectiveStats,
+    *,
+    spec: TpuSpec = TPU_V5E,
+    chips: int = 1,
+    model_flops: float | None = None,
+) -> dict[str, Any]:
+    """Build the §Roofline record for one (arch, shape, mesh) cell."""
+    flops = float(cost.get("flops", 0.0))
+    if flops < 0:
+        flops = 0.0
+    bytes_acc = float(cost.get("bytes accessed", 0.0))
+    t_compute = flops / spec.peak_flops
+    t_memory = bytes_acc / spec.hbm_bandwidth
+    t_coll = coll.total_link_bytes / spec.ici_bandwidth
+    terms = {"compute_s": t_compute, "memory_s": t_memory, "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)  # type: ignore[arg-type]
+    bound = max(terms.values())
+    out = {
+        **terms,
+        "dominant": dominant,
+        "hlo_flops_per_chip": flops,
+        "hlo_bytes_per_chip": bytes_acc,
+        "link_bytes_per_chip": coll.total_link_bytes,
+        "collective_counts": coll.counts,
+        "collective_link_bytes": coll.link_bytes,
+        "roofline_bound_s": bound,
+    }
+    if model_flops is not None and flops > 0:
+        out["model_flops"] = model_flops
+        out["model_flops_per_chip"] = model_flops / chips
+        out["useful_flop_fraction"] = model_flops / chips / flops
+        # fraction of the peak the dominant-term-limited execution achieves
+        ideal_t = model_flops / chips / spec.peak_flops
+        out["roofline_fraction"] = ideal_t / bound if bound > 0 else 0.0
+    return out

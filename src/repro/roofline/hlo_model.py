@@ -1,0 +1,273 @@
+"""Loop-aware HLO analysis: flops / bytes / collectives with trip counts.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE — for
+scan-over-layers models that understates flops, bytes and collective
+traffic by the trip count (verified empirically; see EXPERIMENTS.md
+§Dry-run). This module re-derives the roofline inputs from the
+post-optimization HLO text, multiplying each computation by the product of
+trip counts of the while-loops it sits under:
+
+  * dot flops: 2 * numel(result) * prod(contracted lhs dims), shapes from a
+    per-computation symbol table;
+  * collective link bytes: ring-model per op (as roofline/analysis.py),
+    times loop multiplier;
+  * HBM-traffic proxy: sum of materialized buffer sizes (every non-trivial
+    instruction's output, i.e. post-fusion buffers) x2 for write+read,
+    times loop multiplier.
+
+Trip counts come from the loop-condition computation's comparison constant
+(scan lowers to ``while(cond: i < N)``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+__all__ = ["analyze_hlo", "HloStats"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_INSTR = re.compile(r"^\s+(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\([^()]*\)|\S+)\s+([\w\-]+)")
+_INSTR_START = re.compile(r"^\s+(?:ROOT\s+)?%[\w.\-]+\s*=\s")
+_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+_WHILE = re.compile(r"while\(.*?condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CALLS = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
+_COND_BODY = re.compile(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CONST = re.compile(r"constant\((\d+)\)")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+_SKIP_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "add-dependency", "iota",
+}
+
+_COLLECTIVES = {
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-reduce-start", "all-gather-start",
+    "collective-permute-start",
+}
+
+
+def _shape_info(type_str: str) -> tuple[int, list[int], str]:
+    """(total bytes, dims of first array, dtype of first array)."""
+    total = 0
+    first_dims: list[int] = []
+    first_dt = ""
+    for m in _SHAPE.finditer(type_str):
+        dt, dims_s = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = [int(d) for d in dims_s.split(",")] if dims_s else []
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+        if not first_dt:
+            first_dims, first_dt = dims, dt
+    return total, first_dims, first_dt
+
+
+@dataclasses.dataclass
+class _Comp:
+    name: str
+    dot_flops: float = 0.0
+    buffer_bytes: float = 0.0
+    coll_link_bytes: dict = dataclasses.field(default_factory=dict)
+    coll_counts: dict = dataclasses.field(default_factory=dict)
+    whiles: list = dataclasses.field(default_factory=list)   # (cond, body)
+    calls: list = dataclasses.field(default_factory=list)
+    max_const: int = 1
+
+
+@dataclasses.dataclass
+class HloStats:
+    flops: float
+    hbm_bytes: float
+    coll_link_bytes: dict[str, float]
+    coll_counts: dict[str, float]
+    n_whiles: int
+    trip_counts: list[int]
+
+    @property
+    def total_link_bytes(self) -> float:
+        return sum(self.coll_link_bytes.values())
+
+
+def _join_wrapped_lines(hlo: str) -> list[str]:
+    """Merge physical continuation lines into logical instruction lines.
+
+    Scheduled HLO wraps long tuple types (with /*index=N*/ comments) across
+    lines; a logical line starts at a computation header, an instruction
+    definition, or a closing brace.
+    """
+    out: list[str] = []
+    for line in hlo.splitlines():
+        starts_new = (
+            not line
+            or not line[0].isspace()             # header / close / metadata
+            or _INSTR_START.match(line) is not None
+        )
+        if starts_new or not out:
+            out.append(line)
+        else:
+            out[-1] += " " + line.strip()
+    return out
+
+
+def _parse_computations(hlo: str) -> dict[str, _Comp]:
+    comps: dict[str, _Comp] = {}
+    cur: _Comp | None = None
+    shapes: dict[str, list[int] | None] = {}
+    for line in _join_wrapped_lines(hlo):
+        if line and not line[0].isspace():
+            m = _COMP_HDR.match(line)
+            if m and "{" in line:
+                cur = _Comp(m.group(1))
+                comps[cur.name] = cur
+                shapes = {}
+                # parameter shapes from the header signature
+                for pm in re.finditer(r"([\w.\-]+):\s*((?:\([^)]*\))|[\w\[\],]+)", line):
+                    _, dims, _ = _shape_info(pm.group(2))
+                    shapes[pm.group(1)] = dims
+            continue
+        if cur is None:
+            continue
+        mi = _INSTR.match(line)
+        if not mi:
+            # track trip-count constants even on bare constant lines
+            for c in _CONST.finditer(line):
+                cur.max_const = max(cur.max_const, int(c.group(1)))
+            # whiles may still be detectable on unmatched lines
+            if " while(" in line:
+                wm = _COND_BODY.search(line)
+                if wm:
+                    cur.whiles.append((wm.group(1), wm.group(2)))
+            continue
+        name, type_str, op = mi.group(1), mi.group(2), mi.group(3)
+        size, dims, _ = _shape_info(type_str)
+        shapes[name] = dims
+
+        for c in _CONST.finditer(line):
+            cur.max_const = max(cur.max_const, int(c.group(1)))
+
+        wm = _COND_BODY.search(line)
+        if op == "while" and wm:
+            cur.whiles.append((wm.group(1), wm.group(2)))
+            continue
+        cm = _CALLS.search(line)
+        if cm:
+            cur.calls.append(cm.group(1))
+
+        if op == "dot":
+            # operands: dot(%a, %b) — lhs shape from symbol table
+            om = re.search(r"\bdot\(\s*%?([\w.\-]+)", line)
+            k = 1
+            if om:
+                lhs = shapes.get(om.group(1))
+                cd = _CONTRACT.search(line)
+                if lhs and cd and cd.group(1):
+                    for d in cd.group(1).split(","):
+                        di = int(d)
+                        if di < len(lhs):
+                            k *= lhs[di]
+            numel = 1
+            for d in dims:
+                numel *= d
+            cur.dot_flops += 2.0 * numel * k
+        elif op in _COLLECTIVES:
+            kind = op.replace("-start", "")
+            g = None
+            gm = _GROUPS_RE.search(line)
+            if gm:
+                g = len(gm.group(1).split(","))
+            else:
+                gm = _GROUPS_IOTA_RE.search(line)
+                if gm:
+                    g = int(gm.group(2))
+            if g is None or g <= 1:
+                g = 2 if kind == "collective-permute" else 1
+            if kind == "all-reduce":
+                lb = 2 * (g - 1) / g * size
+            elif kind == "all-gather":
+                lb = (g - 1) / g * size
+            elif kind == "reduce-scatter":
+                lb = (g - 1) * size
+            elif kind == "all-to-all":
+                lb = (g - 1) / g * size
+            else:
+                lb = size
+            cur.coll_link_bytes[kind] = cur.coll_link_bytes.get(kind, 0.0) + lb
+            cur.coll_counts[kind] = cur.coll_counts.get(kind, 0) + 1
+
+        if op not in _SKIP_OPS:
+            cur.buffer_bytes += size
+    return comps
+
+
+def analyze_hlo(hlo: str, entry: str | None = None) -> HloStats:
+    comps = _parse_computations(hlo)
+    if not comps:
+        return HloStats(0, 0, {}, {}, 0, [])
+    entry_name = entry
+    if entry_name is None:
+        m = re.search(r"^ENTRY\s+%?([\w.\-]+)", hlo, re.MULTILINE)
+        entry_name = m.group(1) if m else next(iter(comps))
+
+    flops = 0.0
+    bytes_ = 0.0
+    coll_b: dict[str, float] = {}
+    coll_c: dict[str, float] = {}
+    n_whiles = 0
+    trips: list[int] = []
+    seen: set[tuple[str, float]] = set()
+
+    def visit(name: str, mult: float, depth: int = 0):
+        nonlocal flops, bytes_, n_whiles
+        if depth > 32 or name not in comps:
+            return
+        c = comps[name]
+        key = (name, mult)
+        if key in seen:            # same computation at same multiplier
+            return
+        seen.add(key)
+        flops_local = c.dot_flops * mult
+        nonloc_add(flops_local)
+        bytes_add(c.buffer_bytes * mult)
+        for k, v in c.coll_link_bytes.items():
+            coll_b[k] = coll_b.get(k, 0.0) + v * mult
+        for k, v in c.coll_counts.items():
+            coll_c[k] = coll_c.get(k, 0.0) + v * mult
+        for cal in c.calls:
+            visit(cal, mult, depth + 1)
+        for cond, body in c.whiles:
+            trip = comps[cond].max_const if cond in comps else 1
+            n_whiles += 1
+            trips.append(trip)
+            visit(body, mult * max(trip, 1), depth + 1)
+            visit(cond, mult * max(trip, 1), depth + 1)
+
+    def nonloc_add(v):
+        nonlocal flops
+        flops += v
+
+    def bytes_add(v):
+        nonlocal bytes_
+        bytes_ += v
+
+    visit(entry_name, 1.0)
+    return HloStats(
+        flops=flops,
+        hbm_bytes=2.0 * bytes_,     # write + ~one read per buffer
+        coll_link_bytes=coll_b,
+        coll_counts=coll_c,
+        n_whiles=n_whiles,
+        trip_counts=sorted(trips, reverse=True)[:12],
+    )

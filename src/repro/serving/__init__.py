@@ -1,0 +1,4 @@
+"""repro.serving — batched prefill/decode engine over the model zoo."""
+from .engine import Engine, ServeConfig
+
+__all__ = ["Engine", "ServeConfig"]

