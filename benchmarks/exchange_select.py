@@ -22,13 +22,14 @@ from jax.sharding import PartitionSpec as P
 from functools import partial
 from repro.comms.exchange import EXCHANGES
 
-mesh = jax.make_mesh((8,), ("r",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.compat import make_mesh, shard_map
+mesh = make_mesh((8,), ("r",))
 out = {}
 for chunk in [16, 256, 4096, 65536]:
     x = jnp.zeros((64, chunk), jnp.float32)
     row = {}
     for name, fn in EXCHANGES.items():
-        f = jax.jit(jax.shard_map(partial(fn, axis_name="r"), mesh=mesh,
+        f = jax.jit(shard_map(partial(fn, axis_name="r"), mesh=mesh,
                                   in_specs=P("r"), out_specs=P("r")))
         f(x).block_until_ready()
         t0 = time.perf_counter()

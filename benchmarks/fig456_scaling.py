@@ -22,6 +22,7 @@ _CHILD = r"""
 import os, sys, json, time
 os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={RANKS}"
 import jax, numpy as np, jax.numpy as jnp
+from repro.compat import make_mesh
 from repro.comms.topology import ProcessGrid, factor3
 from repro.core.distributed import build_dist_problem, dist_cg
 from repro.core.fom import nekbone_flops_per_iter
@@ -31,7 +32,7 @@ n = DEGREE
 local = LOCAL
 n_iter = 50
 grid = ProcessGrid(factor3(ranks))
-mesh = jax.make_mesh((ranks,), ("ranks",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((ranks,), ("ranks",))
 prob = build_dist_problem(n, grid, local, lam=1.0, dtype=jnp.float32)
 rng = np.random.default_rng(0)
 b = jnp.asarray(rng.standard_normal((ranks, prob.m3)), jnp.float32)

@@ -1,0 +1,70 @@
+"""Preconditioned-solve benchmark: iterations-to-tolerance and FOM.
+
+Beyond the NekBone 100-fixed-iteration benchmark: solve λ-screened deformed
+Poisson problems to ``tol=1e-6`` with each preconditioner and report
+
+  * iterations to tolerance (the preconditioner-quality signal),
+  * wall time and FOM GFLOPS (NekBone flop model × iterations / time) —
+    Chebyshev pays extra operator applies per iteration, so fewer
+    iterations must buy back the per-iteration cost to win wall-clock.
+
+Degrees follow the paper's sweep corners: N ∈ {3, 7, 9, 15} (quick: {3, 7}),
+deform=0.15 so Jacobi has a non-trivial diagonal to chew on.
+"""
+from __future__ import annotations
+
+import time
+
+PRECONDS = ("none", "jacobi", "chebyshev")
+
+
+def _solve_case(n: int, shape, lam: float, tol: float):
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import build_problem, cg_assembled, poisson_assembled
+    from repro.core.fom import nekbone_flops_per_iter
+    from repro.core.precond import make_preconditioner
+
+    prob = build_problem(n, shape, lam=lam, deform=0.15, dtype=jnp.float32)
+    a = poisson_assembled(prob)
+    rng = np.random.default_rng(0)
+    b = jnp.asarray(rng.standard_normal(prob.n_global), jnp.float32)
+    e = prob.mesh.n_elements
+
+    out = []
+    for kind in PRECONDS:
+        pc, info = make_preconditioner(kind, prob, a, degree=2)
+        solve = jax.jit(
+            lambda bb, pc=pc: cg_assembled(a, bb, n_iter=500, tol=tol, precond=pc)
+        )
+        res = solve(b)
+        jax.block_until_ready(res.x)
+        t0 = time.perf_counter()
+        res = solve(b)
+        jax.block_until_ready(res.x)
+        dt = time.perf_counter() - t0
+        iters = int(res.iterations)
+        fom = nekbone_flops_per_iter(e, n) * iters / dt / 1e9
+        out.append((kind, iters, dt, fom, info.lmax))
+    return prob.n_global, out
+
+
+def main(quick: bool = True):
+    degrees = [3, 7] if quick else [3, 7, 9, 15]
+    shapes = {3: (4, 4, 4), 7: (4, 4, 4), 9: (3, 3, 3), 15: (2, 2, 2)}
+    rows = ["precond,N,dofs,lam,kind,iters_to_tol,time_s,fom_gflops,cheb_lmax"]
+    for n in degrees:
+        for lam in (0.1, 1.0):
+            dofs, cases = _solve_case(n, shapes[n], lam, tol=1e-6)
+            for kind, iters, dt, fom, lmax in cases:
+                rows.append(
+                    f"precond,{n},{dofs},{lam},{kind},{iters},{dt:.4f},"
+                    f"{fom:.2f},{'' if lmax is None else f'{lmax:.3f}'}"
+                )
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main(quick=False)))

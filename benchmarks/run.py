@@ -6,6 +6,7 @@
   fig456   — multi-rank scaling + throughput      (paper Figs. 4-6)
   table2   — peak FOM / weak scaling / NekBone-vs-hipBone (paper Table 2)
   exchange — routing-algorithm selection          (paper §MPI Communication)
+  precond  — PCG iterations-to-tolerance + FOM    (beyond the benchmark)
 """
 import argparse
 import sys
@@ -19,7 +20,14 @@ def main() -> None:
     args = ap.parse_args()
     quick = not args.full
 
-    from benchmarks import exchange_select, fig3_operator, fig456_scaling, table1_blocks, table2_fom
+    from benchmarks import (
+        exchange_select,
+        fig3_operator,
+        fig456_scaling,
+        precond_solve,
+        table1_blocks,
+        table2_fom,
+    )
 
     sections = {
         "fig3": fig3_operator.main,
@@ -27,6 +35,7 @@ def main() -> None:
         "fig456": fig456_scaling.main,
         "table2": table2_fom.main,
         "exchange": exchange_select.main,
+        "precond": precond_solve.main,
     }
     failures = 0
     for name, fn in sections.items():

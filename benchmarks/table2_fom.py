@@ -18,13 +18,14 @@ _CHILD = r"""
 import os, json, time
 os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={RANKS}"
 import jax, numpy as np, jax.numpy as jnp
+from repro.compat import make_mesh
 from repro.comms.topology import ProcessGrid, factor3
 from repro.core.distributed import build_dist_problem, dist_cg, dist_cg_scattered
 from repro.core.fom import nekbone_flops_per_iter, cg_iter_bytes, nekbone_iter_bytes
 
 ranks, n, local, n_iter = RANKS, 7, (2, 2, 2), 50
 grid = ProcessGrid(factor3(ranks))
-mesh = jax.make_mesh((ranks,), ("ranks",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((ranks,), ("ranks",))
 prob = build_dist_problem(n, grid, local, lam=1.0, dtype=jnp.float32)
 rng = np.random.default_rng(0)
 b = jnp.asarray(rng.standard_normal((ranks, prob.m3)), jnp.float32)

@@ -88,8 +88,9 @@ def main() -> None:
         from repro.training.train_step import make_loss_fn
         from repro.training.optimizer import clip_by_global_norm
 
-        mesh = jax.make_mesh((args.ranks,), ("dp",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.compat import make_mesh, shard_map
+
+        mesh = make_mesh((args.ranks,), ("dp",))
         loss_fn = make_loss_fn(cfg)
         grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
         residual = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params) \
@@ -114,7 +115,7 @@ def main() -> None:
                 return g, m, res
 
             res_spec = jax.tree.map(lambda _: P("dp"), residual) if args.compress else None
-            fn = jax.shard_map(
+            fn = shard_map(
                 shard_fn, mesh=mesh,
                 in_specs=(pspec, P("dp"),
                           (jax.tree.map(lambda _: P("dp"), residual)

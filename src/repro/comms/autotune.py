@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from ..compat import shard_map
 from .exchange import EXCHANGES
 
 __all__ = ["autotune_exchange"]
@@ -51,7 +52,7 @@ def autotune_exchange(
     for name in names:
         fn = EXCHANGES[name]
         shmapped = jax.jit(
-            jax.shard_map(
+            shard_map(
                 functools.partial(fn, axis_name=axis_name),
                 mesh=mesh,
                 in_specs=P(axis_name),

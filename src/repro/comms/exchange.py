@@ -36,7 +36,9 @@ __all__ = [
 
 
 def _axis_size(axis_name) -> int:
-    return lax.axis_size(axis_name)
+    from ..compat import axis_size
+
+    return axis_size(axis_name)
 
 
 def exchange_all_to_all(buf: jax.Array, axis_name: str) -> jax.Array:

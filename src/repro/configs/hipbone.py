@@ -18,6 +18,13 @@ class PoissonConfig:
     lam: float = 1.0
     n_iter: int = 100                   # NekBone's fixed CG iteration count
     dtype: str = "float32"
+    precond: str = "none"               # "none" | "jacobi" | "chebyshev"
+    cheb_degree: int = 2                # Chebyshev polynomial degree
+    tol: float | None = None            # None = fixed n_iter (NekBone mode)
+
+    def __post_init__(self):
+        if self.precond not in ("none", "jacobi", "chebyshev"):
+            raise ValueError(f"unknown precond {self.precond!r}")
 
     def dofs_per_rank(self) -> int:
         n = self.n_degree
@@ -30,6 +37,13 @@ CONFIGS = {
     "hipbone_n7_large": PoissonConfig("hipbone_n7_large", 7, (16, 16, 16)),
     "hipbone_n15": PoissonConfig("hipbone_n15", 15, (4, 4, 4)),   # ~216k DOF/rank
     "hipbone_n15_large": PoissonConfig("hipbone_n15_large", 15, (8, 8, 8)),
+    # beyond-the-benchmark: production-style preconditioned solves to tol
+    "hipbone_n7_pcg": PoissonConfig(
+        "hipbone_n7_pcg", 7, (8, 8, 8), precond="chebyshev", tol=1e-6
+    ),
+    "hipbone_n15_pcg": PoissonConfig(
+        "hipbone_n15_pcg", 15, (4, 4, 4), precond="chebyshev", tol=1e-6
+    ),
 }
 
 REDUCED = PoissonConfig("hipbone_reduced", 3, (2, 2, 2))

@@ -32,6 +32,15 @@ from .operator import (
     poisson_assembled,
     poisson_scattered,
 )
+from .precond import (
+    PRECOND_KINDS,
+    assembled_diagonal,
+    chebyshev_apply,
+    jacobi_apply,
+    local_operator_diagonal,
+    make_preconditioner,
+    power_lambda_max,
+)
 from .sem import derivative_matrix, gll_nodes_weights, reference_element
 
 __all__ = [k for k in dir() if not k.startswith("_")]

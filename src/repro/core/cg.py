@@ -1,11 +1,18 @@
-"""Conjugate Gradient (Algorithm 1) in hipBone-assembled and NekBone-scattered form.
+"""Preconditioned Conjugate Gradient in hipBone-assembled and NekBone-scattered form.
 
-The assembled solver follows hipBone's fusion schedule exactly:
+One PCG implementation serves every solver path; plain CG is PCG with the
+identity preconditioner, and in that case the preconditioner stage folds
+away so the compiled program is exactly the seed's CG (same reductions,
+same fusion schedule):
+
   * one fused pass computes ``r_{j+1} = r_j - α A p`` AND accumulates
     ``r_{j+1}·r_{j+1}`` (paper: "Fusing this reduction with the update of r
     avoids the need for a separate kernel to read the vector r again");
-  * the AXPY ``x += α p`` carries no data dependence on that reduction, so
-    XLA may overlap the cross-device psum with it — the paper's
+  * with a preconditioner, a second fused pass computes ``z = M⁻¹ r`` AND
+    accumulates ``r·z`` (the same streaming trick applied to the PCG
+    inner product — kernels/streams.py has the Pallas version);
+  * the AXPY ``x += α p`` carries no data dependence on the reductions, so
+    XLA may overlap the cross-device psums with it — the paper's
     allreduce-hiding trick, expressed as dataflow;
   * inner products on assembled vectors are plain (unweighted) dots.
 
@@ -13,9 +20,10 @@ The scattered baseline replicates NekBone: vectors of length N_L, weighted
 inner products reading the extra W vector, and a combined ZZ^T
 gather-scatter inside the operator.
 
-Both run a fixed iteration count (NekBone uses 100) under ``lax.scan`` so a
-single compiled program covers the whole benchmark, or until tolerance with
-``lax.while_loop`` when ``tol`` is given.
+Iteration control: a fixed count (NekBone uses 100) runs under ``lax.scan``
+so a single compiled program covers the whole benchmark; passing ``tol``
+switches to ``lax.while_loop`` stopping at ‖r‖ ≤ tol·‖r₀‖ (capped at
+``n_iter``), with ``CGResult.iterations`` reporting the count actually run.
 """
 from __future__ import annotations
 
@@ -49,35 +57,63 @@ def _dot(a: jax.Array, b: jax.Array, w: jax.Array | None) -> jax.Array:
     return jnp.vdot(a * w, b)
 
 
-def _cg(
+def _safe_div(a, b):
+    # fixed-iteration CG (NekBone runs exactly 100) keeps iterating after
+    # convergence; guard 0/0 so x simply freezes at the solution
+    return jnp.where(b != 0, a / jnp.where(b != 0, b, 1), 0.0)
+
+
+def _pcg(
     operator: Callable[[jax.Array], jax.Array],
     b: jax.Array,
     x0: jax.Array | None,
     *,
     n_iter: int,
+    tol: float | None,
     weight: jax.Array | None,
     psum: Callable[[jax.Array], jax.Array] | None,
+    precond: Callable[[jax.Array], jax.Array] | None,
     fused_update: Callable[..., tuple[jax.Array, jax.Array]] | None,
+    fused_precond_dot: Callable[..., tuple[jax.Array, jax.Array]] | None,
     record_history: bool,
 ) -> CGResult:
+    if isinstance(precond, str):
+        raise TypeError(
+            f"precond must be a callable z = M⁻¹r (or None), got the string "
+            f"{precond!r}; build one with core.precond.make_preconditioner "
+            f"(string kinds are only accepted by distributed.dist_cg)"
+        )
+    if fused_precond_dot is not None and precond is None:
+        raise ValueError(
+            "fused_precond_dot given without precond; pass the (unfused) "
+            "apply as precond too — it gates the PCG recurrence"
+        )
     allsum = psum or (lambda v: v)
     upd = fused_update or fused_residual_update
     x = jnp.zeros_like(b) if x0 is None else x0
 
+    def apply_precond(r_vec):
+        """z = M⁻¹r and the local part of r·z, in one fused pass if given."""
+        if precond is None:
+            raise AssertionError("apply_precond called without a preconditioner")
+        if fused_precond_dot is not None:
+            return fused_precond_dot(r_vec)
+        z_vec = precond(r_vec)
+        return z_vec, _dot(r_vec, z_vec, weight)
+
     r = b - operator(x)
-    p = r
-    rdotr = allsum(_dot(r, r, weight))
+    rdotr0 = allsum(_dot(r, r, weight))
+    if precond is None:
+        z, rz = r, rdotr0
+    else:
+        z, rz_local = apply_precond(r)
+        rz = allsum(rz_local)
+    p = z
 
-    def _safe_div(a, b):
-        # fixed-iteration CG (NekBone runs exactly 100) keeps iterating after
-        # convergence; guard 0/0 so x simply freezes at the solution
-        return jnp.where(b != 0, a / jnp.where(b != 0, b, 1), 0.0)
-
-    def body(carry, _):
-        x, r, p, rdotr = carry
+    def step(x, r, p, rz, rdotr):
         ap = operator(p)
         pap = allsum(_dot(p, ap, weight))
-        alpha = _safe_div(rdotr, pap)
+        alpha = _safe_div(rz, pap)
         if weight is None:
             # hipBone fusion: r-update + local reduction in one pass...
             r_new, rr_local = upd(r, ap, alpha)
@@ -87,18 +123,54 @@ def _cg(
         # ...and x-update independent of the psum -> overlappable allreduce.
         x_new = x + alpha * p
         rdotr_new = allsum(rr_local)
-        beta = _safe_div(rdotr_new, rdotr)
-        p_new = r_new + beta * p
-        return (x_new, r_new, p_new, rdotr_new), rdotr_new
+        if precond is None:
+            z_new, rz_new = r_new, rdotr_new
+        else:
+            z_new, rz_local = apply_precond(r_new)
+            rz_new = allsum(rz_local)
+        beta = _safe_div(rz_new, rz)
+        p_new = z_new + beta * p
+        return x_new, r_new, p_new, rz_new, rdotr_new
 
-    (x, r, p, rdotr), hist = jax.lax.scan(
-        body, (x, r, p, rdotr), None, length=n_iter
+    if tol is None:
+        def body(carry, _):
+            x, r, p, rz, rdotr = carry
+            carry = step(x, r, p, rz, rdotr)
+            return carry, carry[-1]
+
+        (x, r, p, rz, rdotr), hist = jax.lax.scan(
+            body, (x, r, p, rz, rdotr0), None, length=n_iter
+        )
+        return CGResult(
+            x=x,
+            rdotr=rdotr,
+            iterations=jnp.asarray(n_iter),
+            rdotr_history=hist if record_history else None,
+        )
+
+    # tolerance mode: ‖r‖ ≤ tol·‖r₀‖, capped at n_iter; the history buffer
+    # (and its per-iteration scatter) only enters the carry when asked for
+    target = jnp.asarray(tol, rdotr0.dtype) ** 2 * rdotr0
+    hist0 = (jnp.zeros((n_iter,), rdotr0.dtype),) if record_history else ()
+
+    def cond(carry):
+        rdotr, k = carry[4], carry[5]
+        return (k < n_iter) & (rdotr > target)
+
+    def wbody(carry):
+        x, r, p, rz, rdotr, k = carry[:6]
+        x, r, p, rz, rdotr = step(x, r, p, rz, rdotr)
+        hist = (carry[6].at[k].set(rdotr),) if record_history else ()
+        return (x, r, p, rz, rdotr, k + 1) + hist
+
+    out = jax.lax.while_loop(
+        cond, wbody, (x, r, p, rz, rdotr0, jnp.asarray(0)) + hist0
     )
     return CGResult(
-        x=x,
-        rdotr=rdotr,
-        iterations=jnp.asarray(n_iter),
-        rdotr_history=hist if record_history else None,
+        x=out[0],
+        rdotr=out[4],
+        iterations=out[5],
+        rdotr_history=out[6] if record_history else None,
     )
 
 
@@ -108,19 +180,31 @@ def cg_assembled(
     x0: jax.Array | None = None,
     *,
     n_iter: int = 100,
+    tol: float | None = None,
     psum: Callable[[jax.Array], jax.Array] | None = None,
+    precond: Callable[[jax.Array], jax.Array] | None = None,
     fused_update: Callable[..., tuple[jax.Array, jax.Array]] | None = None,
+    fused_precond_dot: Callable[..., tuple[jax.Array, jax.Array]] | None = None,
     record_history: bool = False,
 ) -> CGResult:
-    """hipBone CG on assembled (length N_G) vectors; unweighted dots."""
-    return _cg(
+    """hipBone (P)CG on assembled (length N_G) vectors; unweighted dots.
+
+    ``precond``: optional z = M⁻¹r application (see core.precond); None
+    gives the seed's plain CG.  ``fused_precond_dot``: optional one-pass
+    (M⁻¹r, r·M⁻¹r) — the Pallas streaming fusion of the PCG inner product.
+    ``tol``: stop at ‖r‖ ≤ tol·‖r₀‖ instead of running n_iter iterations.
+    """
+    return _pcg(
         operator,
         b_g,
         x0,
         n_iter=n_iter,
+        tol=tol,
         weight=None,
         psum=psum,
+        precond=precond,
         fused_update=fused_update,
+        fused_precond_dot=fused_precond_dot,
         record_history=record_history,
     )
 
@@ -132,17 +216,22 @@ def cg_scattered(
     x0: jax.Array | None = None,
     *,
     n_iter: int = 100,
+    tol: float | None = None,
     psum: Callable[[jax.Array], jax.Array] | None = None,
+    precond: Callable[[jax.Array], jax.Array] | None = None,
     record_history: bool = False,
 ) -> CGResult:
-    """NekBone baseline CG on scattered (length N_L) vectors; weighted dots."""
-    return _cg(
+    """NekBone baseline (P)CG on scattered (length N_L) vectors; weighted dots."""
+    return _pcg(
         operator,
         b_l,
         x0,
         n_iter=n_iter,
+        tol=tol,
         weight=w_local,
         psum=psum,
+        precond=precond,
         fused_update=None,
+        fused_precond_dot=None,
         record_history=record_history,
     )

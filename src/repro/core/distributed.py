@@ -41,11 +41,27 @@ from jax.sharding import PartitionSpec as P
 
 from ..comms.halo import copy_exchange, sum_exchange
 from ..comms.topology import ProcessGrid
+from ..compat import shard_map
 from . import sem
-from .cg import CGResult, _cg
+from .cg import CGResult, _pcg
 from .operator import local_poisson
+from .precond import (
+    CHEB_SAFETY,
+    PRECOND_KINDS,
+    chebyshev_apply,
+    jacobi_apply,
+    local_operator_diagonal,
+    power_lambda_max,
+    seed_values,
+)
 
-__all__ = ["DistPoisson", "build_dist_problem", "dist_cg", "dist_cg_scattered"]
+__all__ = [
+    "DistPoisson",
+    "build_dist_problem",
+    "dist_cg",
+    "dist_cg_scattered",
+    "dist_lambda_max",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -265,25 +281,129 @@ def _apply_assembled(
     return box_h + box_i
 
 
+def _box_global_indices(prob: DistPoisson) -> np.ndarray:
+    """(R, m3) flat *global* DOF index of every padded-box slot (numpy).
+
+    Replica slots on different ranks map to the same global index, so any
+    function of this array is automatically replica-consistent.
+    """
+    n = prob.n_degree
+    bx, by, bz = prob.local_shape
+    mx, my, mz = prob.box_shape
+    px, py, _ = prob.grid.shape
+    gx_n, gy_n = px * bx * n + 1, py * by * n + 1
+    x, y, z = np.meshgrid(
+        np.arange(mx), np.arange(my), np.arange(mz), indexing="ij"
+    )
+    out = np.empty((prob.grid.size, prob.m3), np.int64)
+    for r in range(prob.grid.size):
+        ci, cj, ck = prob.grid.coords(r)
+        gidx = (ci * bx * n + x) + gx_n * (
+            (cj * by * n + y) + gy_n * (ck * bz * n + z)
+        )
+        out[r] = gidx.transpose(2, 1, 0).reshape(-1)
+    return out
+
+
+def _box_dinv(prob: DistPoisson, g1: jax.Array, w1: jax.Array) -> jax.Array:
+    """Inverse assembled diagonal in consistent padded-box storage:
+    Z_loc^T diag(S_L + λW) Z made consistent by one sum-exchange."""
+    dloc = local_operator_diagonal(g1, prob.d, prob.lam, w1)
+    box_diag = jax.ops.segment_sum(
+        dloc.reshape(-1),
+        jnp.asarray(prob.l2g.reshape(-1)),
+        num_segments=prob.m3,
+    )
+    box_diag = sum_exchange(
+        box_diag.reshape(prob.box_shape[::-1]), prob.grid, prob.axis_name
+    ).reshape(-1)
+    return 1.0 / box_diag
+
+
+def dist_lambda_max(
+    prob: DistPoisson,
+    mesh: jax.sharding.Mesh,
+    *,
+    power_iters: int = 12,
+    local_op: Callable[..., jax.Array] | None = None,
+    two_phase: bool = False,
+) -> float:
+    """Eagerly estimate λ_max(D⁻¹A) once at setup time (raw, no safety
+    factor).  Pass the result to ``dist_cg(..., lmax=...)`` so repeated
+    Chebyshev solves don't re-run the power iteration inside the compiled
+    program (keeps benchmark timings pure solve)."""
+    op = local_op or local_poisson
+    spec = P(prob.axis_name)
+    seed_boxes = jnp.asarray(seed_values(_box_global_indices(prob)), prob.dtype)
+
+    def shard_fn(g_s, w_s, mask_s, seed_s):
+        g1, w1, m1 = g_s[0], w_s[0], mask_s[0]
+        operator = lambda v: _apply_assembled(
+            prob, v, g1, w1, local_op=op, two_phase=two_phase
+        )
+        dinv = _box_dinv(prob, g1, w1)
+        mdot = lambda a, bb: jnp.vdot(a * m1, bb)
+        return power_lambda_max(
+            operator, dinv, seed_s[0],
+            iters=power_iters, dot=mdot,
+            psum=lambda v: lax.psum(v, prob.axis_name),
+        )
+
+    fn = shard_map(
+        shard_fn,
+        mesh=mesh,
+        in_specs=(spec, spec, spec, spec),
+        out_specs=P(),
+        # old jax's check_rep cannot type the power-iteration scan carry
+        # (sharded iterate + replicated psum-derived norm)
+        check_rep=False,
+    )
+    return float(jax.jit(fn)(prob.g, prob.w_local, prob.mask, seed_boxes))
+
+
 def dist_cg(
     prob: DistPoisson,
     mesh: jax.sharding.Mesh,
     b: jax.Array,
     *,
     n_iter: int = 100,
+    tol: float | None = None,
+    precond: str = "none",
+    cheb_degree: int = 2,
+    power_iters: int = 12,
+    lmax: float | None = None,
     local_op: Callable[..., jax.Array] | None = None,
     two_phase: bool = False,
     record_history: bool = False,
 ):
-    """Distributed hipBone CG. ``b``: (R, m3) sharded rhs (made consistent).
+    """Distributed hipBone (P)CG. ``b``: (R, m3) sharded rhs (made consistent).
 
-    Returns a jitted callable () -> CGResult-like tuple, plus the shard_map
-    step for dry-run lowering via ``.lower()``.
+    ``precond``: "none" | "jacobi" | "chebyshev".  The diagonal is
+    assembled in padded-box storage — local element diagonals gathered with
+    Z_loc^T then made consistent by one sum-exchange — so the Jacobi apply
+    is a pure elementwise scale (replicas stay consistent for free).  The
+    Chebyshev A-applies reuse the communication-hiding split operator, and
+    the power iteration for λ_max runs with replica-masked inner products;
+    its seed vector is a hash of *global* DOF indices, hence consistent
+    across replicas by construction.  Pass ``lmax`` (from
+    ``dist_lambda_max``) to skip the in-graph estimation — otherwise each
+    compiled solve re-runs the power iteration's operator applies.
+
+    Returns a jitted-callable partial () -> (x, rdotr, iterations, history),
+    also usable for dry-run lowering via ``jax.jit(run.func).lower(*run.args)``.
     """
+    if precond not in PRECOND_KINDS:
+        raise ValueError(f"unknown precond {precond!r}; choose from {PRECOND_KINDS}")
     op = local_op or local_poisson
     spec = P(prob.axis_name)
+    hist_len = n_iter
 
-    def shard_fn(b_s, g_s, w_s, mask_s):
+    need_power = precond == "chebyshev" and lmax is None
+    seed_boxes = jnp.asarray(
+        seed_values(_box_global_indices(prob)), prob.dtype
+    ) if need_power else jnp.zeros((prob.grid.size, 1), prob.dtype)
+
+    def shard_fn(b_s, g_s, w_s, mask_s, seed_s):
         b1, g1, w1, m1 = b_s[0], g_s[0], w_s[0], mask_s[0]
         # make rhs consistent (replicas hold true values)
         b1 = copy_exchange(
@@ -293,30 +413,59 @@ def dist_cg(
         operator = lambda v: _apply_assembled(
             prob, v, g1, w1, local_op=op, two_phase=two_phase
         )
-        res = _cg(
+        psum = lambda v: lax.psum(v, prob.axis_name)
+
+        pc = None
+        if precond != "none":
+            dinv = _box_dinv(prob, g1, w1)
+            if precond == "jacobi":
+                pc = jacobi_apply(dinv)
+            else:
+                if need_power:
+                    mdot = lambda a, bb: jnp.vdot(a * m1, bb)
+                    lam_top = power_lambda_max(
+                        operator, dinv, seed_s[0],
+                        iters=power_iters, dot=mdot, psum=psum,
+                    )
+                else:
+                    lam_top = jnp.asarray(lmax, b1.dtype)
+                pc = chebyshev_apply(
+                    operator, dinv, CHEB_SAFETY * lam_top, degree=cheb_degree
+                )
+
+        res = _pcg(
             operator,
             b1,
             None,
             n_iter=n_iter,
+            tol=tol,
             weight=m1,
-            psum=lambda v: lax.psum(v, prob.axis_name),
+            psum=psum,
+            precond=pc,
             fused_update=None,
+            fused_precond_dot=None,
             record_history=record_history,
         )
         hist = res.rdotr_history
         return (
             res.x[None],
             res.rdotr,
-            hist if hist is not None else jnp.zeros((n_iter,), b1.dtype),
+            jnp.asarray(res.iterations),
+            hist if hist is not None else jnp.zeros((hist_len,), b1.dtype),
         )
 
-    fn = jax.shard_map(
+    fn = shard_map(
         shard_fn,
         mesh=mesh,
-        in_specs=(spec, spec, spec, spec),
-        out_specs=(spec, P(), P()),
+        in_specs=(spec, spec, spec, spec, spec),
+        out_specs=(spec, P(), P(), P()),
+        # old jax's check_rep has no rule for while_loop (tol mode) and
+        # cannot type the power-iteration scan carry (in-graph chebyshev);
+        # keep the guard wherever it can actually run — its replicated
+        # outputs are psum-derived either way
+        check_rep=tol is None and not need_power,
     )
-    return functools.partial(fn, b, prob.g, prob.w_local, prob.mask)
+    return functools.partial(fn, b, prob.g, prob.w_local, prob.mask, seed_boxes)
 
 
 def dist_cg_scattered(
@@ -354,19 +503,22 @@ def dist_cg_scattered(
             s = op(x_l, g1, prob.d, 0.0, None)
             return gather_scatter(s) + prob.lam * x_l
 
-        res = _cg(
+        res = _pcg(
             operator,
             b1,
             None,
             n_iter=n_iter,
+            tol=None,
             weight=w1,
             psum=lambda v: lax.psum(v, prob.axis_name),
+            precond=None,
             fused_update=None,
+            fused_precond_dot=None,
             record_history=False,
         )
         return res.x[None], res.rdotr
 
-    fn = jax.shard_map(
+    fn = shard_map(
         shard_fn,
         mesh=mesh,
         in_specs=(spec, spec, spec),

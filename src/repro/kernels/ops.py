@@ -19,6 +19,8 @@ from .poisson import pick_block_e, poisson_local_pallas
 from .streams import (
     LANES,
     fused_axpy_dot_pallas,
+    fused_cheb_d_update_pallas,
+    fused_jacobi_dot_pallas,
     fused_xpay_pallas,
     weighted_dot_pallas,
 )
@@ -29,7 +31,11 @@ __all__ = [
     "fused_axpy_dot",
     "fused_xpay",
     "weighted_dot",
+    "fused_jacobi_dot",
+    "fused_cheb_d_update",
     "make_local_op",
+    "make_fused_jacobi_dot",
+    "make_fused_cheb_d_update",
 ]
 
 
@@ -126,6 +132,48 @@ def weighted_dot(
     b_p, _ = _pad_vec(b, LANES)
     br = _stream_block_rows(w_p.size)
     return weighted_dot_pallas(w_p, a_p, b_p, block_rows=br, interpret=interp)
+
+
+def fused_jacobi_dot(
+    dinv: jax.Array, r: jax.Array, *, interpret: bool | None = None
+) -> tuple[jax.Array, jax.Array]:
+    """One-pass (D⁻¹r, r·D⁻¹r) for arbitrary-length vectors (PCG z-stage)."""
+    interp = default_interpret() if interpret is None else interpret
+    shape = r.shape
+    d_p, n = _pad_vec(dinv, LANES)
+    r_p, _ = _pad_vec(r, LANES)
+    br = _stream_block_rows(r_p.size)
+    # padded tail: dinv pad is 0 so z and the r·z partials stay 0 there
+    z, rz = fused_jacobi_dot_pallas(d_p, r_p, block_rows=br, interpret=interp)
+    return z[:n].reshape(shape), rz
+
+
+def fused_cheb_d_update(
+    a: jax.Array,
+    c: jax.Array,
+    d: jax.Array,
+    r: jax.Array,
+    *,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """d ← a·d + c·r for arbitrary-length vectors (Chebyshev d-update)."""
+    interp = default_interpret() if interpret is None else interpret
+    shape = d.shape
+    d_p, n = _pad_vec(d, LANES)
+    r_p, _ = _pad_vec(r, LANES)
+    br = _stream_block_rows(d_p.size)
+    out = fused_cheb_d_update_pallas(a, c, d_p, r_p, block_rows=br, interpret=interp)
+    return out[:n].reshape(shape)
+
+
+def make_fused_jacobi_dot(dinv: jax.Array, *, interpret: bool | None = None):
+    """Adapter with cg_assembled's fused_precond_dot signature r -> (z, r·z)."""
+    return lambda r: fused_jacobi_dot(dinv, r, interpret=interpret)
+
+
+def make_fused_cheb_d_update(*, interpret: bool | None = None):
+    """Adapter with chebyshev_apply's fused_d_update signature (a, c, d, r)."""
+    return lambda a, c, d, r: fused_cheb_d_update(a, c, d, r, interpret=interpret)
 
 
 def make_local_op(*, block_e: int | None = None, interpret: bool | None = None):

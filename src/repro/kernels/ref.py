@@ -6,7 +6,14 @@ import jax.numpy as jnp
 
 from repro.core.operator import local_poisson
 
-__all__ = ["poisson_local_ref", "fused_axpy_dot_ref", "fused_xpay_ref", "weighted_dot_ref"]
+__all__ = [
+    "poisson_local_ref",
+    "fused_axpy_dot_ref",
+    "fused_xpay_ref",
+    "weighted_dot_ref",
+    "fused_jacobi_dot_ref",
+    "fused_cheb_d_update_ref",
+]
 
 
 def poisson_local_ref(
@@ -32,3 +39,18 @@ def weighted_dot_ref(w: jax.Array, a: jax.Array, b: jax.Array) -> jax.Array:
     return jnp.sum(
         w.astype(jnp.float32) * a.astype(jnp.float32) * b.astype(jnp.float32)
     )
+
+
+def fused_jacobi_dot_ref(
+    dinv: jax.Array, r: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """z = D⁻¹r and r·z — reference for the PCG preconditioner-stage fusion."""
+    z = dinv * r
+    return z, jnp.sum(r.astype(jnp.float32) * z.astype(jnp.float32))
+
+
+def fused_cheb_d_update_ref(
+    a: jax.Array, c: jax.Array, d: jax.Array, r: jax.Array
+) -> jax.Array:
+    """d ← a·d + c·r — reference for the Chebyshev direction update."""
+    return a * d + c * r

@@ -7,6 +7,12 @@ The paper's CG-iteration optimizations are streaming fusions:
   * ``fused_xpay``:      p = r + β·p  (the CG direction update).
   * ``weighted_dot``:    Σ w·a·b — NekBone-baseline weighted inner product
     (reads the extra weight stream, as the paper charges it).
+  * ``fused_jacobi_dot``: z = D⁻¹r  AND  Σ r·z in ONE pass — the same
+    streaming trick applied to the PCG preconditioner stage (the z vector
+    is produced and the r·z reduction taken without re-reading r).
+  * ``fused_cheb_d_update``: d = a·d + c·(D⁻¹·res) — the Chebyshev–Jacobi
+    direction update with the Jacobi scale folded in (three streams, two
+    SMEM scalars, one pass).
 
 TPU mapping: 1-D vectors are viewed as (rows, 128) lane tiles; the grid
 walks row blocks; scalar reductions accumulate into a (1, 1) output block
@@ -23,7 +29,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["fused_axpy_dot_pallas", "fused_xpay_pallas", "weighted_dot_pallas"]
+__all__ = [
+    "fused_axpy_dot_pallas",
+    "fused_xpay_pallas",
+    "weighted_dot_pallas",
+    "fused_jacobi_dot_pallas",
+    "fused_cheb_d_update_pallas",
+]
 
 LANES = 128
 DEFAULT_BLOCK_ROWS = 512  # 512x128 f32 tile = 256 KB per stream
@@ -36,11 +48,14 @@ def _axpy_dot_kernel(alpha_ref, r_ref, ap_ref, rnew_ref, acc_ref):
     ap = ap_ref[...]
     r_new = r - alpha * ap
     rnew_ref[...] = r_new
-    part = jnp.sum(r_new.astype(jnp.float32) * r_new.astype(jnp.float32))
+    # explicit f32 (not weak-typed literals): see _jacobi_dot_kernel
+    part = jnp.sum(
+        r_new.astype(jnp.float32) * r_new.astype(jnp.float32)
+    ).astype(jnp.float32)
 
     @pl.when(i == 0)
     def _init():
-        acc_ref[0, 0] = 0.0
+        acc_ref[0, 0] = jnp.float32(0.0)
 
     acc_ref[0, 0] += part
 
@@ -56,13 +71,38 @@ def _wdot_kernel(w_ref, a_ref, b_ref, acc_ref):
         w_ref[...].astype(jnp.float32)
         * a_ref[...].astype(jnp.float32)
         * b_ref[...].astype(jnp.float32)
+    ).astype(jnp.float32)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[0, 0] = jnp.float32(0.0)
+
+    acc_ref[0, 0] += part
+
+
+def _jacobi_dot_kernel(dinv_ref, r_ref, z_ref, acc_ref):
+    i = pl.program_id(0)
+    r = r_ref[...]
+    z = dinv_ref[...] * r
+    z_ref[...] = z
+    # explicit f32 throughout: weak-typed literals would become f64 when the
+    # host process runs with jax_enable_x64 (interpret-mode discharge does
+    # not weak-cast stores)
+    part = jnp.sum(r.astype(jnp.float32) * z.astype(jnp.float32)).astype(
+        jnp.float32
     )
 
     @pl.when(i == 0)
     def _init():
-        acc_ref[0, 0] = 0.0
+        acc_ref[0, 0] = jnp.float32(0.0)
 
     acc_ref[0, 0] += part
+
+
+def _cheb_d_kernel(a_ref, c_ref, d_ref, r_ref, out_ref):
+    a = a_ref[0, 0]
+    c = c_ref[0, 0]
+    out_ref[...] = a * d_ref[...] + c * r_ref[...]
 
 
 def _as_tiles(x: jax.Array) -> jax.Array:
@@ -167,3 +207,71 @@ def weighted_dot_pallas(
         interpret=interpret,
     )(w2, a2, b2)
     return acc[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def fused_jacobi_dot_pallas(
+    dinv: jax.Array,
+    r: jax.Array,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """(D⁻¹r, Σ r·D⁻¹r) in one pass — the PCG preconditioner-stage fusion."""
+    d2, r2 = _as_tiles(dinv), _as_tiles(r)
+    rows = r2.shape[0]
+    br = min(block_rows, rows)
+    if rows % br:
+        raise ValueError(f"rows={rows} not a multiple of block_rows={br}")
+    z, acc = pl.pallas_call(
+        _jacobi_dot_kernel,
+        grid=(rows // br,),
+        in_specs=[
+            pl.BlockSpec((br, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((br, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((br, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0), memory_space=pltpu.SMEM),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(r2.shape, r2.dtype),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(d2, r2)
+    return z.reshape(r.shape), acc[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def fused_cheb_d_update_pallas(
+    a: jax.Array,
+    c: jax.Array,
+    d: jax.Array,
+    r: jax.Array,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = True,
+) -> jax.Array:
+    """d ← a·d + c·r, one pass (Chebyshev direction update; two SMEM scalars)."""
+    d2, r2 = _as_tiles(d), _as_tiles(r)
+    rows = d2.shape[0]
+    br = min(block_rows, rows)
+    if rows % br:
+        raise ValueError(f"rows={rows} not a multiple of block_rows={br}")
+    a2 = jnp.asarray(a, d2.dtype).reshape(1, 1)
+    c2 = jnp.asarray(c, d2.dtype).reshape(1, 1)
+    out = pl.pallas_call(
+        _cheb_d_kernel,
+        grid=(rows // br,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((br, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((br, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(d2.shape, d2.dtype),
+        interpret=interpret,
+    )(a2, c2, d2, r2)
+    return out.reshape(d.shape)

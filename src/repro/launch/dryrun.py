@@ -140,6 +140,8 @@ def _analyse(lowered, compiled, *, chips, model_flops, extra=None):
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # old jax returns [dict], new a dict
+        cost = cost[0] if cost else {}
     try:
         hlo = compiled.as_text()
     except Exception:
@@ -342,7 +344,10 @@ def run_poisson_cell(name: str, mesh_kind: str) -> dict:
         (chips, m3), dtype, sharding=NamedSharding(mesh, P("ranks"))
     )
     t0 = time.time()
-    run = dist_cg(prob, mesh, b_in, n_iter=pc.n_iter)
+    run = dist_cg(
+        prob, mesh, b_in, n_iter=pc.n_iter, tol=pc.tol,
+        precond=pc.precond, cheb_degree=pc.cheb_degree,
+    )
     lowered = jax.jit(run.func).lower(*run.args)
     t_lower = time.time() - t0
     compiled = lowered.compile()

@@ -17,23 +17,26 @@ from __future__ import annotations
 import jax
 import numpy as np
 
+from ..compat import make_mesh
+
 __all__ = ["make_production_mesh", "flat_mesh", "axis_sizes"]
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes)
 
 
 def flat_mesh(mesh: jax.sharding.Mesh, name: str = "ranks") -> jax.sharding.Mesh:
-    """View the same devices as one flattened axis (Poisson process grid)."""
+    """View the same devices as one flattened axis (Poisson process grid).
+
+    Constructs the Mesh directly: jax.make_mesh would topology-reorder the
+    devices, breaking the rank->device correspondence with the production
+    mesh's (pod, data, model) flattening.
+    """
     devices = mesh.devices.reshape(-1)
-    return jax.sharding.Mesh(
-        devices, (name,), axis_types=(jax.sharding.AxisType.Auto,)
-    )
+    return jax.sharding.Mesh(devices, (name,))
 
 
 def axis_sizes(mesh: jax.sharding.Mesh) -> dict[str, int]:

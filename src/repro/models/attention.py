@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from ..compat import axis_size, pcast_varying
 from .common import rms_norm, rope
 from .config import ModelConfig
 from .params import ParamBuilder
@@ -395,7 +396,7 @@ def attn_decode(
     pos = jnp.full((b, 1), t, jnp.int32)
 
     if seq_axes:
-        n_shards = lax.axis_size(seq_axes)
+        n_shards = axis_size(seq_axes)
         shard_id = lax.axis_index(seq_axes)
     else:
         n_shards, shard_id = 1, 0
@@ -484,7 +485,7 @@ def attn_decode(
         # inside shard_map the body output varies across shards; the zero
         # init must be marked varying too (scan carry type invariant)
         init = jax.tree.map(
-            lambda a: lax.pcast(a, tuple(vary_axes), to="varying"), init
+            lambda a: pcast_varying(a, tuple(vary_axes)), init
         )
     carry, _ = lax.scan(body, init, jnp.arange(n_chunks))
 

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from ..compat import shard_map
 from .attention import attn_decode, attn_forward, init_attention, init_attn_cache
 from .common import init_norm, norm
 from .config import LayerKind, ModelConfig
@@ -143,7 +144,7 @@ def _moe_ffn(p: dict, x: jax.Array, cfg: ModelConfig, mc: MeshContext):
             in_specs += [P(None, ax), P(None, ax), P(ax, None)]
             args += [p["ws_gate"], p["ws_up"], p["ws_down"]]
 
-    fn = jax.shard_map(
+    fn = shard_map(
         inner,
         mesh=mc.mesh,
         in_specs=tuple(in_specs),
@@ -223,7 +224,7 @@ def _attn_decode_dispatch(
         lambda a: P(*([b_ax, seq] + [None] * (a.ndim - 2))), cache
     )
 
-    fn = jax.shard_map(
+    fn = shard_map(
         functools.partial(
             attn_decode, cfg=cfg, local=local, seq_axes=mc.seq_axes,
             vary_axes=tuple(mc.batch_axes) + tuple(mc.seq_axes),

@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from ..compat import axis_size
 from ..comms.exchange import get_exchange
 from .common import act_fn
 from .config import ModelConfig
@@ -108,7 +109,7 @@ def moe_apply(
     e = cfg.n_experts
     k = cfg.experts_per_token
     cap = _capacity(t, cfg)
-    ep = lax.axis_size(ep_axis) if ep_axis else 1
+    ep = axis_size(ep_axis) if ep_axis else 1
     assert e % ep == 0, f"{e} experts not divisible by ep={ep}"
     e_local = e // ep
 

@@ -54,6 +54,7 @@ from jax.sharding import PartitionSpec as P
 from functools import partial
 from repro.models.config import ModelConfig
 from repro.models.attention import init_attention, attn_decode, init_attn_cache
+from repro.compat import make_mesh, shard_map
 
 cfg = ModelConfig(name="a", family="dense", n_layers=1, d_model=32, n_heads=4,
                   n_kv_heads=2, head_dim=8, d_ff=32, vocab_size=8, dtype="float32")
@@ -70,10 +71,10 @@ t = jnp.int32(40)
 y_ref, cache_ref = attn_decode(p, x, t, cache, cfg, local=False, seq_axes=None)
 
 # sharded: seq over 8 shards
-mesh = jax.make_mesh((8,), ("s",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((8,), ("s",))
 pspec = jax.tree.map(lambda a: P(*([None] * a.ndim)), p)
 cspec = {"k": P(None, "s", None, None), "v": P(None, "s", None, None)}
-fn = jax.jit(jax.shard_map(
+fn = jax.jit(shard_map(
     partial(attn_decode, cfg=cfg, local=False, seq_axes=("s",), vary_axes=("s",)),
     mesh=mesh, in_specs=(pspec, P(), P(), cspec), out_specs=(P(), cspec)))
 y_sh, cache_sh = fn(p, x, t, cache)
@@ -93,6 +94,7 @@ from jax.sharding import PartitionSpec as P
 from functools import partial
 from repro.models.config import ModelConfig
 from repro.models.attention import init_attention, attn_decode, init_attn_cache
+from repro.compat import make_mesh, shard_map
 
 cfg = ModelConfig(name="a", family="moe", n_layers=1, d_model=32, n_heads=4,
                   n_kv_heads=4, head_dim=8, d_ff=32, vocab_size=8, attn_kind="mla",
@@ -106,10 +108,10 @@ cache = jax.tree.map(lambda a: jnp.asarray(rng.standard_normal(a.shape), jnp.flo
 x = jnp.asarray(rng.standard_normal((B, 1, 32)), jnp.float32)
 t = jnp.int32(20)
 y_ref, _ = attn_decode(p, x, t, cache, cfg, local=False, seq_axes=None)
-mesh = jax.make_mesh((8,), ("s",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((8,), ("s",))
 pspec = jax.tree.map(lambda a: P(*([None] * a.ndim)), p)
 cspec = {"c_kv": P(None, "s", None), "k_rope": P(None, "s", None)}
-fn = jax.jit(jax.shard_map(
+fn = jax.jit(shard_map(
     partial(attn_decode, cfg=cfg, local=False, seq_axes=("s",), vary_axes=("s",)),
     mesh=mesh, in_specs=(pspec, P(), P(), cspec), out_specs=(P(), cspec)))
 y_sh, _ = fn(p, x, t, cache)

@@ -10,13 +10,14 @@ def test_exchange_algorithms_equivalent():
 import jax, numpy as np, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from functools import partial
+from repro.compat import make_mesh, shard_map
 from repro.comms.exchange import EXCHANGES
-mesh = jax.make_mesh((8,), ("r",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((8,), ("r",))
 rng = np.random.default_rng(0)
 x = jnp.asarray(rng.standard_normal((64, 5)), jnp.float32)
 outs = {}
 for name, fn in EXCHANGES.items():
-    f = jax.jit(jax.shard_map(partial(fn, axis_name="r"), mesh=mesh,
+    f = jax.jit(shard_map(partial(fn, axis_name="r"), mesh=mesh,
                               in_specs=P("r"), out_specs=P("r")))
     outs[name] = np.array(f(x))
 for name, o in outs.items():
@@ -33,11 +34,12 @@ def test_crystal_router_message_count():
 import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from functools import partial
+from repro.compat import make_mesh, shard_map
 from repro.comms.exchange import exchange_crystal_router, exchange_pairwise
-mesh = jax.make_mesh((8,), ("r",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((8,), ("r",))
 x = jnp.zeros((64, 4), jnp.float32)
 def count(fn):
-    f = jax.jit(jax.shard_map(partial(fn, axis_name="r"), mesh=mesh,
+    f = jax.jit(shard_map(partial(fn, axis_name="r"), mesh=mesh,
                               in_specs=P("r"), out_specs=P("r")))
     return f.lower(x).as_text().count("collective_permute")
 c = count(exchange_crystal_router)
@@ -57,13 +59,14 @@ from jax.sharding import PartitionSpec as P
 from functools import partial
 from repro.comms.topology import ProcessGrid
 from repro.comms.halo import sum_exchange, copy_exchange
+from repro.compat import make_mesh, shard_map
 grid = ProcessGrid((2, 2, 2))
-mesh = jax.make_mesh((8,), ("ranks",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((8,), ("ranks",))
 mx = my = mz = 3   # per-rank box, [z,y,x] indexed
 rng = np.random.default_rng(0)
 boxes = rng.standard_normal((8, mz, my, mx)).astype(np.float32)
 
-@partial(jax.shard_map, mesh=mesh, in_specs=P("ranks"), out_specs=P("ranks"))
+@partial(shard_map, mesh=mesh, in_specs=P("ranks"), out_specs=P("ranks"))
 def do_sum(b):
     return sum_exchange(b[0], grid, "ranks")[None]
 
@@ -80,7 +83,7 @@ for r in range(8):
     np.testing.assert_allclose(out[r], want, rtol=1e-5)
 print("sum OK")
 
-@partial(jax.shard_map, mesh=mesh, in_specs=P("ranks"), out_specs=P("ranks"))
+@partial(shard_map, mesh=mesh, in_specs=P("ranks"), out_specs=P("ranks"))
 def do_copy(b):
     return copy_exchange(b[0], grid, "ranks")[None]
 out2 = np.array(do_copy(jnp.asarray(boxes)))
@@ -104,13 +107,14 @@ import numpy as np, jax.numpy as jnp
 from repro.core.distributed import build_dist_problem, dist_cg, dist_cg_scattered
 from repro.comms.topology import ProcessGrid
 from repro.core import build_problem, poisson_assembled, cg_assembled
+from repro.compat import make_mesh
 
 N = 3
 grid = ProcessGrid((2, 2, 2)); local = (2, 1, 1)
 gshape = (4, 2, 2)
 ref = build_problem(N, gshape, lam=0.8, dtype=jnp.float64)
 A = poisson_assembled(ref)
-mesh = jax.make_mesh((8,), ("ranks",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((8,), ("ranks",))
 prob = build_dist_problem(N, grid, local, lam=0.8, dtype=jnp.float64)
 rng = np.random.default_rng(0)
 bg = rng.standard_normal(ref.n_global)
@@ -126,7 +130,7 @@ def box_from_global(vec):
         out[r] = vec[gidx.transpose(2,1,0).reshape(-1)]
     return out
 b_boxes = jnp.asarray(box_from_global(bg))
-x_boxes, rdotr, hist = jax.jit(dist_cg(prob, mesh, b_boxes, n_iter=150))()
+x_boxes, rdotr, iters, hist = jax.jit(dist_cg(prob, mesh, b_boxes, n_iter=150))()
 res = cg_assembled(A, jnp.asarray(bg), n_iter=150)
 err = np.abs(np.array(x_boxes) - box_from_global(np.array(res.x))).max()
 assert err < 1e-9, err
@@ -155,15 +159,16 @@ from repro.core.distributed import build_dist_problem, _apply_assembled
 from repro.comms.topology import ProcessGrid
 from repro.core.operator import local_poisson
 
+from repro.compat import make_mesh, shard_map
 grid = ProcessGrid((2, 2, 1)); local = (1, 1, 2)
-mesh = jax.make_mesh((4,), ("ranks",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((4,), ("ranks",))
 prob = build_dist_problem(2, grid, local, lam=0.5, dtype=jnp.float64)
 rng = np.random.default_rng(0)
 x = rng.standard_normal((4, prob.m3))
 # make consistent: copy owners into replicas by reusing copy_exchange
 from repro.comms.halo import copy_exchange
 spec = P("ranks")
-@partial(jax.shard_map, mesh=mesh, in_specs=(spec,)*3, out_specs=(spec, spec))
+@partial(shard_map, mesh=mesh, in_specs=(spec,)*3, out_specs=(spec, spec))
 def apply_both(xb, g, w):
     xc = copy_exchange(xb[0].reshape(prob.box_shape[::-1]), prob.grid, "ranks").reshape(-1)
     one = _apply_assembled(prob, xc, g[0], w[0], local_op=local_poisson, two_phase=False)
@@ -183,11 +188,12 @@ import jax, numpy as np, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from functools import partial
 from repro.training.compress import compressed_psum, ef_compressed_psum
-mesh = jax.make_mesh((8,), ("r",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.compat import make_mesh, shard_map
+mesh = make_mesh((8,), ("r",))
 rng = np.random.default_rng(0)
 x = jnp.asarray(rng.standard_normal((8, 256)), jnp.float32)
 
-@partial(jax.shard_map, mesh=mesh, in_specs=P("r"), out_specs=P("r"))
+@partial(shard_map, mesh=mesh, in_specs=P("r"), out_specs=P("r"))
 def f(xs):
     return compressed_psum(xs[0], "r")[None]
 got = np.array(f(x))[0]
@@ -196,7 +202,7 @@ want = np.array(x).sum(0)
 assert np.abs(got - want).max() < 8 * np.abs(x).max() / 127 + 1e-5
 
 # error feedback: mean of compressed psums over steps converges to true sum
-@partial(jax.shard_map, mesh=mesh, in_specs=(P("r"), P("r")), out_specs=(P("r"), P("r")))
+@partial(shard_map, mesh=mesh, in_specs=(P("r"), P("r")), out_specs=(P("r"), P("r")))
 def g(xs, res):
     t, r = ef_compressed_psum(xs[0], res[0], "r")
     return t[None], r[None]

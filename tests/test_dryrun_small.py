@@ -15,7 +15,9 @@ def test_sharding_rules_fallback():
 
     from repro.models.params import RULES_TP_FSDP, _spec_with_fallback
 
-    mesh = jax.sharding.AbstractMesh((16,), ("model",))
+    from repro.compat import abstract_mesh
+
+    mesh = abstract_mesh((16,), ("model",))
     # kv_heads=1 cannot shard over a 16-way model axis: falls back to None
     spec = _spec_with_fallback((64, 1, 16), ("embed", "kv_heads", "qk"),
                                RULES_TP_FSDP, mesh)
@@ -26,6 +28,7 @@ def test_sharding_rules_fallback():
     assert spec2[1] == "model"
 
 
+@pytest.mark.slow
 def test_small_mesh_train_prefill_decode():
     run_subprocess(
         """
@@ -39,8 +42,8 @@ from repro.training.optimizer import adafactor
 from repro.training.train_step import make_train_step, warmup_cosine
 from repro.roofline.hlo_model import analyze_hlo
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.compat import make_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
 cfg = REDUCED["jamba-v0.1-52b"]    # hybrid: mamba + attn + MoE(4e over 4 shards)
 
 box = {}
@@ -121,7 +124,8 @@ from repro.core.distributed import DistPoisson, _local_l2g, dist_cg
 from repro.core import sem
 from repro.roofline.hlo_model import analyze_hlo
 
-mesh = jax.make_mesh((8,), ("ranks",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.compat import make_mesh
+mesh = make_mesh((8,), ("ranks",))
 grid = ProcessGrid(factor3(8))
 n, local = 3, (2, 2, 2)
 l2g, halo = _local_l2g(n, local)

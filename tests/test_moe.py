@@ -62,6 +62,7 @@ def test_shared_experts_added():
     assert not np.allclose(np.array(y), np.array(y2))
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("exchange", ["all_to_all", "pairwise", "crystal_router"])
 def test_moe_ep_dispatch_matches_single_device(exchange):
     """EP over 8 shards through each exchange algorithm == 1-device result."""
@@ -73,6 +74,7 @@ from functools import partial
 import dataclasses
 from repro.models.config import ModelConfig
 from repro.models.moe import init_moe, moe_apply
+from repro.compat import make_mesh, shard_map
 
 cfg = ModelConfig(name="m", family="moe", n_layers=1, d_model=16, n_heads=1,
                   n_kv_heads=1, head_dim=16, d_ff=32, vocab_size=8, n_experts=8,
@@ -81,17 +83,18 @@ p, _ = init_moe(jax.random.key(0), cfg, jnp.float32)
 x = jax.random.normal(jax.random.key(1), (64, 16), jnp.float32)
 y_ref, _ = moe_apply(p, x, cfg)
 
-mesh = jax.make_mesh((8,), ("model",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((8,), ("model",))
 def inner(xs, wr, wg, wu, wd):
-    tpn = jax.lax.axis_size("model"); me = jax.lax.axis_index("model")
+    from repro.compat import axis_size
+    tpn = axis_size("model"); me = jax.lax.axis_index("model")
     tloc = xs.shape[0] // tpn
     mine = jax.lax.dynamic_slice_in_dim(xs, me * tloc, tloc, axis=0)
     pp = {{"w_router": wr, "w_gate": wg, "w_up": wu, "w_down": wd}}
     y, aux = moe_apply(pp, mine, cfg, ep_axis="model", exchange="{exchange}")
     return jax.lax.all_gather(y, "model", axis=0, tiled=True), jax.lax.pmean(aux, "model")
-f = jax.jit(jax.shard_map(inner, mesh=mesh,
+f = jax.jit(shard_map(inner, mesh=mesh,
     in_specs=(P(), P(None, None), P("model"), P("model"), P("model")),
-    out_specs=(P(), P()), check_vma=False))  # all_gather output is replicated
+    out_specs=(P(), P()), check_rep=False))  # all_gather output is replicated
 y_ep, aux = f(x, p["w_router"], p["w_gate"], p["w_up"], p["w_down"])
 err = np.abs(np.array(y_ep) - np.array(y_ref)).max()
 rel = err / (np.abs(np.array(y_ref)).max() + 1e-9)
