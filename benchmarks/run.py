@@ -7,8 +7,15 @@
   table2   — peak FOM / weak scaling / NekBone-vs-hipBone (paper Table 2)
   exchange — routing-algorithm selection          (paper §MPI Communication)
   precond  — PCG iterations-to-tolerance + FOM    (beyond the benchmark)
+
+``--json PATH`` additionally writes a machine-readable summary: every
+section's raw CSV rows plus the precond sweep as structured records
+(per-config iterations-to-tol, solve time, effective FOM) so the perf
+trajectory is tracked across PRs — CI passes ``--json BENCH_pr2.json``
+(bump the name per PR).
 """
 import argparse
+import json
 import sys
 import time
 
@@ -17,6 +24,11 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="larger problem sizes")
     ap.add_argument("--only", default=None)
+    ap.add_argument(
+        "--json",
+        default="",
+        help="write a machine-readable summary to this path (off by default)",
+    )
     args = ap.parse_args()
     quick = not args.full
 
@@ -35,8 +47,9 @@ def main() -> None:
         "fig456": fig456_scaling.main,
         "table2": table2_fom.main,
         "exchange": exchange_select.main,
-        "precond": precond_solve.main,
+        "precond": None,  # handled below so the sweep runs once
     }
+    summary: dict = {"quick": quick, "sections": {}, "failures": []}
     failures = 0
     for name, fn in sections.items():
         if args.only and name != args.only:
@@ -44,12 +57,26 @@ def main() -> None:
         t0 = time.time()
         print(f"# --- {name} ---", flush=True)
         try:
-            for row in fn(quick=quick):
+            if name == "precond":
+                recs = precond_solve.records(quick=quick)
+                rows = precond_solve.rows_from(recs)
+                summary["precond_records"] = recs
+            else:
+                rows = list(fn(quick=quick))
+            for row in rows:
                 print(row, flush=True)
+            summary["sections"][name] = rows
         except Exception as e:  # report and continue
             failures += 1
-            print(f"{name},ERROR,{type(e).__name__}: {e}", flush=True)
+            msg = f"{name},ERROR,{type(e).__name__}: {e}"
+            summary["failures"].append(msg)
+            print(msg, flush=True)
         print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(summary, f, indent=2)
+        print(f"# wrote {args.json}", flush=True)
     if failures:
         sys.exit(1)
 

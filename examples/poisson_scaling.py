@@ -32,7 +32,7 @@ import numpy as np
 
 from repro.compat import make_mesh
 from repro.comms.topology import ProcessGrid, factor3
-from repro.core.distributed import build_dist_problem, dist_cg, dist_lambda_max
+from repro.core.distributed import build_dist_problem, dist_cg, dist_spectrum
 from repro.core.fom import nekbone_flops_per_iter
 
 
@@ -42,7 +42,7 @@ def main() -> None:
     ap.add_argument("--n", type=int, default=7)
     ap.add_argument("--local", type=int, default=2, help="elements per axis per rank")
     ap.add_argument("--iters", type=int, default=100)
-    ap.add_argument("--precond", choices=["none", "jacobi", "chebyshev"],
+    ap.add_argument("--precond", choices=["none", "jacobi", "chebyshev", "pmg"],
                     default="none", help="PCG preconditioner")
     ap.add_argument("--cheb-degree", type=int, default=2)
     ap.add_argument("--tol", type=float, default=None,
@@ -63,16 +63,16 @@ def main() -> None:
 
     rng = np.random.default_rng(0)
     b = jnp.asarray(rng.standard_normal((ranks, prob.m3)), jnp.float32)
-    # estimate the Chebyshev spectrum bound once at setup so the timed runs
-    # below are pure solve (dist_cg would otherwise re-run the power
-    # iteration inside every compiled call)
-    lmax = (dist_lambda_max(prob, mesh, two_phase=args.two_phase)
-            if args.precond == "chebyshev" else None)
-    if lmax is not None:
-        print(f"power iteration: lambda_max(D^-1 A) ~= {lmax:.4f}")
+    # estimate the Chebyshev interval once at setup so the timed runs below
+    # are pure solve (dist_cg would otherwise re-run the Lanczos operator
+    # applies inside every compiled call); pmg estimates per level in-graph
+    lmin = lmax = None
+    if args.precond == "chebyshev":
+        lmin, lmax = dist_spectrum(prob, mesh, two_phase=args.two_phase)
+        print(f"lanczos: spectrum(D^-1 A) ~= [{lmin:.4f}, {lmax:.4f}]")
     run = jax.jit(dist_cg(prob, mesh, b, n_iter=args.iters, tol=args.tol,
                           precond=args.precond, cheb_degree=args.cheb_degree,
-                          lmax=lmax,
+                          lmin=lmin, lmax=lmax,
                           two_phase=args.two_phase, record_history=True))
     x, rdotr, iters, hist = run()
     jax.block_until_ready(x)

@@ -18,12 +18,22 @@ class PoissonConfig:
     lam: float = 1.0
     n_iter: int = 100                   # NekBone's fixed CG iteration count
     dtype: str = "float32"
-    precond: str = "none"               # "none" | "jacobi" | "chebyshev"
-    cheb_degree: int = 2                # Chebyshev polynomial degree
+    # preconditioner ladder rung: "none" (NekBone-faithful plain CG),
+    # "jacobi" (assembled-diagonal scale), "chebyshev" (degree-`cheb_degree`
+    # Chebyshev–Jacobi on the Lanczos-estimated [λ_min, λ_max] interval), or
+    # "pmg" (Chebyshev-smoothed p-multigrid V-cycle N → ⌈N/2⌉ → … → 1, the
+    # production Nek5000/RS configuration).
+    precond: str = "none"
+    cheb_degree: int = 2                # standalone Chebyshev polynomial degree
     tol: float | None = None            # None = fixed n_iter (NekBone mode)
+    # pmg knobs: per-level smoother degree (Chebyshev order of the pre/post
+    # smoothing sweeps) and the degree of the full-interval Chebyshev solve
+    # on the coarsest (N=1) level of the ladder.
+    pmg_smooth_degree: int = 4
+    pmg_coarse_iters: int = 16
 
     def __post_init__(self):
-        if self.precond not in ("none", "jacobi", "chebyshev"):
+        if self.precond not in ("none", "jacobi", "chebyshev", "pmg"):
             raise ValueError(f"unknown precond {self.precond!r}")
 
     def dofs_per_rank(self) -> int:
@@ -43,6 +53,12 @@ CONFIGS = {
     ),
     "hipbone_n15_pcg": PoissonConfig(
         "hipbone_n15_pcg", 15, (4, 4, 4), precond="chebyshev", tol=1e-6
+    ),
+    "hipbone_n7_pmg": PoissonConfig(
+        "hipbone_n7_pmg", 7, (8, 8, 8), precond="pmg", tol=1e-6
+    ),
+    "hipbone_n15_pmg": PoissonConfig(
+        "hipbone_n15_pmg", 15, (4, 4, 4), precond="pmg", tol=1e-6
     ),
 }
 

@@ -28,19 +28,32 @@ from .mesh import BoxMesh, build_box_mesh, partition_elements
 from .operator import (
     PoissonProblem,
     build_problem,
+    coarsen_problem,
     local_poisson,
     poisson_assembled,
     poisson_scattered,
+    problem_from_mesh,
 )
 from .precond import (
     PRECOND_KINDS,
     assembled_diagonal,
     chebyshev_apply,
     jacobi_apply,
+    lanczos_extremes,
     local_operator_diagonal,
+    make_pmg_preconditioner,
     make_preconditioner,
+    make_transfer_pair,
+    make_vcycle,
+    pmg_degree_ladder,
     power_lambda_max,
+    tensor3_interp,
 )
-from .sem import derivative_matrix, gll_nodes_weights, reference_element
+from .sem import (
+    derivative_matrix,
+    gll_nodes_weights,
+    interpolation_matrix,
+    reference_element,
+)
 
 __all__ = [k for k in dir() if not k.startswith("_")]

@@ -44,23 +44,33 @@ from ..comms.topology import ProcessGrid
 from ..compat import shard_map
 from . import sem
 from .cg import CGResult, _pcg
+from .geometry import geometric_factors_from_coords
 from .operator import local_poisson
 from .precond import (
+    CHEB_LMIN_SAFETY,
     CHEB_SAFETY,
+    PMG_SMOOTH_DEGREE,
+    PMG_SMOOTH_RATIO,
     PRECOND_KINDS,
     chebyshev_apply,
     jacobi_apply,
+    lanczos_extremes,
     local_operator_diagonal,
+    make_vcycle,
+    pmg_degree_ladder,
     power_lambda_max,
     seed_values,
+    tensor3_interp,
 )
 
 __all__ = [
     "DistPoisson",
     "build_dist_problem",
+    "build_pmg_levels",
     "dist_cg",
     "dist_cg_scattered",
     "dist_lambda_max",
+    "dist_spectrum",
 ]
 
 
@@ -86,6 +96,11 @@ class DistPoisson:
     w_local: jax.Array           # (R, E_loc, p) sharded — global inverse degree
     mask: jax.Array              # (R, m3) sharded — 1 where rank owns the DOF
     dtype: Any
+    # (R, E_loc, p, 3) numpy node coords in halo-first element order, kept so
+    # p-multigrid can rediscretize coarse levels on the same curved geometry;
+    # None for the regular unit-box mesh (coarse factors are then analytic)
+    coords: np.ndarray | None = None
+    regular: bool = True         # True iff built from the default regular mesh
 
     @property
     def m3(self) -> int:
@@ -192,18 +207,30 @@ def build_dist_problem(
     lam: float = 1.0,
     dtype: Any = jnp.float32,
     g_factors: np.ndarray | None = None,
+    coords: np.ndarray | None = None,
 ) -> DistPoisson:
     """Build the sharded problem.
 
     ``g_factors``: optional (R, E_loc, 6, p) geometric factors (tests pass
     factors extracted from a deformed global mesh); default is the regular
-    unit-box mesh where every element is identical.
+    unit-box mesh where every element is identical.  ``coords``: optional
+    (R, E_loc, p, 3) node coordinates in the same halo-first element order —
+    geometric factors are then computed here, and p-multigrid
+    (``dist_cg(precond="pmg")``) can rediscretize its coarse levels on the
+    same geometry (with bare ``g_factors`` there is no geometry to coarsen,
+    so pmg requires either ``coords`` or the default regular mesh).
     """
     n = n_degree
     bx, by, bz = local_shape
     l2g, halo = _local_l2g(n, local_shape)
     mask, w_local = _rank_data(grid, n, local_shape, l2g)
 
+    regular = g_factors is None and coords is None
+    if g_factors is None and coords is not None:
+        r, e_loc, p, _ = coords.shape
+        g_factors = geometric_factors_from_coords(
+            coords.reshape(r * e_loc, p, 3), n
+        )["G"].reshape(r, e_loc, 6, p)
     if g_factors is None:
         # regular mesh: every element congruent; element size = 1/(P_d*b_d)
         from .geometry import geometric_factors
@@ -239,7 +266,57 @@ def build_dist_problem(
         w_local=jnp.asarray(w_local, dtype),
         mask=jnp.asarray(mask, dtype),
         dtype=dtype,
+        coords=coords,
+        regular=regular,
     )
+
+
+def build_pmg_levels(
+    prob: DistPoisson, ladder: tuple[int, ...] | None = None
+) -> tuple[list[DistPoisson], list[np.ndarray]]:
+    """The p-multigrid hierarchy for a sharded problem.
+
+    Returns ``(levels, jmats)``: ``levels[0] is prob`` and each coarser
+    level is a full DistPoisson on the *same* process grid and element
+    partition (so every level's operator reuses the Fig. 2
+    communication-hiding split on its own, smaller padded box);
+    ``jmats[i]`` is the 1-D coarse->fine interpolation between levels
+    i+1 and i.  Coarse geometric factors are rediscretized from sampled
+    coordinates (curved meshes) or the analytic regular-box reference.
+    """
+    degrees = tuple(ladder) if ladder is not None else pmg_degree_ladder(
+        prob.n_degree
+    )
+    if not prob.regular and prob.coords is None:
+        raise ValueError(
+            "pmg on a sharded problem needs per-rank coords (or the default "
+            "regular mesh) to rediscretize coarse levels; rebuild with "
+            "build_dist_problem(..., coords=...)"
+        )
+    levels = [prob]
+    jmats: list[np.ndarray] = []
+    for nc in degrees[1:]:
+        pf = levels[-1]
+        coords_c = None
+        if pf.coords is not None:
+            jc = sem.interpolation_matrix(pf.n_degree, nc)
+            r, e_loc, p, _ = pf.coords.shape
+            coords_c = sem.interp_coords_3d(
+                jc, pf.coords.reshape(r * e_loc, p, 3)
+            ).reshape(r, e_loc, (nc + 1) ** 3, 3)
+        levels.append(
+            build_dist_problem(
+                nc,
+                prob.grid,
+                prob.local_shape,
+                axis_name=prob.axis_name,
+                lam=prob.lam,
+                dtype=prob.dtype,
+                coords=coords_c,
+            )
+        )
+        jmats.append(sem.interpolation_matrix(nc, pf.n_degree))
+    return levels, jmats
 
 
 def _apply_assembled(
@@ -320,6 +397,88 @@ def _box_dinv(prob: DistPoisson, g1: jax.Array, w1: jax.Array) -> jax.Array:
     return 1.0 / box_diag
 
 
+def _box_transfer_pair(
+    lf: DistPoisson, lc: DistPoisson, jmat: jax.Array, w_lf: jax.Array
+):
+    """(prolong, restrict) between two padded-box levels of one rank.
+
+    Same P = Z_f^T W_f Ĵ Z_c / R = P^T pair as the single-shard
+    ``precond.make_transfer_pair``, with the gathers expressed as local
+    segment-sums plus one halo sum-exchange (interface contributions from
+    neighbouring ranks complete the weighted average / the transpose sum).
+    Inputs are consistent boxes; outputs are consistent boxes.
+    """
+    l2g_f = jnp.asarray(lf.l2g.reshape(-1))
+    l2g_c = jnp.asarray(lc.l2g.reshape(-1))
+
+    def prolong(x_c: jax.Array) -> jax.Array:
+        u_c = jnp.take(x_c, l2g_c, axis=0).reshape(lc.e_local, -1)
+        u_f = tensor3_interp(jmat, u_c)
+        box = jax.ops.segment_sum(
+            (w_lf * u_f).reshape(-1), l2g_f, num_segments=lf.m3
+        )
+        return sum_exchange(
+            box.reshape(lf.box_shape[::-1]), lf.grid, lf.axis_name
+        ).reshape(-1)
+
+    def restrict(r_f: jax.Array) -> jax.Array:
+        u_f = w_lf * jnp.take(r_f, l2g_f, axis=0).reshape(lf.e_local, -1)
+        u_c = tensor3_interp(jmat.T, u_f)
+        box = jax.ops.segment_sum(
+            u_c.reshape(-1), l2g_c, num_segments=lc.m3
+        )
+        return sum_exchange(
+            box.reshape(lc.box_shape[::-1]), lc.grid, lc.axis_name
+        ).reshape(-1)
+
+    return prolong, restrict
+
+
+def dist_spectrum(
+    prob: DistPoisson,
+    mesh: jax.sharding.Mesh,
+    *,
+    lanczos_iters: int = 10,
+    local_op: Callable[..., jax.Array] | None = None,
+    two_phase: bool = False,
+) -> tuple[float, float]:
+    """Eager (λ_min, λ_max) Ritz estimates of D⁻¹A (raw, no safety factors).
+
+    The sharded analogue of ``precond.lanczos_extremes``: replica-masked
+    dots, psum across ranks.  Pass the results to
+    ``dist_cg(..., lmin=..., lmax=...)`` so repeated Chebyshev solves don't
+    re-run the estimation inside the compiled program.
+    """
+    op = local_op or local_poisson
+    spec = P(prob.axis_name)
+    seed_boxes = jnp.asarray(seed_values(_box_global_indices(prob)), prob.dtype)
+
+    def shard_fn(g_s, w_s, mask_s, seed_s):
+        g1, w1, m1 = g_s[0], w_s[0], mask_s[0]
+        operator = lambda v: _apply_assembled(
+            prob, v, g1, w1, local_op=op, two_phase=two_phase
+        )
+        dinv = _box_dinv(prob, g1, w1)
+        mdot = lambda a, bb: jnp.vdot(a * m1, bb)
+        lmin, lmax = lanczos_extremes(
+            operator, dinv, seed_s[0],
+            iters=lanczos_iters, dot=mdot,
+            psum=lambda v: lax.psum(v, prob.axis_name),
+        )
+        return lmin, lmax
+
+    fn = shard_map(
+        shard_fn,
+        mesh=mesh,
+        in_specs=(spec, spec, spec, spec),
+        out_specs=(P(), P()),
+        # check_rep cannot type the mixed sharded/replicated Lanczos carry
+        check_rep=False,
+    )
+    lmin, lmax = jax.jit(fn)(prob.g, prob.w_local, prob.mask, seed_boxes)
+    return float(lmin), float(lmax)
+
+
 def dist_lambda_max(
     prob: DistPoisson,
     mesh: jax.sharding.Mesh,
@@ -370,24 +529,37 @@ def dist_cg(
     tol: float | None = None,
     precond: str = "none",
     cheb_degree: int = 2,
-    power_iters: int = 12,
+    lanczos_iters: int = 10,
     lmax: float | None = None,
+    lmin: float | None = None,
+    pmg_smooth_degree: int = PMG_SMOOTH_DEGREE,
+    pmg_coarse_iters: int = 16,
+    pmg_ladder: tuple[int, ...] | None = None,
     local_op: Callable[..., jax.Array] | None = None,
     two_phase: bool = False,
     record_history: bool = False,
 ):
     """Distributed hipBone (P)CG. ``b``: (R, m3) sharded rhs (made consistent).
 
-    ``precond``: "none" | "jacobi" | "chebyshev".  The diagonal is
+    ``precond``: "none" | "jacobi" | "chebyshev" | "pmg".  The diagonal is
     assembled in padded-box storage — local element diagonals gathered with
     Z_loc^T then made consistent by one sum-exchange — so the Jacobi apply
     is a pure elementwise scale (replicas stay consistent for free).  The
     Chebyshev A-applies reuse the communication-hiding split operator, and
-    the power iteration for λ_max runs with replica-masked inner products;
+    the Lanczos spectrum estimation runs with replica-masked inner products;
     its seed vector is a hash of *global* DOF indices, hence consistent
-    across replicas by construction.  Pass ``lmax`` (from
-    ``dist_lambda_max``) to skip the in-graph estimation — otherwise each
-    compiled solve re-runs the power iteration's operator applies.
+    across replicas by construction.  Pass ``(lmin, lmax)`` (from
+    ``dist_spectrum``) to skip the in-graph estimation — otherwise each
+    compiled solve re-runs the Lanczos operator applies.  With ``lmax``
+    alone the interval bottom falls back to the legacy λ_max/30 ratio
+    (matching ``dist_lambda_max``).
+
+    ``precond="pmg"`` runs the Chebyshev-smoothed degree-ladder V-cycle of
+    ``core.precond`` with every level's A-apply, transfer and diagonal
+    assembled through this rank's *coarsened* padded box — coarse-level
+    applies are latency-dominated, so the Fig. 2 halo/interior overlap of
+    ``_apply_assembled`` matters most there.  The coarsest (degree-1) level
+    is solved by a full-interval degree-``pmg_coarse_iters`` Chebyshev.
 
     Returns a jitted-callable partial () -> (x, rdotr, iterations, history),
     also usable for dry-run lowering via ``jax.jit(run.func).lower(*run.args)``.
@@ -398,12 +570,27 @@ def dist_cg(
     spec = P(prob.axis_name)
     hist_len = n_iter
 
-    need_power = precond == "chebyshev" and lmax is None
+    need_power = (precond == "chebyshev" and lmax is None) or precond == "pmg"
     seed_boxes = jnp.asarray(
         seed_values(_box_global_indices(prob)), prob.dtype
     ) if need_power else jnp.zeros((prob.grid.size, 1), prob.dtype)
 
-    def shard_fn(b_s, g_s, w_s, mask_s, seed_s):
+    if precond == "pmg":
+        levels, jmats = build_pmg_levels(prob, pmg_ladder)
+        jmats = [jnp.asarray(j, prob.dtype) for j in jmats]
+        pmg_data = tuple(
+            (
+                lvl.g,
+                lvl.w_local,
+                lvl.mask,
+                jnp.asarray(seed_values(_box_global_indices(lvl)), prob.dtype),
+            )
+            for lvl in levels[1:]
+        )
+    else:
+        levels, jmats, pmg_data = [prob], [], ()
+
+    def shard_fn(b_s, g_s, w_s, mask_s, seed_s, pmg_s):
         b1, g1, w1, m1 = b_s[0], g_s[0], w_s[0], mask_s[0]
         # make rhs consistent (replicas hold true values)
         b1 = copy_exchange(
@@ -420,17 +607,82 @@ def dist_cg(
             dinv = _box_dinv(prob, g1, w1)
             if precond == "jacobi":
                 pc = jacobi_apply(dinv)
-            else:
-                if need_power:
+            elif precond == "chebyshev":
+                if lmax is None:
                     mdot = lambda a, bb: jnp.vdot(a * m1, bb)
-                    lam_top = power_lambda_max(
+                    lmin_e, lmax_e = lanczos_extremes(
                         operator, dinv, seed_s[0],
-                        iters=power_iters, dot=mdot, psum=psum,
+                        iters=lanczos_iters, dot=mdot, psum=psum,
                     )
+                    top = CHEB_SAFETY * lmax_e
+                    low = CHEB_LMIN_SAFETY * lmin_e
                 else:
-                    lam_top = jnp.asarray(lmax, b1.dtype)
+                    top = CHEB_SAFETY * jnp.asarray(lmax, b1.dtype)
+                    low = None if lmin is None else (
+                        CHEB_LMIN_SAFETY * jnp.asarray(lmin, b1.dtype)
+                    )
                 pc = chebyshev_apply(
-                    operator, dinv, CHEB_SAFETY * lam_top, degree=cheb_degree
+                    operator, dinv, top, lmin=low, degree=cheb_degree
+                )
+            else:  # pmg
+                lvl_ops = [operator]
+                lvl_dinvs = [dinv]
+                lvl_masks = [m1]
+                lvl_seeds = [seed_s[0]]
+                lvl_wlocs = [w1]
+                for lvl, (g_l, w_l, mk_l, sd_l) in zip(levels[1:], pmg_s):
+                    g1l, w1l = g_l[0], w_l[0]
+                    lvl_ops.append(
+                        lambda v, lvl=lvl, g1l=g1l, w1l=w1l: _apply_assembled(
+                            lvl, v, g1l, w1l, local_op=op, two_phase=two_phase
+                        )
+                    )
+                    lvl_dinvs.append(_box_dinv(lvl, g1l, w1l))
+                    lvl_masks.append(mk_l[0])
+                    lvl_seeds.append(sd_l[0])
+                    lvl_wlocs.append(w1l)
+
+                smoothers = []
+                for i in range(len(levels) - 1):
+                    mdot = lambda a, bb, mk=lvl_masks[i]: jnp.vdot(a * mk, bb)
+                    lmin_e, lmax_e = lanczos_extremes(
+                        lvl_ops[i], lvl_dinvs[i], lvl_seeds[i],
+                        iters=lanczos_iters, dot=mdot, psum=psum,
+                    )
+                    smoothers.append(
+                        chebyshev_apply(
+                            lvl_ops[i],
+                            lvl_dinvs[i],
+                            CHEB_SAFETY * lmax_e,
+                            lmin=jnp.maximum(
+                                CHEB_LMIN_SAFETY * lmin_e,
+                                lmax_e / PMG_SMOOTH_RATIO,
+                            ),
+                            degree=pmg_smooth_degree,
+                        )
+                    )
+                # coarsest (degree-1): full-interval Chebyshev "solve"
+                mdot_c = lambda a, bb: jnp.vdot(a * lvl_masks[-1], bb)
+                lmin_e, lmax_e = lanczos_extremes(
+                    lvl_ops[-1], lvl_dinvs[-1], lvl_seeds[-1],
+                    iters=lanczos_iters, dot=mdot_c, psum=psum,
+                )
+                coarse_apply = chebyshev_apply(
+                    lvl_ops[-1],
+                    lvl_dinvs[-1],
+                    CHEB_SAFETY * lmax_e,
+                    lmin=CHEB_LMIN_SAFETY * lmin_e,
+                    degree=pmg_coarse_iters,
+                )
+                prolongs, restricts = [], []
+                for i in range(len(levels) - 1):
+                    p_up, r_down = _box_transfer_pair(
+                        levels[i], levels[i + 1], jmats[i], lvl_wlocs[i]
+                    )
+                    prolongs.append(p_up)
+                    restricts.append(r_down)
+                pc = make_vcycle(
+                    lvl_ops[:-1], smoothers, restricts, prolongs, coarse_apply
                 )
 
         res = _pcg(
@@ -457,15 +709,20 @@ def dist_cg(
     fn = shard_map(
         shard_fn,
         mesh=mesh,
-        in_specs=(spec, spec, spec, spec, spec),
+        in_specs=(
+            spec, spec, spec, spec, spec,
+            tuple((spec, spec, spec, spec) for _ in pmg_data),
+        ),
         out_specs=(spec, P(), P(), P()),
         # old jax's check_rep has no rule for while_loop (tol mode) and
-        # cannot type the power-iteration scan carry (in-graph chebyshev);
-        # keep the guard wherever it can actually run — its replicated
-        # outputs are psum-derived either way
+        # cannot type the Lanczos/power-iteration carries (in-graph spectrum
+        # estimation); keep the guard wherever it can actually run — its
+        # replicated outputs are psum-derived either way
         check_rep=tol is None and not need_power,
     )
-    return functools.partial(fn, b, prob.g, prob.w_local, prob.mask, seed_boxes)
+    return functools.partial(
+        fn, b, prob.g, prob.w_local, prob.mask, seed_boxes, pmg_data
+    )
 
 
 def dist_cg_scattered(
@@ -474,6 +731,12 @@ def dist_cg_scattered(
     b_l: jax.Array,
     *,
     n_iter: int = 100,
+    tol: float | None = None,
+    precond: str = "none",
+    cheb_degree: int = 2,
+    lanczos_iters: int = 10,
+    lmax: float | None = None,
+    lmin: float | None = None,
     local_op: Callable[..., jax.Array] | None = None,
 ):
     """Distributed NekBone baseline: scattered (R, E_loc, p) vectors.
@@ -481,11 +744,28 @@ def dist_cg_scattered(
     Operator: b = ZZ^T S_L x + λ x  (gather-scatter through the padded box
     + sum exchange); weighted inner products read the W stream, exactly the
     extra traffic the paper charges against NekBone.
+
+    ``precond``/``tol`` mirror :func:`dist_cg` ("none" | "jacobi" |
+    "chebyshev"; p-multigrid stays assembled-only).  The assembled diagonal
+    is built in padded-box storage and scattered to the element-local
+    layout; on the continuous subspace (range of Z, where the scattered
+    iterates live) the diagonal scale and the Chebyshev polynomial act
+    exactly as their assembled counterparts, so weighted-dot PCG remains
+    valid.  Returns a partial () -> (x, rdotr, iterations).
     """
+    if precond not in ("none", "jacobi", "chebyshev"):
+        raise ValueError(
+            f"dist_cg_scattered supports none|jacobi|chebyshev, got {precond!r}"
+        )
     op = local_op or local_poisson
     spec = P(prob.axis_name)
     l2g_flat = jnp.asarray(prob.l2g.reshape(-1))
     m3 = prob.m3
+
+    need_lanczos = precond == "chebyshev" and lmax is None
+    seed_boxes = jnp.asarray(
+        seed_values(_box_global_indices(prob)), prob.dtype
+    ) if need_lanczos else jnp.zeros((prob.grid.size, 1), prob.dtype)
 
     def gather_scatter(y_l):
         box = jax.ops.segment_sum(y_l.reshape(-1), l2g_flat, num_segments=m3)
@@ -494,34 +774,68 @@ def dist_cg_scattered(
         ).reshape(-1)
         return jnp.take(box, l2g_flat, axis=0).reshape(y_l.shape)
 
-    def shard_fn(b_s, g_s, w_s):
+    def shard_fn(b_s, g_s, w_s, seed_s):
         # caller passes a consistent b_L (NekBone gather-scatters its random
         # forcing at setup; applying ZZ^T here would alter a general rhs)
         b1, g1, w1 = b_s[0], g_s[0], w_s[0]
+        psum = lambda v: lax.psum(v, prob.axis_name)
 
         def operator(x_l):
             s = op(x_l, g1, prob.d, 0.0, None)
             return gather_scatter(s) + prob.lam * x_l
+
+        pc = None
+        if precond != "none":
+            # assembled diag in box storage, scattered to the local layout:
+            # Z diag(A)⁻¹ — consistent on the continuous subspace for free
+            dinv_l = jnp.take(
+                _box_dinv(prob, g1, w1), l2g_flat, axis=0
+            ).reshape(b1.shape)
+            if precond == "jacobi":
+                pc = jacobi_apply(dinv_l)
+            else:
+                wdot = lambda a, bb: jnp.vdot(a * w1, bb)
+                if lmax is None:
+                    seed_l = jnp.take(seed_s[0], l2g_flat, axis=0).reshape(
+                        b1.shape
+                    )
+                    lmin_e, lmax_e = lanczos_extremes(
+                        operator, dinv_l, seed_l,
+                        iters=lanczos_iters, dot=wdot, psum=psum,
+                    )
+                    top = CHEB_SAFETY * lmax_e
+                    low = CHEB_LMIN_SAFETY * lmin_e
+                else:
+                    top = CHEB_SAFETY * jnp.asarray(lmax, b1.dtype)
+                    low = None if lmin is None else (
+                        CHEB_LMIN_SAFETY * jnp.asarray(lmin, b1.dtype)
+                    )
+                pc = chebyshev_apply(
+                    operator, dinv_l, top, lmin=low, degree=cheb_degree
+                )
 
         res = _pcg(
             operator,
             b1,
             None,
             n_iter=n_iter,
-            tol=None,
+            tol=tol,
             weight=w1,
-            psum=lambda v: lax.psum(v, prob.axis_name),
-            precond=None,
+            psum=psum,
+            precond=pc,
             fused_update=None,
             fused_precond_dot=None,
             record_history=False,
         )
-        return res.x[None], res.rdotr
+        return res.x[None], res.rdotr, jnp.asarray(res.iterations)
 
     fn = shard_map(
         shard_fn,
         mesh=mesh,
-        in_specs=(spec, spec, spec),
-        out_specs=(spec, P()),
+        in_specs=(spec, spec, spec, spec),
+        out_specs=(spec, P(), P()),
+        # same check_rep caveats as dist_cg: while_loop (tol mode) and the
+        # Lanczos carry have no replication rule on old jax
+        check_rep=tol is None and not need_lanczos,
     )
-    return functools.partial(fn, b_l, prob.g, prob.w_local)
+    return functools.partial(fn, b_l, prob.g, prob.w_local, seed_boxes)

@@ -22,7 +22,7 @@ import numpy as np
 from . import sem
 from .mesh import BoxMesh
 
-__all__ = ["geometric_factors"]
+__all__ = ["geometric_factors", "geometric_factors_from_coords"]
 
 
 def _apply_d(d: np.ndarray, u: np.ndarray, axis: int) -> np.ndarray:
@@ -38,15 +38,26 @@ def geometric_factors(mesh: BoxMesh) -> dict[str, np.ndarray]:
       J:    (E, p) float64 — Jacobian determinant at each node
       JW:   (E, p) float64 — J * quadrature weight (the SEM mass diagonal)
     """
-    n = mesh.n_degree
+    return geometric_factors_from_coords(mesh.coords, mesh.n_degree)
+
+
+def geometric_factors_from_coords(
+    coords: np.ndarray, n_degree: int
+) -> dict[str, np.ndarray]:
+    """Same as :func:`geometric_factors` from bare (E, p, 3) node coordinates.
+
+    The mesh-free entry point: p-multigrid coarse levels and the distributed
+    builder carry per-element coordinates without a ``BoxMesh``.
+    """
+    n = int(n_degree)
     npts = n + 1
-    e_total = mesh.n_elements
+    e_total = coords.shape[0]
     d = sem.derivative_matrix(n)
     _, w1 = sem.gll_nodes_weights(n)
     w3 = (w1[:, None, None] * w1[None, :, None] * w1[None, None, :]).reshape(-1)
 
     # coords: (E, p, 3) with local ordering (c=t slow, b=s mid, a=r fast)
-    xyz = mesh.coords.reshape(e_total, npts, npts, npts, 3)  # (E, t, s, r, 3)
+    xyz = coords.reshape(e_total, npts, npts, npts, 3)  # (E, t, s, r, 3)
 
     # dX/dr etc: derivative along each reference axis
     dxdr = np.einsum("ia,etsac->etsic", d, xyz)   # d/dr  (axis r = 3rd)

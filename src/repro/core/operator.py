@@ -31,6 +31,8 @@ __all__ = [
     "local_poisson",
     "PoissonProblem",
     "build_problem",
+    "problem_from_mesh",
+    "coarsen_problem",
     "poisson_assembled",
     "poisson_scattered",
 ]
@@ -125,8 +127,15 @@ def build_problem(
 ) -> PoissonProblem:
     """Construct mesh, geometric factors and gather-scatter data."""
     m = build_box_mesh(n_degree, shape, deform=deform)
+    return problem_from_mesh(m, lam=lam, dtype=dtype)
+
+
+def problem_from_mesh(
+    m: BoxMesh, *, lam: float = 1.0, dtype: Any = jnp.float32
+) -> PoissonProblem:
+    """Geometric factors + gather-scatter data for an existing mesh."""
     geo = geometry.geometric_factors(m)
-    d = sem.derivative_matrix(n_degree)
+    d = sem.derivative_matrix(m.n_degree)
     w_g = inverse_degree(m.l2g, m.n_global)
     w_l = w_g[m.l2g]
     return PoissonProblem(
@@ -140,6 +149,30 @@ def build_problem(
         w_global=jnp.asarray(w_g, dtype=dtype),
         dtype=dtype,
     )
+
+
+def coarsen_problem(prob: PoissonProblem, n_coarse: int) -> PoissonProblem:
+    """p-coarsened problem: same element grid, polynomial degree ``n_coarse``.
+
+    The coarse level is a *rediscretization*, not a Galerkin triple product:
+    element connectivity comes from a degree-``n_coarse`` box mesh, node
+    coordinates are the fine (polynomial) coordinate map sampled at the
+    coarse GLL nodes — exact, so the coarse operator lives on the same
+    curved geometry — and geometric factors are recomputed at the coarse
+    degree.  This is the standard SEM p-multigrid coarse operator
+    (Nek5000/RS, libParanumal).
+    """
+    mf = prob.mesh
+    nc = int(n_coarse)
+    if not 1 <= nc < mf.n_degree:
+        raise ValueError(
+            f"coarse degree must be in [1, {mf.n_degree - 1}], got {nc}"
+        )
+    base = build_box_mesh(nc, mf.shape)  # connectivity only; coords replaced
+    j = sem.interpolation_matrix(mf.n_degree, nc)
+    coords = sem.interp_coords_3d(j, mf.coords)
+    mesh_c = dataclasses.replace(base, coords=coords)
+    return problem_from_mesh(mesh_c, lam=prob.lam, dtype=prob.dtype)
 
 
 def poisson_assembled(

@@ -3,7 +3,7 @@
 NekBone (and hence hipBone) fixes 100 unpreconditioned CG iterations, but
 the parent applications do not: production Nek5000/RS Poisson solves are
 preconditioned (Jacobi, Chebyshev-accelerated Jacobi, Schwarz, p-multigrid).
-This module supplies the first two rungs of that ladder on top of the
+This module supplies the first three rungs of that ladder on top of the
 existing assembled-storage machinery:
 
   * **Jacobi**: ``M = diag(A)`` where ``A = Z^T (S_L + λW) Z``.  The
@@ -29,6 +29,17 @@ existing assembled-storage machinery:
     estimated by power iteration from a deterministic high-frequency seed
     vector; the smoothing interval is the usual [λ_max/ratio, safety·λ_max].
 
+  * **p-multigrid** (``pmg``): the production Nek5000/RS configuration — a
+    V-cycle over a degree ladder N → ⌈N/2⌉ → … → 1 with Chebyshev–Jacobi
+    smoothing on every level and a direct (or Chebyshev/Jacobi-iterated)
+    solve on the degree-1 coarsest level.  Transfers are the tensor-product
+    lift of the 1-D GLL interpolation matrix (``sem.interpolation_matrix``);
+    prolongation is nodal interpolation expressed through the assembled
+    machinery as ``P = Z_f^T W_f Ĵ Z_c`` (averaging gather of the
+    element-local interpolant) and restriction is its *exact transpose*
+    ``R = Z_c^T Ĵ^T W_f Z_f``, so the V-cycle is a symmetric linear map and
+    plain PCG remains valid.
+
 Everything here is expressed through the caller's ``operator`` /
 ``dot`` / ``psum`` callables, so the same code serves the single-device
 assembled path and the sharded padded-box path in core.distributed (where
@@ -37,31 +48,48 @@ dots are replica-masked and psum is a real collective).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .gather_scatter import gather
+from . import sem
+from .gather_scatter import gather, scatter
 
 __all__ = [
     "local_operator_diagonal",
     "assembled_diagonal",
     "power_lambda_max",
+    "lanczos_extremes",
     "jacobi_apply",
     "chebyshev_apply",
+    "tensor3_interp",
+    "pmg_degree_ladder",
+    "make_transfer_pair",
+    "make_vcycle",
+    "make_pmg_preconditioner",
     "make_preconditioner",
     "PRECOND_KINDS",
     "CHEB_LMIN_RATIO",
     "CHEB_SAFETY",
+    "CHEB_LMIN_SAFETY",
+    "PMG_SMOOTH_RATIO",
 ]
 
-PRECOND_KINDS = ("none", "jacobi", "chebyshev")
+PRECOND_KINDS = ("none", "jacobi", "chebyshev", "pmg")
 
 # Standard Chebyshev-smoother interval: [lmax/ratio, safety * lmax].
 CHEB_LMIN_RATIO = 30.0
 CHEB_SAFETY = 1.1
+# Lanczos interior Ritz values overestimate λ_min — back the bound off.
+CHEB_LMIN_SAFETY = 0.8
+# pMG smoother targets the top 1/ratio of the spectrum; the rest is the
+# coarse grid's job (degree halving shifts roughly half the spectrum down).
+# When Lanczos says the whole spectrum sits above lmax/ratio (well-conditioned
+# large-λ regime) the interval tightens to [0.8·λ_min, 1.1·λ_max] instead.
+PMG_SMOOTH_RATIO = 6.0
+PMG_SMOOTH_DEGREE = 4
 
 
 def local_operator_diagonal(
@@ -165,6 +193,68 @@ def seed_values(global_idx: np.ndarray) -> np.ndarray:
     return t - np.floor(t) - 0.5
 
 
+def lanczos_extremes(
+    operator: Callable[[jax.Array], jax.Array],
+    dinv: jax.Array,
+    v0: jax.Array,
+    *,
+    iters: int = 10,
+    dot: Callable[[jax.Array, jax.Array], jax.Array] | None = None,
+    psum: Callable[[jax.Array], jax.Array] | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """(λ_min, λ_max) estimates of D⁻¹A by a few Lanczos steps.
+
+    Lanczos runs on the symmetrized operator B = D^{-1/2} A D^{-1/2}
+    (similar to D⁻¹A, so same spectrum); the extremal eigenvalues of the
+    k×k tridiagonal are the Ritz estimates.  Unlike power iteration this
+    yields *both* ends of the spectrum, so the Chebyshev interval can be
+    tight in the well-conditioned (large-λ) regime instead of the fixed
+    λ_max/30 lower bound.  Ritz values approach extremes from inside, so
+    callers should widen by CHEB_SAFETY / CHEB_LMIN_SAFETY.
+
+    ``dot``/``psum`` as in :func:`power_lambda_max`; the loop is a static
+    python unroll (iters is small), traceable inside shard_map.
+    """
+    dp = dot or _default_dot
+    allsum = psum or (lambda v: v)
+    k = max(2, min(int(iters), int(np.prod(v0.shape)) - 1))
+    dhalf = jnp.sqrt(dinv)
+    bop = lambda v: dhalf * operator(dhalf * v)
+
+    v = v0 / jnp.sqrt(allsum(dp(v0, v0)))
+    v_prev = jnp.zeros_like(v0)
+    beta = jnp.array(0.0, v0.dtype)
+    alive = jnp.array(1.0, v0.dtype)   # zeroed after an invariant-subspace breakdown
+    alphas, betas = [], []
+    for _ in range(k):
+        w = bop(v)
+        alpha = allsum(dp(v, w))
+        w = w - alpha * v - beta * v_prev
+        beta_new = jnp.sqrt(jnp.maximum(allsum(dp(w, w)), 0.0))
+        # after a breakdown v is zero, so alpha is a spurious 0 that would
+        # pollute the Ritz extremes; substitute the first Rayleigh quotient,
+        # an interior point of the true spectrum (step 0 is always alive)
+        alphas.append(alpha if not alphas else jnp.where(alive > 0, alpha, alphas[0]))
+        betas.append(beta_new * alive)
+        v_prev = v
+        # on breakdown (beta ~ 0) freeze: the Krylov space is invariant and
+        # later steps would amplify roundoff into spurious Ritz values
+        alive = alive * (beta_new > 1e-12 * jnp.abs(alpha)).astype(alive.dtype)
+        v = alive * w / jnp.maximum(beta_new, 1e-30)
+        beta = beta_new * alive
+    tmat = (
+        jnp.diag(jnp.stack(alphas))
+        + jnp.diag(jnp.stack(betas[:-1]), 1)
+        + jnp.diag(jnp.stack(betas[:-1]), -1)
+    )
+    eig = jnp.linalg.eigvalsh(tmat)
+    lmax = eig[-1]
+    # safety net only (post-breakdown eigenvalues are already interior):
+    # keep the interval inside (0, lmax] whatever the estimates did
+    lmin = jnp.clip(eig[0], lmax * 1e-4, lmax / 1.2)
+    return lmin, lmax
+
+
 def jacobi_apply(dinv: jax.Array) -> Callable[[jax.Array], jax.Array]:
     """z = D⁻¹ r."""
     return lambda r: dinv * r
@@ -218,6 +308,99 @@ def chebyshev_apply(
     return apply
 
 
+# ---------------------------------------------------------------------------
+# p-multigrid: degree ladder, transfers, V-cycle
+# ---------------------------------------------------------------------------
+
+
+def pmg_degree_ladder(n: int) -> tuple[int, ...]:
+    """The p-MG degree hierarchy N → ⌈N/2⌉ → … → 1 (Nek5000/RS halving)."""
+    n = int(n)
+    if n < 2:
+        raise ValueError(f"p-multigrid needs fine degree >= 2, got N={n}")
+    ladder = [n]
+    while ladder[-1] > 1:
+        ladder.append((ladder[-1] + 1) // 2)
+    return tuple(ladder)
+
+
+def tensor3_interp(j: jax.Array, u: jax.Array) -> jax.Array:
+    """Tensor-product lift (J ⊗ J ⊗ J) u on element-local fields.
+
+    ``u``: (E, (n_in+1)^3) in (t, s, r) node order; ``j``: (n_out+1, n_in+1)
+    1-D interpolation matrix.  Three batched contractions, same MXU pattern
+    as the operator's gradient stage.
+    """
+    e = u.shape[0]
+    n_in = j.shape[1]
+    u3 = u.reshape(e, n_in, n_in, n_in)
+    u3 = jnp.einsum("ra,etsa->etsr", j, u3)
+    u3 = jnp.einsum("sb,etbr->etsr", j, u3)
+    u3 = jnp.einsum("tc,ecsr->etsr", j, u3)
+    return u3.reshape(e, -1)
+
+
+def make_transfer_pair(
+    prob_f, prob_c
+) -> tuple[Callable[[jax.Array], jax.Array], Callable[[jax.Array], jax.Array]]:
+    """(prolong, restrict) between two assembled levels of one element grid.
+
+    Prolongation is global nodal interpolation: scatter the coarse vector,
+    lift with J⊗J⊗J per element, then *average* the (identical) element
+    copies back onto fine DOFs — ``P = Z_f^T W_f Ĵ Z_c``.  Restriction is
+    built as the exact transpose ``R = P^T = Z_c^T Ĵ^T W_f Z_f`` so the
+    V-cycle stays symmetric for PCG.
+    """
+    j = jnp.asarray(
+        sem.interpolation_matrix(prob_c.mesh.n_degree, prob_f.mesh.n_degree),
+        prob_f.dtype,
+    )
+    l2g_f, l2g_c = prob_f.l2g, prob_c.l2g
+    w_lf = prob_f.w_local
+    ngf, ngc = prob_f.n_global, prob_c.n_global
+
+    def prolong(x_c: jax.Array) -> jax.Array:
+        u_f = tensor3_interp(j, scatter(x_c, l2g_c))
+        return gather(w_lf * u_f, l2g_f, ngf)
+
+    def restrict(r_f: jax.Array) -> jax.Array:
+        u_c = tensor3_interp(j.T, w_lf * scatter(r_f, l2g_f))
+        return gather(u_c, l2g_c, ngc)
+
+    return prolong, restrict
+
+
+def make_vcycle(
+    operators: Sequence[Callable[[jax.Array], jax.Array]],
+    smoothers: Sequence[Callable[[jax.Array], jax.Array]],
+    restricts: Sequence[Callable[[jax.Array], jax.Array]],
+    prolongs: Sequence[Callable[[jax.Array], jax.Array]],
+    coarse_apply: Callable[[jax.Array], jax.Array],
+) -> Callable[[jax.Array], jax.Array]:
+    """Symmetric V-cycle z = M⁻¹ r over pre-built level callables.
+
+    ``operators``/``smoothers`` cover the smoothed levels 0..L-1 (fine
+    first); ``restricts[i]`` maps level i -> i+1, ``prolongs[i]`` back;
+    ``coarse_apply`` handles level L outright.  Pre- and post-smoothing use
+    the *same* symmetric smoother (Chebyshev–Jacobi with z₀=0 is the fixed
+    polynomial q(D⁻¹A)D⁻¹), which with R = P^T makes the whole cycle a
+    symmetric linear map — plain PCG stays valid, no flexible CG needed.
+    The recursion is a static python unroll: one compiled chain per apply.
+    """
+    n_smoothed = len(smoothers)
+
+    def cycle(level: int, r: jax.Array) -> jax.Array:
+        if level == n_smoothed:
+            return coarse_apply(r)
+        smooth, op = smoothers[level], operators[level]
+        z = smooth(r)                                   # pre-smooth (z₀ = 0)
+        zc = cycle(level + 1, restricts[level](r - op(z)))
+        z = z + prolongs[level](zc)                     # coarse-grid correction
+        return z + smooth(r - op(z))                    # post-smooth
+
+    return lambda r: cycle(0, r)
+
+
 @dataclasses.dataclass(frozen=True)
 class PrecondInfo:
     """What make_preconditioner built (for logging/benchmark reporting)."""
@@ -225,6 +408,106 @@ class PrecondInfo:
     kind: str
     degree: int
     lmax: float | None
+    lmin: float | None = None
+    levels: tuple[int, ...] | None = None
+
+
+def make_pmg_preconditioner(
+    prob,
+    operator: Callable[[jax.Array], jax.Array],
+    *,
+    smooth_degree: int = PMG_SMOOTH_DEGREE,
+    lanczos_iters: int = 10,
+    coarse_solve: str = "direct",
+    coarse_iters: int = 16,
+    ladder: Sequence[int] | None = None,
+) -> tuple[Callable[[jax.Array], jax.Array], PrecondInfo]:
+    """Single-shard p-multigrid V-cycle preconditioner.
+
+    Levels are rediscretized with ``operator.coarsen_problem`` down the
+    degree ladder; every smoothed level gets a Chebyshev–Jacobi smoother on
+    the interval [max(0.8·λ_min, λ_max/PMG_SMOOTH_RATIO), CHEB_SAFETY·λ_max]
+    (both ends per level from Lanczos — in the well-conditioned regime the
+    smoother covers the whole spectrum and the cycle nears a direct solve).
+    ``coarse_solve``: "direct" (dense inverse of the degree-1 operator,
+    exact and cheap), "chebyshev" (degree ``coarse_iters`` full-interval
+    Chebyshev), or "jacobi" (``coarse_iters`` damped-Jacobi sweeps) — all
+    fixed linear symmetric maps.
+    """
+    from .operator import coarsen_problem, poisson_assembled
+
+    degrees = tuple(ladder) if ladder is not None else pmg_degree_ladder(
+        prob.mesh.n_degree
+    )
+    if len(degrees) < 2:
+        raise ValueError(f"pmg ladder needs >= 2 levels, got {degrees}")
+    probs = [prob]
+    for nc in degrees[1:]:
+        probs.append(coarsen_problem(probs[-1], nc))
+    ops = [operator] + [poisson_assembled(p) for p in probs[1:]]
+
+    prolongs, restricts = [], []
+    for fine, coarse in zip(probs[:-1], probs[1:]):
+        p_up, r_down = make_transfer_pair(fine, coarse)
+        prolongs.append(p_up)
+        restricts.append(r_down)
+
+    smoothers = []
+    lmax0 = lmin0 = None
+    for i in range(len(probs) - 1):
+        dinv = 1.0 / assembled_diagonal(probs[i])
+        v0 = deterministic_seed_vector(probs[i].n_global, dinv.dtype)
+        lmin_e, lmax_e = lanczos_extremes(ops[i], dinv, v0, iters=lanczos_iters)
+        if i == 0:
+            lmax0, lmin0 = float(lmax_e), float(lmin_e)
+        smoothers.append(
+            chebyshev_apply(
+                ops[i],
+                dinv,
+                CHEB_SAFETY * lmax_e,
+                lmin=jnp.maximum(
+                    CHEB_LMIN_SAFETY * lmin_e, lmax_e / PMG_SMOOTH_RATIO
+                ),
+                degree=smooth_degree,
+            )
+        )
+
+    pc, opc = probs[-1], ops[-1]
+    if coarse_solve == "direct":
+        eye = jnp.eye(pc.n_global, dtype=dinv.dtype)
+        amat = jax.vmap(opc, in_axes=1, out_axes=1)(eye)
+        ainv = jnp.linalg.inv(amat)
+        coarse_apply = lambda r: ainv @ r
+    elif coarse_solve in ("chebyshev", "jacobi"):
+        dinv_c = 1.0 / assembled_diagonal(pc)
+        if coarse_solve == "chebyshev":
+            v0 = deterministic_seed_vector(pc.n_global, dinv_c.dtype)
+            lmin_e, lmax_e = lanczos_extremes(opc, dinv_c, v0, iters=lanczos_iters)
+            coarse_apply = chebyshev_apply(
+                opc,
+                dinv_c,
+                CHEB_SAFETY * lmax_e,
+                lmin=CHEB_LMIN_SAFETY * lmin_e,
+                degree=coarse_iters,
+            )
+        else:
+
+            def coarse_apply(r: jax.Array) -> jax.Array:
+                # damped-Jacobi sweeps from z₀=0: a fixed polynomial in
+                # D⁻¹A, hence linear and symmetric like the other choices
+                z = (2.0 / 3.0) * dinv_c * r
+                for _ in range(coarse_iters - 1):
+                    z = z + (2.0 / 3.0) * dinv_c * (r - opc(z))
+                return z
+
+    else:
+        raise ValueError(
+            f"unknown pmg coarse_solve {coarse_solve!r}; "
+            "choose direct | chebyshev | jacobi"
+        )
+
+    apply = make_vcycle(ops[:-1], smoothers, restricts, prolongs, coarse_apply)
+    return apply, PrecondInfo("pmg", smooth_degree, lmax0, lmin0, degrees)
 
 
 def make_preconditioner(
@@ -234,24 +517,57 @@ def make_preconditioner(
     *,
     degree: int = 2,
     power_iters: int = 15,
+    lanczos_iters: int = 10,
+    lmin_source: str = "lanczos",
     fused_d_update: Callable[..., jax.Array] | None = None,
+    pmg_smooth_degree: int = PMG_SMOOTH_DEGREE,
+    pmg_coarse_solve: str = "direct",
+    pmg_coarse_iters: int = 16,
+    pmg_ladder: Sequence[int] | None = None,
 ) -> tuple[Callable[[jax.Array], jax.Array] | None, PrecondInfo]:
     """Build a single-device assembled-path preconditioner by name.
 
-    kind: "none" | "jacobi" | "chebyshev".  Returns (apply, info);
-    apply is None for "none" (plain CG).
+    kind: "none" | "jacobi" | "chebyshev" | "pmg".  Returns (apply, info);
+    apply is None for "none" (plain CG).  For "chebyshev",
+    ``lmin_source="lanczos"`` (default) estimates *both* interval ends with
+    ``lanczos_iters`` Lanczos steps; ``"ratio"`` reproduces the legacy fixed
+    λ_max/CHEB_LMIN_RATIO lower bound (with ``power_iters`` power-iteration
+    steps for λ_max).  For "pmg", ``pmg_smooth_degree`` is the per-level
+    smoother degree (``degree`` stays the standalone-Chebyshev knob) and the
+    other ``pmg_*`` knobs select the ladder and coarsest solve.
     """
     if kind not in PRECOND_KINDS:
         raise ValueError(f"unknown precond {kind!r}; choose from {PRECOND_KINDS}")
     if kind == "none":
         return None, PrecondInfo("none", 0, None)
+    if kind == "pmg":
+        return make_pmg_preconditioner(
+            prob,
+            operator,
+            smooth_degree=pmg_smooth_degree,
+            lanczos_iters=lanczos_iters,
+            coarse_solve=pmg_coarse_solve,
+            coarse_iters=pmg_coarse_iters,
+            ladder=pmg_ladder,
+        )
     diag = assembled_diagonal(prob)
     dinv = 1.0 / diag
     if kind == "jacobi":
         return jacobi_apply(dinv), PrecondInfo("jacobi", 1, None)
     v0 = deterministic_seed_vector(prob.n_global, diag.dtype)
-    lmax = CHEB_SAFETY * power_lambda_max(operator, dinv, v0, iters=power_iters)
+    if lmin_source == "lanczos":
+        lmin_e, lmax_e = lanczos_extremes(operator, dinv, v0, iters=lanczos_iters)
+        lmax = CHEB_SAFETY * lmax_e
+        lmin = CHEB_LMIN_SAFETY * lmin_e
+    elif lmin_source == "ratio":
+        lmax = CHEB_SAFETY * power_lambda_max(operator, dinv, v0, iters=power_iters)
+        lmin = None
+    else:
+        raise ValueError(f"unknown lmin_source {lmin_source!r}")
     apply = chebyshev_apply(
-        operator, dinv, lmax, degree=degree, fused_d_update=fused_d_update
+        operator, dinv, lmax, lmin=lmin, degree=degree,
+        fused_d_update=fused_d_update,
     )
-    return apply, PrecondInfo("chebyshev", degree, float(lmax))
+    return apply, PrecondInfo(
+        "chebyshev", degree, float(lmax), None if lmin is None else float(lmin)
+    )

@@ -17,6 +17,8 @@ __all__ = [
     "gll_nodes_weights",
     "derivative_matrix",
     "reference_element",
+    "interpolation_matrix",
+    "interp_coords_3d",
 ]
 
 
@@ -96,6 +98,52 @@ def derivative_matrix(n_degree: int) -> np.ndarray:
     d[0, 0] = -n * (n + 1) / 4.0
     d[n, n] = n * (n + 1) / 4.0
     return d
+
+
+@functools.lru_cache(maxsize=128)
+def interpolation_matrix(n_from: int, n_to: int) -> np.ndarray:
+    """1-D GLL degree-interpolation matrix J: degree ``n_from`` -> ``n_to``.
+
+    ``J[i, j] = ℓ_j(x_i^{to})`` — the degree-``n_from`` Lagrange basis on the
+    GLL nodes evaluated at the degree-``n_to`` GLL nodes, shape
+    ``(n_to+1, n_from+1)``.  ``J @ u`` interpolates nodal values and is exact
+    for polynomials of degree <= ``n_from``; the tensor-product lift
+    ``J ⊗ J ⊗ J`` is the element-local p-multigrid prolongation
+    (``n_from < n_to``) and its transpose the restriction.  Evaluated in the
+    barycentric form, which is stable on the clustered GLL nodes.
+    """
+    xf, _ = gll_nodes_weights(int(n_from))
+    xt, _ = gll_nodes_weights(int(n_to))
+    diff = xf[:, None] - xf[None, :]
+    np.fill_diagonal(diff, 1.0)
+    wb = 1.0 / np.prod(diff, axis=1)          # barycentric weights
+    out = np.zeros((xt.size, xf.size), dtype=np.float64)
+    for i, x in enumerate(xt):
+        dx = x - xf
+        hit = np.isclose(dx, 0.0, atol=1e-14)
+        if hit.any():                          # target node coincides (±1 always)
+            out[i, np.argmax(hit)] = 1.0
+        else:
+            t = wb / dx
+            out[i] = t / t.sum()
+    return out
+
+
+def interp_coords_3d(j: np.ndarray, coords: np.ndarray) -> np.ndarray:
+    """Sample element node coordinates on a different-degree GLL grid.
+
+    ``coords``: (E, (nf+1)^3, 3) in (t, s, r) node order; ``j``: the 1-D
+    ``interpolation_matrix(n_from, n_to)``. Exact for the polynomial
+    coordinate maps produced by ``mesh.build_box_mesh``, so the coarse level
+    of a p-multigrid hierarchy sits on the same curved geometry.
+    """
+    e = coords.shape[0]
+    nf1 = j.shape[1]
+    c3 = coords.reshape(e, nf1, nf1, nf1, 3)
+    c3 = np.einsum("ra,etsac->etsrc", j, c3)
+    c3 = np.einsum("sb,etbrc->etsrc", j, c3)
+    c3 = np.einsum("tc,ecsrx->etsrx", j, c3)
+    return c3.reshape(e, -1, 3)
 
 
 def reference_element(n_degree: int) -> dict[str, np.ndarray]:

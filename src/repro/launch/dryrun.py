@@ -347,6 +347,8 @@ def run_poisson_cell(name: str, mesh_kind: str) -> dict:
     run = dist_cg(
         prob, mesh, b_in, n_iter=pc.n_iter, tol=pc.tol,
         precond=pc.precond, cheb_degree=pc.cheb_degree,
+        pmg_smooth_degree=pc.pmg_smooth_degree,
+        pmg_coarse_iters=pc.pmg_coarse_iters,
     )
     lowered = jax.jit(run.func).lower(*run.args)
     t_lower = time.time() - t0

@@ -137,7 +137,7 @@ assert err < 1e-9, err
 # scattered baseline
 bL = jnp.take(b_boxes, jnp.asarray(prob.l2g.reshape(-1)), axis=1).reshape(
     grid.size, prob.e_local, -1)
-xl, rd2 = jax.jit(dist_cg_scattered(prob, mesh, bL, n_iter=150))()
+xl, rd2, _it = jax.jit(dist_cg_scattered(prob, mesh, bL, n_iter=150))()
 xl_ref = jnp.take(jnp.asarray(box_from_global(np.array(res.x))),
                   jnp.asarray(prob.l2g.reshape(-1)), axis=1).reshape(xl.shape)
 assert np.abs(np.array(xl) - np.array(xl_ref)).max() < 1e-9

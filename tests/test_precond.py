@@ -154,7 +154,11 @@ def test_pcg_with_fused_pallas_stages(rng):
         np.array(got_res.x), np.array(ref_res.x), rtol=2e-4, atol=2e-5
     )
 
-    pc_ref, _ = make_preconditioner("chebyshev", prob, a, degree=3)
+    # ratio mode so the reference interval matches _lmax_of's power-iteration
+    # bound (the lanczos default estimates both interval ends instead)
+    pc_ref, _ = make_preconditioner(
+        "chebyshev", prob, a, degree=3, lmin_source="ratio"
+    )
     pc_pl = chebyshev_apply(
         a, dinv, _lmax_of(prob, a), degree=3,
         fused_d_update=ops.make_fused_cheb_d_update(interpret=True),
@@ -243,6 +247,72 @@ print("OK")
     )
 
 
+def test_lanczos_brackets_spectrum(prob64):
+    """Lanczos Ritz values bracket the true spectrum of D⁻¹A from inside
+    (ISSUE satellite: λ_min estimation replaces the fixed λ_max/30 bound)."""
+    from repro.core.precond import lanczos_extremes
+
+    a = poisson_assembled(prob64)
+    dinv = 1.0 / assembled_diagonal(prob64)
+    ng = prob64.n_global
+    amat = np.array(jax.vmap(a, in_axes=1, out_axes=1)(jnp.eye(ng)))
+    ev = np.linalg.eigvals(np.diag(np.array(dinv)) @ amat).real
+    v0 = deterministic_seed_vector(ng, jnp.float64)
+    lmin, lmax = lanczos_extremes(a, dinv, v0, iters=12)
+    assert 0.9 * ev.max() <= float(lmax) <= 1.02 * ev.max()
+    assert 0.98 * ev.min() <= float(lmin) <= 1.6 * ev.min()
+    # the tightened interval must sit well above the legacy lmax/30 bound
+    # on this well-conditioned problem
+    assert float(lmin) > float(lmax) / 30.0
+
+
+def test_distributed_scattered_pcg_parity():
+    """ISSUE satellite: dist_cg_scattered gains precond=/tol= matching
+    dist_cg — same solution, preconditioning cuts iterations."""
+    run_subprocess(
+        """
+import jax
+jax.config.update("jax_enable_x64", True)
+import numpy as np, jax.numpy as jnp
+from repro.compat import make_mesh
+from repro.core.distributed import build_dist_problem, dist_cg, dist_cg_scattered
+from repro.comms.topology import ProcessGrid
+
+N = 3
+grid = ProcessGrid((2, 2, 2)); local = (2, 1, 1)
+mesh = make_mesh((8,), ("ranks",))
+prob = build_dist_problem(N, grid, local, lam=0.8, dtype=jnp.float64)
+rng = np.random.default_rng(0)
+b = jnp.asarray(rng.standard_normal((8, prob.m3)))
+xa, rdotr, it_a, hist = jax.jit(dist_cg(
+    prob, mesh, b, n_iter=300, tol=1e-10, precond="chebyshev"))()
+l2g = jnp.asarray(prob.l2g.reshape(-1))
+# consistent scattered rhs from the (consistent) assembled solve's b
+from repro.comms.halo import copy_exchange
+from repro.compat import shard_map
+from jax.sharding import PartitionSpec as P
+mk = shard_map(
+    lambda bb: copy_exchange(
+        bb[0].reshape(prob.box_shape[::-1]), prob.grid, "ranks"
+    ).reshape(1, -1),
+    mesh=mesh, in_specs=P("ranks"), out_specs=P("ranks"))
+b_cons = mk(b)
+bL = jnp.take(b_cons, l2g, axis=1).reshape(8, prob.e_local, -1)
+its = {}
+for kind in ("none", "jacobi", "chebyshev"):
+    xl, rd, its_k = jax.jit(dist_cg_scattered(
+        prob, mesh, bL, n_iter=300, tol=1e-10, precond=kind))()
+    its[kind] = int(its_k)
+    assert int(its_k) < 300, (kind, int(its_k))
+    xl_ref = jnp.take(xa, l2g, axis=1).reshape(xl.shape)
+    err = np.abs(np.array(xl) - np.array(xl_ref)).max()
+    assert err < 1e-7, (kind, err)
+assert its["chebyshev"] < its["none"], its
+print("OK", its)
+"""
+    )
+
+
 def test_distributed_chebyshev_beats_plain_on_deformed():
     """Sharded PCG on a deformed global mesh: fewer iterations to tol."""
     run_subprocess(
@@ -277,12 +347,15 @@ for kind in ("none", "chebyshev"):
 assert it["chebyshev"] < it["none"], it
 
 # setup-time spectrum estimate == in-graph estimate (same iterate count)
-from repro.core.distributed import dist_lambda_max
-lmax = dist_lambda_max(prob, mesh)
+from repro.core.distributed import dist_lambda_max, dist_spectrum
+lmin, lmax = dist_spectrum(prob, mesh)
 run = jax.jit(dist_cg(prob, mesh, b, n_iter=300, tol=1e-6,
-                      precond="chebyshev", lmax=lmax))
+                      precond="chebyshev", lmin=lmin, lmax=lmax))
 x2, rdotr2, iters2, hist2 = run()
 assert int(iters2) == it["chebyshev"], (int(iters2), it)
+# legacy power-iteration helper still brackets the Lanczos top estimate
+lam_pow = dist_lambda_max(prob, mesh)
+assert 0.8 * lmax <= lam_pow <= 1.1 * lmax, (lam_pow, lmax)
 print("OK", it)
 """
     )

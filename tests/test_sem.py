@@ -48,3 +48,31 @@ def test_derivative_matrix_corner_values():
     np.testing.assert_allclose(d[n, n], n * (n + 1) / 4)
     # row sums vanish: derivative of the constant
     np.testing.assert_allclose(d.sum(axis=1), 0, atol=1e-12)
+
+
+@pytest.mark.parametrize("n_from,n_to", [(2, 5), (4, 7), (7, 15), (15, 8)])
+def test_interpolation_matrix_properties(n_from, n_to):
+    """Row-sum 1 (partition of unity), exactness on source-degree
+    polynomials, and identity when degrees match."""
+    j = sem.interpolation_matrix(n_from, n_to)
+    assert j.shape == (n_to + 1, n_from + 1)
+    np.testing.assert_allclose(j.sum(axis=1), 1.0, atol=1e-13)
+    xf, _ = sem.gll_nodes_weights(n_from)
+    xt, _ = sem.gll_nodes_weights(n_to)
+    for p in range(min(n_from, n_to) + 1):
+        np.testing.assert_allclose(j @ xf**p, xt**p, atol=1e-12)
+    np.testing.assert_allclose(
+        sem.interpolation_matrix(n_from, n_from), np.eye(n_from + 1), atol=1e-14
+    )
+
+
+def test_interp_coords_3d_exact_for_mesh_maps():
+    """Sampling the polynomial coordinate map at coarse GLL nodes matches
+    building the coarse mesh directly (regular geometry)."""
+    from repro.core.mesh import build_box_mesh
+
+    fine = build_box_mesh(6, (2, 1, 2))
+    coarse = build_box_mesh(3, (2, 1, 2))
+    j = sem.interpolation_matrix(6, 3)
+    got = sem.interp_coords_3d(j, fine.coords)
+    np.testing.assert_allclose(got, coarse.coords, atol=1e-13)
