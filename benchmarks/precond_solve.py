@@ -2,20 +2,24 @@
 
 Beyond the NekBone 100-fixed-iteration benchmark: solve λ-screened deformed
 Poisson problems to ``tol=1e-8`` with each rung of the preconditioner
-ladder (none / jacobi / chebyshev / pmg) and report
+ladder — none / jacobi / chebyshev / schwarz / pmg (Chebyshev-smoothed) /
+pmg-schwarz (Schwarz-smoothed) / pmg-galerkin (exact PᵀAP coarse
+operators) — and report
 
   * iterations to tolerance (the preconditioner-quality signal),
   * wall time, and the *effective* FOM GFLOPS (NekBone flop model ×
     iterations / time) — Chebyshev pays extra operator applies per
-    iteration and the pMG V-cycle pays a whole smoothing hierarchy, so
-    fewer iterations must buy back the per-iteration cost to win
-    wall-clock.
+    iteration, Schwarz pays per-element extended-block FDM solves, and the
+    pMG V-cycle pays a whole smoothing hierarchy, so fewer iterations must
+    buy back the per-iteration cost to win wall-clock.
 
 Degrees follow the paper's sweep corners: N ∈ {3, 7, 9, 15} (quick: {3, 7}),
 deform=0.15 so Jacobi has a non-trivial diagonal to chew on.  Solves run in
-float64 (tol=1e-8 sits below what fp32 CG can resolve); the acceptance tier
-is N=7, lam=1.0 where pmg must reach tol in ≤ half the chebyshev
-iterations.
+float64 (tol=1e-8 sits below what fp32 CG can resolve).  Acceptance tiers
+(tests/test_schwarz.py, tests/test_pmg.py): at N=7, λ=1.0 pmg reaches tol
+in ≤ half the chebyshev iterations; at N=7, λ=0.1 (the ill-conditioned
+regime Schwarz targets) pmg-schwarz and pmg-galerkin each need ≤ the plain
+pmg count.
 
 ``main`` returns CSV rows; ``records`` returns the same data as dicts for
 the machine-readable BENCH json emitted by ``benchmarks.run``.
@@ -24,7 +28,26 @@ from __future__ import annotations
 
 import time
 
-PRECONDS = ("none", "jacobi", "chebyshev", "pmg")
+# ladder order: cost per application rises, iterations-to-tol falls
+PRECONDS = (
+    "none",
+    "jacobi",
+    "chebyshev",
+    "schwarz",
+    "pmg",
+    "pmg-schwarz",
+    "pmg-galerkin",
+)
+# kind -> (make_preconditioner kind, extra kwargs)
+PRECOND_RECIPES = {
+    "none": ("none", {}),
+    "jacobi": ("jacobi", {}),
+    "chebyshev": ("chebyshev", {"degree": 2}),
+    "schwarz": ("schwarz", {}),
+    "pmg": ("pmg", {}),
+    "pmg-schwarz": ("pmg", {"pmg_smoother": "schwarz"}),
+    "pmg-galerkin": ("pmg", {"pmg_coarse_op": "galerkin"}),
+}
 TOL = 1e-8
 
 
@@ -46,8 +69,9 @@ def _solve_case(n: int, shape, lam: float, tol: float):
     e = prob.mesh.n_elements
 
     out = []
-    for kind in PRECONDS:
-        pc, info = make_preconditioner(kind, prob, a, degree=2)
+    for name in PRECONDS:
+        kind, kwargs = PRECOND_RECIPES[name]
+        pc, info = make_preconditioner(kind, prob, a, **kwargs)
         solve = jax.jit(
             lambda bb, pc=pc: cg_assembled(a, bb, n_iter=500, tol=tol, precond=pc)
         )
@@ -64,7 +88,7 @@ def _solve_case(n: int, shape, lam: float, tol: float):
                 "n": n,
                 "dofs": prob.n_global,
                 "lam": lam,
-                "kind": kind,
+                "kind": name,
                 "iters_to_tol": iters,
                 "time_s": dt,
                 "fom_gflops": fom,

@@ -11,8 +11,10 @@
 ``--json PATH`` additionally writes a machine-readable summary: every
 section's raw CSV rows plus the precond sweep as structured records
 (per-config iterations-to-tol, solve time, effective FOM) so the perf
-trajectory is tracked across PRs — CI passes ``--json BENCH_pr2.json``
-(bump the name per PR).
+trajectory is tracked across PRs — CI passes ``--json BENCH_pr3.json``
+(bump the name per PR) and gates on ``scripts/compare_bench.py``, which
+fails if any (N, λ, kind) case needs more iterations than the previous
+PR's json recorded.
 """
 import argparse
 import json

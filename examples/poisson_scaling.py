@@ -42,7 +42,9 @@ def main() -> None:
     ap.add_argument("--n", type=int, default=7)
     ap.add_argument("--local", type=int, default=2, help="elements per axis per rank")
     ap.add_argument("--iters", type=int, default=100)
-    ap.add_argument("--precond", choices=["none", "jacobi", "chebyshev", "pmg"],
+    ap.add_argument("--precond",
+                    choices=["none", "jacobi", "chebyshev", "schwarz", "pmg",
+                             "pmg-schwarz"],
                     default="none", help="PCG preconditioner")
     ap.add_argument("--cheb-degree", type=int, default=2)
     ap.add_argument("--tol", type=float, default=None,
@@ -70,9 +72,12 @@ def main() -> None:
     if args.precond == "chebyshev":
         lmin, lmax = dist_spectrum(prob, mesh, two_phase=args.two_phase)
         print(f"lanczos: spectrum(D^-1 A) ~= [{lmin:.4f}, {lmax:.4f}]")
+    precond, smoother = args.precond, "chebyshev"
+    if precond == "pmg-schwarz":
+        precond, smoother = "pmg", "schwarz"
     run = jax.jit(dist_cg(prob, mesh, b, n_iter=args.iters, tol=args.tol,
-                          precond=args.precond, cheb_degree=args.cheb_degree,
-                          lmin=lmin, lmax=lmax,
+                          precond=precond, cheb_degree=args.cheb_degree,
+                          pmg_smoother=smoother, lmin=lmin, lmax=lmax,
                           two_phase=args.two_phase, record_history=True))
     x, rdotr, iters, hist = run()
     jax.block_until_ready(x)

@@ -1,0 +1,87 @@
+#!/usr/bin/env python
+"""Verify that markdown cross-references in this repo resolve.
+
+Usage:
+    python scripts/check_links.py [files...]       # default: README + docs/
+
+Checks every ``[text](target)`` and bare ``path`` reference in backticks:
+
+  * relative file links (``docs/SOLVERS.md``, ``src/repro/core/precond.py``)
+    must exist on disk (anchors after ``#`` are stripped);
+  * ``module.attr``-style backtick references are left alone (not links);
+  * http(s) URLs are *not* fetched (CI runs offline) — only syntax-checked.
+
+Exit 1 with a per-file report if anything dangles, so the docs cannot
+drift from the tree they describe.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+DEFAULT = ["README.md", "ROADMAP.md", "docs/ARCHITECTURE.md", "docs/SOLVERS.md"]
+
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+# backtick references that look like repo paths (contain a slash and a dot)
+TICK_PATH = re.compile(r"`([A-Za-z0-9_./-]+/[A-Za-z0-9_.-]+\.[A-Za-z0-9]+)`")
+
+
+def _display(md: Path) -> str:
+    try:
+        return str(md.resolve().relative_to(REPO))
+    except ValueError:
+        return str(md)
+
+
+def check_file(md: Path) -> list[str]:
+    errors = []
+    text = md.read_text()
+    targets = []
+    for match in MD_LINK.finditer(text):
+        targets.append((match.group(1), "link"))
+    for match in TICK_PATH.finditer(text):
+        targets.append((match.group(1), "backtick path"))
+    for target, kind in targets:
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:
+            continue  # pure intra-document anchor
+        # glob-ish references ("src/repro/configs/*.py") are descriptive
+        if any(ch in path for ch in "*<>"):
+            continue
+        candidates = (
+            (md.parent / path).resolve(),
+            (REPO / path).resolve(),
+            # module shorthand: `core/precond.py` means the package path
+            (REPO / "src" / "repro" / path).resolve(),
+        )
+        if not any(c.exists() for c in candidates):
+            errors.append(f"{_display(md)}: dangling {kind} -> {target}")
+    return errors
+
+
+def main() -> int:
+    # relative CLI paths resolve against the repo root, not the cwd
+    files = [
+        Path(a) if Path(a).is_absolute() else REPO / a for a in sys.argv[1:]
+    ] or [REPO / rel for rel in DEFAULT if (REPO / rel).exists()]
+    all_errors = []
+    for md in files:
+        if not md.exists():
+            all_errors.append(f"missing file: {md}")
+            continue
+        all_errors.extend(check_file(md))
+    for err in all_errors:
+        print(err)
+    if all_errors:
+        print(f"\n{len(all_errors)} dangling reference(s)")
+        return 1
+    print(f"all references resolve in {len(files)} file(s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,82 @@
+#!/usr/bin/env python
+"""Gate iterations-to-tolerance against the previous PR's BENCH json.
+
+Usage:
+    python scripts/compare_bench.py BENCH_pr2.json BENCH_pr3.json [--slack N]
+
+Compares the ``precond_records`` of two ``benchmarks.run --json`` summaries
+on the (N, lam, kind) cases they share and fails (exit 1) if any case in
+the new json needs more than ``slack`` extra CG iterations to reach
+tolerance — the preconditioner-quality axis of the FOM must never regress.
+New kinds (ladder growth) and removed cases are reported but never fail;
+wall-clock and GFLOPS are machine-dependent and intentionally ignored.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load_records(path: str) -> dict[tuple, int]:
+    with open(path) as f:
+        summary = json.load(f)
+    recs = summary.get("precond_records", [])
+    if not recs:
+        raise SystemExit(f"{path}: no precond_records section")
+    return {
+        (r["n"], r["lam"], r["kind"]): int(r["iters_to_tol"]) for r in recs
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline", help="previous PR's BENCH json")
+    ap.add_argument("candidate", help="this PR's BENCH json")
+    ap.add_argument(
+        "--slack",
+        type=int,
+        default=0,
+        help="allowed extra iterations per case (default 0)",
+    )
+    args = ap.parse_args()
+
+    base = load_records(args.baseline)
+    cand = load_records(args.candidate)
+    shared = sorted(set(base) & set(cand))
+    new = sorted(set(cand) - set(base))
+    gone = sorted(set(base) - set(cand))
+
+    failures = []
+    for key in shared:
+        n, lam, kind = key
+        delta = cand[key] - base[key]
+        marker = "REGRESSION" if delta > args.slack else "ok"
+        print(
+            f"{marker:>10}  N={n} lam={lam} {kind:>14}: "
+            f"{base[key]} -> {cand[key]} ({delta:+d})"
+        )
+        if delta > args.slack:
+            failures.append(key)
+    for key in new:
+        n, lam, kind = key
+        print(f"{'new':>10}  N={n} lam={lam} {kind:>14}: {cand[key]}")
+    for key in gone:
+        n, lam, kind = key
+        print(f"{'removed':>10}  N={n} lam={lam} {kind:>14}")
+
+    if not shared:
+        print("error: no shared (N, lam, kind) cases to compare")
+        return 1
+    if failures:
+        print(
+            f"\n{len(failures)} iterations-to-tol regression(s) vs "
+            f"{args.baseline}"
+        )
+        return 1
+    print(f"\nall {len(shared)} shared cases within slack={args.slack}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -27,7 +27,13 @@ from jax import lax
 
 from .topology import ProcessGrid
 
-__all__ = ["sum_exchange", "copy_exchange", "rank_coords"]
+__all__ = [
+    "sum_exchange",
+    "copy_exchange",
+    "expand_exchange",
+    "contract_exchange",
+    "rank_coords",
+]
 
 
 def rank_coords(grid: ProcessGrid, axis_name: str) -> tuple[jax.Array, jax.Array, jax.Array]:
@@ -90,6 +96,111 @@ def sum_exchange(box: jax.Array, grid: ProcessGrid, axis_name: str) -> jax.Array
         new_low = jnp.where(c > 0, recv, keep)
         box = _set_face(box, dim, 0, new_low)
     return box
+
+
+def _shell(box: jax.Array, dim: int, lo: int, hi: int) -> jax.Array:
+    sl = [slice(None)] * 3
+    sl[_axis(dim)] = slice(lo, hi)
+    return box[tuple(sl)]
+
+
+def _set_shell(box: jax.Array, dim: int, lo: int, hi: int, val) -> jax.Array:
+    sl = [slice(None)] * 3
+    sl[_axis(dim)] = slice(lo, hi)
+    return box.at[tuple(sl)].set(val)
+
+
+def _add_shell(box: jax.Array, dim: int, lo: int, hi: int, val) -> jax.Array:
+    sl = [slice(None)] * 3
+    sl[_axis(dim)] = slice(lo, hi)
+    return box.at[tuple(sl)].add(val)
+
+
+def expand_exchange(
+    box: jax.Array, grid: ProcessGrid, axis_name: str, depth: int
+) -> jax.Array:
+    """Grow a consistent box by a ``depth``-node shell of neighbor data.
+
+    The overlap transport of the Schwarz smoother: rank-boundary element
+    blocks extend ``depth`` GLL node layers into neighbor ranks, so the
+    (bz, by, bx)-shaped consistent box comes back as
+    (bz+2d, by+2d, bx+2d) with shells holding the neighbors' interior
+    slabs (their node layers just inside the shared interface).  Shells
+    with no neighbor — unpartitioned dims and physical domain boundaries —
+    stay zero (ppermute's zero-fill), matching the dummy slots of the
+    extended-block FDM setup.
+
+    The sequential dimension sweeps reuse the sum_exchange trick: the dim-1
+    slab a neighbor sends already contains its dim-0 shell, so edge/corner
+    overlap data propagates without explicit 26-neighbor messages.
+    ``contract_exchange`` is the exact adjoint (same sweeps reversed).
+    """
+    d = int(depth)
+    if d == 0:
+        return box
+    box = jnp.pad(box, d)
+    for dim in range(3):
+        if grid.shape[dim] == 1:
+            continue
+        ax = _axis(dim)
+        m = box.shape[ax]          # padded length = original + 2d
+        morig = m - 2 * d
+        # low shell <- -neighbor's top interior slab (their original
+        # indices [morig-1-d, morig-1) == padded [morig-1, morig-1+d))
+        recv = lax.ppermute(
+            _shell(box, dim, morig - 1, morig - 1 + d),
+            axis_name,
+            grid.shift_perm(dim, +1),
+        )
+        box = _set_shell(box, dim, 0, d, recv)
+        # high shell <- +neighbor's bottom interior slab (their original
+        # [1, 1+d) == padded [1+d, 1+2d))
+        recv = lax.ppermute(
+            _shell(box, dim, 1 + d, 1 + 2 * d),
+            axis_name,
+            grid.shift_perm(dim, -1),
+        )
+        box = _set_shell(box, dim, m - d, m, recv)
+    return box
+
+
+def contract_exchange(
+    box: jax.Array, grid: ProcessGrid, axis_name: str, depth: int
+) -> jax.Array:
+    """Adjoint of :func:`expand_exchange`: return shell contributions home.
+
+    ``box`` is a (bz+2d, by+2d, bx+2d) accumulation of extended-block
+    gather contributions; each shell slab belongs to a neighbor rank's
+    interior and is shipped back and added there, then zeroed.  Dimensions
+    run in reverse order so edge/corner contributions hop home
+    dimension-by-dimension (the transpose of the expand sweeps).
+    Contributions in never-filled shells (domain boundaries) correspond to
+    dummy FDM slots and are discarded.  Returns the stripped
+    (bz, by, bx) box of per-rank partial sums — interface *face* replicas
+    still need the usual ``sum_exchange`` to become consistent.
+    """
+    d = int(depth)
+    if d == 0:
+        return box
+    for dim in (2, 1, 0):
+        ax = _axis(dim)
+        m = box.shape[ax]
+        morig = m - 2 * d
+        if grid.shape[dim] > 1:
+            # my low shell -> -neighbor's top interior ([morig-1, morig-1+d)
+            # in their padded indexing); I receive the +neighbor's low shell
+            recv = lax.ppermute(
+                _shell(box, dim, 0, d), axis_name, grid.shift_perm(dim, -1)
+            )
+            box = _add_shell(box, dim, morig - 1, morig - 1 + d, recv)
+            recv = lax.ppermute(
+                _shell(box, dim, m - d, m), axis_name, grid.shift_perm(dim, +1)
+            )
+            box = _add_shell(box, dim, 1 + d, 1 + 2 * d, recv)
+        zero = jnp.zeros_like(_shell(box, dim, 0, d))
+        box = _set_shell(box, dim, 0, d, zero)
+        box = _set_shell(box, dim, m - d, m, zero)
+    return box[d:-d, d:-d, d:-d]
 
 
 def copy_exchange(box: jax.Array, grid: ProcessGrid, axis_name: str) -> jax.Array:

@@ -20,21 +20,39 @@ class PoissonConfig:
     dtype: str = "float32"
     # preconditioner ladder rung: "none" (NekBone-faithful plain CG),
     # "jacobi" (assembled-diagonal scale), "chebyshev" (degree-`cheb_degree`
-    # Chebyshev–Jacobi on the Lanczos-estimated [λ_min, λ_max] interval), or
-    # "pmg" (Chebyshev-smoothed p-multigrid V-cycle N → ⌈N/2⌉ → … → 1, the
+    # Chebyshev–Jacobi on the Lanczos-estimated [λ_min, λ_max] interval),
+    # "schwarz" (overlapping element-block FDM solves, symmetric weighted
+    # additive Schwarz — the robust rung for deformed/ill-conditioned
+    # meshes), or "pmg" (p-multigrid V-cycle N → ⌈N/2⌉ → … → 1, the
     # production Nek5000/RS configuration).
     precond: str = "none"
     cheb_degree: int = 2                # standalone Chebyshev polynomial degree
     tol: float | None = None            # None = fixed n_iter (NekBone mode)
     # pmg knobs: per-level smoother degree (Chebyshev order of the pre/post
-    # smoothing sweeps) and the degree of the full-interval Chebyshev solve
-    # on the coarsest (N=1) level of the ladder.
-    pmg_smooth_degree: int = 4
+    # smoothing sweeps; None = per-smoother default), the smoother base
+    # ("chebyshev" = Chebyshev–Jacobi, "schwarz" = Chebyshev-accelerated
+    # overlapping Schwarz), the coarse-operator construction ("redisc"
+    # rediscretizes, "galerkin" = exact P^T A P triple products,
+    # single-device only), and the degree of the full-interval Chebyshev
+    # solve on the coarsest (N=1) level of the ladder.
+    pmg_smooth_degree: int | None = None
+    pmg_smoother: str = "chebyshev"
+    pmg_coarse_op: str = "redisc"
     pmg_coarse_iters: int = 16
+    # schwarz knobs: overlap width in GLL nodes (0 = FDM block Jacobi) and
+    # the Chebyshev degree of the in-eigenbasis block solve (the algebraic
+    # screen λI breaks pure tensor structure; higher = closer to exact
+    # block inverses at ~linear extra cost per application).
+    schwarz_overlap: int = 1
+    schwarz_inner_degree: int = 7
 
     def __post_init__(self):
-        if self.precond not in ("none", "jacobi", "chebyshev", "pmg"):
+        if self.precond not in ("none", "jacobi", "chebyshev", "schwarz", "pmg"):
             raise ValueError(f"unknown precond {self.precond!r}")
+        if self.pmg_smoother not in ("chebyshev", "schwarz"):
+            raise ValueError(f"unknown pmg_smoother {self.pmg_smoother!r}")
+        if self.pmg_coarse_op not in ("redisc", "galerkin"):
+            raise ValueError(f"unknown pmg_coarse_op {self.pmg_coarse_op!r}")
 
     def dofs_per_rank(self) -> int:
         n = self.n_degree
@@ -59,6 +77,16 @@ CONFIGS = {
     ),
     "hipbone_n15_pmg": PoissonConfig(
         "hipbone_n15_pmg", 15, (4, 4, 4), precond="pmg", tol=1e-6
+    ),
+    # the robust rung: overlapping-Schwarz FDM blocks, for the
+    # ill-conditioned (small-λ / deformed-mesh) regime
+    "hipbone_n7_schwarz": PoissonConfig(
+        "hipbone_n7_schwarz", 7, (8, 8, 8), lam=0.1,
+        precond="schwarz", tol=1e-8
+    ),
+    "hipbone_n7_pmg_schwarz": PoissonConfig(
+        "hipbone_n7_pmg_schwarz", 7, (8, 8, 8), lam=0.1,
+        precond="pmg", pmg_smoother="schwarz", tol=1e-8
     ),
 }
 

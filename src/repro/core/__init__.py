@@ -35,6 +35,8 @@ from .operator import (
     problem_from_mesh,
 )
 from .precond import (
+    PMG_COARSE_OPS,
+    PMG_SMOOTHERS,
     PRECOND_KINDS,
     assembled_diagonal,
     chebyshev_apply,
@@ -49,11 +51,21 @@ from .precond import (
     power_lambda_max,
     tensor3_interp,
 )
+from .schwarz import (
+    SCHWARZ_INNER_DEGREE,
+    SchwarzFDM,
+    build_fdm,
+    fdm_solve,
+    make_schwarz_apply,
+)
 from .sem import (
     derivative_matrix,
+    extended_interval_matrices,
+    fast_diagonalization_1d,
     gll_nodes_weights,
     interpolation_matrix,
     reference_element,
+    stiffness_matrix_1d,
 )
 
 __all__ = [k for k in dir() if not k.startswith("_")]

@@ -39,7 +39,12 @@ import numpy as np
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from ..comms.halo import copy_exchange, sum_exchange
+from ..comms.halo import (
+    contract_exchange,
+    copy_exchange,
+    expand_exchange,
+    sum_exchange,
+)
 from ..comms.topology import ProcessGrid
 from ..compat import shard_map
 from . import sem
@@ -49,18 +54,28 @@ from .operator import local_poisson
 from .precond import (
     CHEB_LMIN_SAFETY,
     CHEB_SAFETY,
-    PMG_SMOOTH_DEGREE,
-    PMG_SMOOTH_RATIO,
+    PMG_SMOOTHERS,
     PRECOND_KINDS,
+    SCHWARZ_INNER_DEGREE,
     chebyshev_apply,
     jacobi_apply,
     lanczos_extremes,
     local_operator_diagonal,
     make_vcycle,
     pmg_degree_ladder,
+    pmg_smooth_degree_default,
     power_lambda_max,
     seed_values,
+    smoother_interval,
     tensor3_interp,
+)
+from .schwarz import (
+    SchwarzFDM,
+    build_fdm,
+    element_lengths,
+    element_neighbor_flags,
+    fdm_solve,
+    overlap_counts_1d,
 )
 
 __all__ = [
@@ -119,37 +134,50 @@ class DistPoisson:
         return gx * gy * gz
 
 
-def _local_l2g(n: int, local_shape: tuple[int, int, int]) -> tuple[np.ndarray, int]:
-    """Halo-first element ordering + local node -> padded-box flat map."""
-    bx, by, bz = local_shape
-    npts = n + 1
-    mx, my, mz = bx * n + 1, by * n + 1, bz * n + 1
-
-    a = np.arange(npts)
+def _local_node_offsets(n: int, pad: int = 0) -> tuple[np.ndarray, ...]:
+    """Flattened (t, s, r)-ordered local node offsets [-pad, n + pad]."""
+    a = np.arange(-pad, n + pad + 1)
     la, lb, lc = np.meshgrid(a, a, a, indexing="ij")
-    loc_a = la.transpose(2, 1, 0).reshape(-1)
-    loc_b = lb.transpose(2, 1, 0).reshape(-1)
-    loc_c = lc.transpose(2, 1, 0).reshape(-1)
+    return (
+        la.transpose(2, 1, 0).reshape(-1),
+        lb.transpose(2, 1, 0).reshape(-1),
+        lc.transpose(2, 1, 0).reshape(-1),
+    )
 
+
+def _ordered_elements(local_shape: tuple[int, int, int]) -> tuple[np.ndarray, int]:
+    """Halo-first local element coordinates: (E_loc, 3) int array + halo count.
+
+    Elements on any face of the rank's local box come first — their
+    operator contributions feed the halo exchange, and their Schwarz blocks
+    are the only ones reading the expanded-box shells, so the same ordering
+    drives both communication-hiding splits.
+    """
+    bx, by, bz = local_shape
     elems = [
         (i, j, k) for k in range(bz) for j in range(by) for i in range(bx)
     ]
-    # halo-first: an element on any face of the local box goes first
     halo = [
         e
         for e in elems
         if e[0] in (0, bx - 1) or e[1] in (0, by - 1) or e[2] in (0, bz - 1)
     ]
-    interior = [e for e in elems if e not in set(halo)]
-    ordered = halo + interior
+    halo_set = set(halo)
+    interior = [e for e in elems if e not in halo_set]
+    return np.array(halo + interior, dtype=np.int64), len(halo)
 
-    l2g = np.empty((len(ordered), npts**3), dtype=np.int32)
-    for idx, (i, j, k) in enumerate(ordered):
-        gx = i * n + loc_a
-        gy = j * n + loc_b
-        gz = k * n + loc_c
-        l2g[idx] = gx + mx * (gy + my * gz)
-    return l2g, len(halo)
+
+def _local_l2g(n: int, local_shape: tuple[int, int, int]) -> tuple[np.ndarray, int]:
+    """Halo-first element ordering + local node -> padded-box flat map."""
+    bx, by, bz = local_shape
+    mx, my = bx * n + 1, by * n + 1
+    loc_a, loc_b, loc_c = _local_node_offsets(n)
+    ordered, n_halo = _ordered_elements(local_shape)
+
+    gx = ordered[:, 0, None] * n + loc_a[None, :]
+    gy = ordered[:, 1, None] * n + loc_b[None, :]
+    gz = ordered[:, 2, None] * n + loc_c[None, :]
+    return (gx + mx * (gy + my * gz)).astype(np.int32), n_halo
 
 
 def _rank_data(
@@ -209,16 +237,31 @@ def build_dist_problem(
     g_factors: np.ndarray | None = None,
     coords: np.ndarray | None = None,
 ) -> DistPoisson:
-    """Build the sharded problem.
+    """Build the sharded screened-Poisson problem.
 
-    ``g_factors``: optional (R, E_loc, 6, p) geometric factors (tests pass
-    factors extracted from a deformed global mesh); default is the regular
-    unit-box mesh where every element is identical.  ``coords``: optional
-    (R, E_loc, p, 3) node coordinates in the same halo-first element order —
-    geometric factors are then computed here, and p-multigrid
-    (``dist_cg(precond="pmg")``) can rediscretize its coarse levels on the
-    same geometry (with bare ``g_factors`` there is no geometry to coarsen,
-    so pmg requires either ``coords`` or the default regular mesh).
+    Args:
+      n_degree: SEM polynomial degree N.
+      grid: (px, py, pz) process grid over the flattened device mesh.
+      local_shape: (bx, by, bz) elements owned per rank.
+      axis_name: mesh axis name the ranks live on.
+      lam: screen parameter λ.
+      dtype: runtime dtype of the sharded arrays.
+      g_factors: optional (R, E_loc, 6, p) geometric factors in halo-first
+        element order (tests pass factors extracted from a deformed global
+        mesh); default is the regular unit-box mesh where every element is
+        identical.
+      coords: optional (R, E_loc, p, 3) node coordinates in the same
+        halo-first element order — geometric factors are then computed
+        here, and p-multigrid (``dist_cg(precond="pmg")``) can
+        rediscretize its coarse levels on the same geometry (with bare
+        ``g_factors`` there is no geometry to coarsen, so pmg requires
+        either ``coords`` or the default regular mesh).  The Schwarz
+        preconditioner also reads ``coords`` for its per-element
+        directional lengths (regular meshes use the analytic spacing).
+
+    Returns:
+      A :class:`DistPoisson`; per-rank padded box shape is
+      ``(bx·N+1, by·N+1, bz·N+1)`` with interface replicas.
     """
     n = n_degree
     bx, by, bz = local_shape
@@ -275,6 +318,10 @@ def build_pmg_levels(
     prob: DistPoisson, ladder: tuple[int, ...] | None = None
 ) -> tuple[list[DistPoisson], list[np.ndarray]]:
     """The p-multigrid hierarchy for a sharded problem.
+
+    Args:
+      prob: the fine-level :class:`DistPoisson`.
+      ladder: explicit degree ladder; default ``pmg_degree_ladder`` halving.
 
     Returns ``(levels, jmats)``: ``levels[0] is prob`` and each coarser
     level is a full DistPoisson on the *same* process grid and element
@@ -434,6 +481,185 @@ def _box_transfer_pair(
     return prolong, restrict
 
 
+@dataclasses.dataclass(frozen=True)
+class _SchwarzDist:
+    """Setup for the sharded overlapping-Schwarz apply on one level.
+
+    Static (identical on all ranks): the extended local-to-box index maps,
+    split halo-first like the operator — interior blocks read the original
+    box only (their solves overlap the shell exchange in the XLA dataflow),
+    halo blocks read the shell-expanded box.  Sharded (leading axis ranks):
+    the per-element FDM factors (rank-boundary flags and deformed-element
+    lengths differ per rank) and the partition-of-unity weights.
+    """
+
+    overlap: int
+    eh: int                      # halo element count (blocks using shells)
+    ext_shape: tuple[int, int, int]   # expanded box (mx+2s, my+2s, mz+2s)
+    l2g_halo: np.ndarray         # (Eh, m^3) flat indices into expanded box
+    l2g_int: np.ndarray          # (E-Eh, m^3) flat indices into original box
+    fdm_fields: tuple[jax.Array, ...]   # stacked SchwarzFDM arrays (R, ...)
+    wsqrt: jax.Array             # (R, m3) 1/sqrt(overlap counts)
+    lam: float
+    inner_degree: int
+
+    def rank_fdm(self, fields: tuple[jax.Array, ...], sl: slice) -> SchwarzFDM:
+        """Per-rank SchwarzFDM from shard-sliced field arrays."""
+        tm, cm, di, mu, lo, hi = (f[sl] for f in fields)
+        return SchwarzFDM(
+            tmats=tm, cmats=cm, denom_inv=di, musum=mu, inner_lo=lo,
+            inner_hi=hi, lam=self.lam, overlap=self.overlap,
+            inner_degree=self.inner_degree,
+        )
+
+
+def _schwarz_setup(
+    prob: DistPoisson, overlap: int, inner_degree: int
+) -> _SchwarzDist:
+    """Numpy setup of the sharded Schwarz smoother for one level.
+
+    Per-element FDM factors use the rank's node coordinates (or the
+    analytic regular-mesh spacing) and *global* neighbor flags — a rank
+    boundary is interior to the global element grid, so blocks there extend
+    across it; only physical domain boundaries clamp.  The extended index
+    maps shift every coordinate by the overlap so halo blocks address the
+    shell-expanded box.
+    """
+    n = prob.n_degree
+    s = int(overlap)
+    if not 0 <= s <= n - 1:
+        raise ValueError(f"overlap must be in [0, {n - 1}] for N={n}, got {s}")
+    bx, by, bz = prob.local_shape
+    px, py, pz = prob.grid.shape
+    mx, my, mz = prob.box_shape
+    ordered, eh = _ordered_elements(prob.local_shape)
+    loc_a, loc_b, loc_c = _local_node_offsets(n, pad=s)
+
+    # extended maps: halo blocks -> expanded box, interior -> original box
+    ex_x = ordered[:, 0, None] * n + loc_a[None, :]
+    ex_y = ordered[:, 1, None] * n + loc_b[None, :]
+    ex_z = ordered[:, 2, None] * n + loc_c[None, :]
+    mex, mey, mez = mx + 2 * s, my + 2 * s, mz + 2 * s
+    l2g_halo = (
+        (ex_x[:eh] + s) + mex * ((ex_y[:eh] + s) + mey * (ex_z[:eh] + s))
+    ).astype(np.int32)
+    l2g_int = (
+        ex_x[eh:] + mx * (ex_y[eh:] + my * ex_z[eh:])
+    ).astype(np.int32)
+
+    gshape = (px * bx, py * by, pz * bz)   # global element grid
+    regular_lengths = np.array(
+        [1.0 / gshape[0], 1.0 / gshape[1], 1.0 / gshape[2]]
+    )
+    cx = overlap_counts_1d(gshape[0], n, s)
+    cy = overlap_counts_1d(gshape[1], n, s)
+    cz = overlap_counts_1d(gshape[2], n, s)
+
+    fields: list[list[np.ndarray]] = [[] for _ in range(6)]
+    wsqrt = np.empty((prob.grid.size, prob.m3))
+    for r in range(prob.grid.size):
+        ci, cj, ck = prob.grid.coords(r)
+        eidx = ordered + np.array([ci * bx, cj * by, ck * bz])
+        flags = element_neighbor_flags(eidx, gshape)
+        if prob.coords is not None:
+            lengths = element_lengths(prob.coords[r], n)
+        else:
+            lengths = np.broadcast_to(regular_lengths, (prob.e_local, 3))
+        fdm = build_fdm(
+            lengths, flags, n, prob.lam, s, prob.dtype,
+            inner_degree=inner_degree,
+        )
+        for f, arr in zip(
+            fields,
+            (fdm.tmats, fdm.cmats, fdm.denom_inv, fdm.musum,
+             fdm.inner_lo, fdm.inner_hi),
+        ):
+            f.append(np.asarray(arr))
+        counts = (
+            cz[ck * bz * n : ck * bz * n + mz][:, None, None]
+            * cy[cj * by * n : cj * by * n + my][None, :, None]
+            * cx[ci * bx * n : ci * bx * n + mx][None, None, :]
+        )
+        wsqrt[r] = 1.0 / np.sqrt(counts.reshape(-1))
+
+    return _SchwarzDist(
+        overlap=s,
+        eh=eh,
+        ext_shape=(mex, mey, mez),
+        l2g_halo=l2g_halo,
+        l2g_int=l2g_int,
+        fdm_fields=tuple(jnp.asarray(np.stack(f)) for f in fields),
+        wsqrt=jnp.asarray(wsqrt, prob.dtype),
+        lam=float(prob.lam),
+        inner_degree=int(inner_degree),
+    )
+
+
+def _box_schwarz_apply(
+    prob: DistPoisson,
+    sd: _SchwarzDist,
+    fdm_fields: tuple[jax.Array, ...],
+    wsq: jax.Array,
+) -> Callable[[jax.Array], jax.Array]:
+    """Per-rank Schwarz application on consistent padded boxes.
+
+    The Fig. 2 split, Schwarz flavor: the shell expansion (ppermutes) is
+    launched first, interior blocks solve from the *original* box with no
+    data dependence on it (XLA overlaps them with the exchange), halo
+    blocks then read the expanded box and their out-of-rank contributions
+    ride the contract exchange home.  One final sum-exchange makes the
+    interface replicas consistent, exactly like the operator's gather.
+    """
+    s = sd.overlap
+    eh = sd.eh
+    m3_ext = int(np.prod(sd.ext_shape))
+    halo_flat = jnp.asarray(sd.l2g_halo.reshape(-1))
+    int_flat = jnp.asarray(sd.l2g_int.reshape(-1))
+    fdm = sd.rank_fdm(fdm_fields, slice(None))
+
+    def sub(lo: int, hi: int | None) -> SchwarzFDM:
+        return dataclasses.replace(
+            fdm,
+            tmats=fdm.tmats[lo:hi], cmats=fdm.cmats[lo:hi],
+            denom_inv=fdm.denom_inv[lo:hi], musum=fdm.musum[lo:hi],
+            inner_lo=fdm.inner_lo[lo:hi], inner_hi=fdm.inner_hi[lo:hi],
+        )
+
+    fdm_halo, fdm_int = sub(0, eh), sub(eh, None)
+
+    def apply(r_box: jax.Array) -> jax.Array:
+        rw = wsq * r_box
+        # shell expansion first: halo-block inputs feed on the ppermutes
+        ext = expand_exchange(
+            rw.reshape(prob.box_shape[::-1]), prob.grid, prob.axis_name, s
+        ).reshape(-1)
+        u_h = jnp.take(ext, halo_flat, axis=0).reshape(eh, -1)
+        acc = jax.ops.segment_sum(
+            fdm_solve(fdm_halo, u_h).reshape(-1),
+            halo_flat,
+            num_segments=m3_ext,
+        )
+        box = contract_exchange(
+            acc.reshape(sd.ext_shape[::-1]), prob.grid, prob.axis_name, s
+        ).reshape(-1)
+        # interior blocks: no shell contact -> overlap the exchanges above
+        if eh < prob.e_local:
+            u_i = jnp.take(rw, int_flat, axis=0).reshape(
+                prob.e_local - eh, -1
+            )
+            box = box + jax.ops.segment_sum(
+                fdm_solve(fdm_int, u_i).reshape(-1),
+                int_flat,
+                num_segments=prob.m3,
+            )
+        out = sum_exchange(
+            box.reshape(prob.box_shape[::-1]), prob.grid, prob.axis_name
+        ).reshape(-1)
+        return wsq * out
+
+    return apply
+
+
 def dist_spectrum(
     prob: DistPoisson,
     mesh: jax.sharding.Mesh,
@@ -448,6 +674,10 @@ def dist_spectrum(
     dots, psum across ranks.  Pass the results to
     ``dist_cg(..., lmin=..., lmax=...)`` so repeated Chebyshev solves don't
     re-run the estimation inside the compiled program.
+
+    Returns:
+      ``(lmin, lmax)`` python floats (the compiled estimate is pulled
+      eagerly at setup time).
     """
     op = local_op or local_poisson
     spec = P(prob.axis_name)
@@ -532,40 +762,88 @@ def dist_cg(
     lanczos_iters: int = 10,
     lmax: float | None = None,
     lmin: float | None = None,
-    pmg_smooth_degree: int = PMG_SMOOTH_DEGREE,
+    pmg_smooth_degree: int | None = None,
+    pmg_smoother: str = "chebyshev",
+    pmg_coarse_op: str = "redisc",
     pmg_coarse_iters: int = 16,
     pmg_ladder: tuple[int, ...] | None = None,
+    schwarz_overlap: int = 1,
+    schwarz_inner_degree: int = SCHWARZ_INNER_DEGREE,
     local_op: Callable[..., jax.Array] | None = None,
     two_phase: bool = False,
     record_history: bool = False,
 ):
-    """Distributed hipBone (P)CG. ``b``: (R, m3) sharded rhs (made consistent).
+    """Distributed hipBone (P)CG over the device mesh.
 
-    ``precond``: "none" | "jacobi" | "chebyshev" | "pmg".  The diagonal is
-    assembled in padded-box storage — local element diagonals gathered with
-    Z_loc^T then made consistent by one sum-exchange — so the Jacobi apply
-    is a pure elementwise scale (replicas stay consistent for free).  The
-    Chebyshev A-applies reuse the communication-hiding split operator, and
-    the Lanczos spectrum estimation runs with replica-masked inner products;
-    its seed vector is a hash of *global* DOF indices, hence consistent
-    across replicas by construction.  Pass ``(lmin, lmax)`` (from
-    ``dist_spectrum``) to skip the in-graph estimation — otherwise each
-    compiled solve re-runs the Lanczos operator applies.  With ``lmax``
-    alone the interval bottom falls back to the legacy λ_max/30 ratio
-    (matching ``dist_lambda_max``).
+    Args:
+      prob: the sharded problem (``build_dist_problem``).
+      mesh: jax device mesh whose flattened size equals ``prob.grid.size``.
+      b: (R, m3) sharded right-hand side boxes (made consistent here).
+      n_iter: iteration cap (NekBone's fixed count when ``tol`` is None).
+      tol: optional relative-residual stopping threshold (while_loop mode).
+      precond: "none" | "jacobi" | "chebyshev" | "schwarz" | "pmg".
+      cheb_degree: standalone-Chebyshev polynomial degree.
+      lanczos_iters: in-graph Lanczos steps for Chebyshev intervals.
+      lmax / lmin: pre-estimated spectrum bounds (from ``dist_spectrum``)
+        — passing them keeps the estimation out of the compiled solve;
+        ``lmax`` alone falls back to the legacy λ_max/30 interval bottom.
+      pmg_smooth_degree: Chebyshev stages per pMG smoothing sweep (default:
+        4 for the Jacobi base, 2 for the Schwarz base).
+      pmg_smoother: "chebyshev" (Chebyshev–Jacobi) or "schwarz"
+        (Chebyshev-accelerated overlapping Schwarz on every smoothed
+        level — the nekRS configuration).
+      pmg_coarse_op: only "redisc" here.  The Galerkin (PᵀAP) option is
+        single-device for now (``precond.make_pmg_preconditioner``);
+        requesting it raises instead of silently rediscretizing.
+      pmg_coarse_iters: degree of the coarsest-level full-interval Chebyshev.
+      pmg_ladder: explicit degree ladder (default N → ⌈N/2⌉ → … → 1).
+      schwarz_overlap / schwarz_inner_degree: overlapping-Schwarz knobs
+        (extension width in GLL nodes; in-eigenbasis block-solve degree) for
+        ``precond="schwarz"`` and ``pmg_smoother="schwarz"``.
+      local_op: optional Pallas element kernel replacing the jnp reference.
+      two_phase: paper-faithful two-phase exchange instead of the fused one.
+      record_history: carry the per-iteration ‖r‖² history buffer.
 
-    ``precond="pmg"`` runs the Chebyshev-smoothed degree-ladder V-cycle of
-    ``core.precond`` with every level's A-apply, transfer and diagonal
+    The Jacobi diagonal is assembled in padded-box storage — local element
+    diagonals gathered with Z_loc^T then made consistent by one
+    sum-exchange — so its apply is a pure elementwise scale (replicas stay
+    consistent for free).  Chebyshev A-applies reuse the
+    communication-hiding split operator, and the Lanczos spectrum
+    estimation runs with replica-masked inner products; its seed vector is
+    a hash of *global* DOF indices, hence consistent across replicas by
+    construction.
+
+    ``precond="schwarz"`` runs symmetric weighted overlapping Schwarz with
+    the overlap transported by ``comms.halo.expand_exchange`` /
+    ``contract_exchange`` shells; interior element blocks read only the
+    original box, so their solves hide the shell exchange exactly like the
+    operator's Fig. 2 split (see ``_box_schwarz_apply``).
+
+    ``precond="pmg"`` runs the degree-ladder V-cycle of ``core.precond``
+    with every level's A-apply, transfer, diagonal and Schwarz blocks
     assembled through this rank's *coarsened* padded box — coarse-level
-    applies are latency-dominated, so the Fig. 2 halo/interior overlap of
-    ``_apply_assembled`` matters most there.  The coarsest (degree-1) level
-    is solved by a full-interval degree-``pmg_coarse_iters`` Chebyshev.
+    applies are latency-dominated, so the halo/interior overlap matters
+    most there.  The coarsest (degree-1) level is solved by a
+    full-interval degree-``pmg_coarse_iters`` Chebyshev.
 
-    Returns a jitted-callable partial () -> (x, rdotr, iterations, history),
-    also usable for dry-run lowering via ``jax.jit(run.func).lower(*run.args)``.
+    Returns:
+      A jitted-callable partial () -> (x, rdotr, iterations, history), also
+      usable for dry-run lowering via ``jax.jit(run.func).lower(*run.args)``.
     """
     if precond not in PRECOND_KINDS:
         raise ValueError(f"unknown precond {precond!r}; choose from {PRECOND_KINDS}")
+    if pmg_smoother not in PMG_SMOOTHERS:
+        raise ValueError(
+            f"unknown pmg smoother {pmg_smoother!r}; choose from {PMG_SMOOTHERS}"
+        )
+    if pmg_coarse_op != "redisc":
+        raise NotImplementedError(
+            f"dist_cg pmg_coarse_op={pmg_coarse_op!r}: the Galerkin coarse "
+            "operator is single-device only (make_pmg_preconditioner); the "
+            "sharded V-cycle rediscretizes its coarse levels"
+        )
+    if pmg_smooth_degree is None:
+        pmg_smooth_degree = pmg_smooth_degree_default(pmg_smoother)
     op = local_op or local_poisson
     spec = P(prob.axis_name)
     hist_len = n_iter
@@ -590,7 +868,32 @@ def dist_cg(
     else:
         levels, jmats, pmg_data = [prob], [], ()
 
-    def shard_fn(b_s, g_s, w_s, mask_s, seed_s, pmg_s):
+    # Schwarz setup: one _SchwarzDist per level that smooths with it —
+    # level 0 for the standalone kind (overlap validated like the
+    # single-device path), every smoothed level for the Schwarz-smoothed
+    # V-cycle (overlap clamped to each level's degree, matching
+    # make_pmg_preconditioner).  Sharded FDM fields ride the shard_map
+    # arguments; static index maps stay in the closure.
+    if precond == "schwarz":
+        schwarz_setups = [
+            _schwarz_setup(prob, schwarz_overlap, schwarz_inner_degree)
+        ]
+    elif precond == "pmg" and pmg_smoother == "schwarz":
+        schwarz_setups = [
+            _schwarz_setup(
+                lvl,
+                min(schwarz_overlap, lvl.n_degree - 1),
+                schwarz_inner_degree,
+            )
+            for lvl in levels[:-1]
+        ]
+    else:
+        schwarz_setups = []
+    schwarz_data = tuple(
+        sd.fdm_fields + (sd.wsqrt,) for sd in schwarz_setups
+    )
+
+    def shard_fn(b_s, g_s, w_s, mask_s, seed_s, pmg_s, schwarz_s):
         b1, g1, w1, m1 = b_s[0], g_s[0], w_s[0], mask_s[0]
         # make rhs consistent (replicas hold true values)
         b1 = copy_exchange(
@@ -602,11 +905,19 @@ def dist_cg(
         )
         psum = lambda v: lax.psum(v, prob.axis_name)
 
+        def schwarz_apply(i: int, lvl: DistPoisson):
+            fields1 = tuple(f[0] for f in schwarz_s[i][:6])
+            return _box_schwarz_apply(
+                lvl, schwarz_setups[i], fields1, schwarz_s[i][6][0]
+            )
+
         pc = None
         if precond != "none":
             dinv = _box_dinv(prob, g1, w1)
             if precond == "jacobi":
                 pc = jacobi_apply(dinv)
+            elif precond == "schwarz":
+                pc = schwarz_apply(0, prob)
             elif precond == "chebyshev":
                 if lmax is None:
                     mdot = lambda a, bb: jnp.vdot(a * m1, bb)
@@ -645,19 +956,21 @@ def dist_cg(
                 smoothers = []
                 for i in range(len(levels) - 1):
                     mdot = lambda a, bb, mk=lvl_masks[i]: jnp.vdot(a * mk, bb)
-                    lmin_e, lmax_e = lanczos_extremes(
-                        lvl_ops[i], lvl_dinvs[i], lvl_seeds[i],
-                        iters=lanczos_iters, dot=mdot, psum=psum,
+                    if pmg_smoother == "schwarz":
+                        base = schwarz_apply(i, levels[i])
+                    else:
+                        base = lvl_dinvs[i]
+                    lo, lmax_e, _ = smoother_interval(
+                        lvl_ops[i], base, lvl_seeds[i],
+                        smoother=pmg_smoother, lanczos_iters=lanczos_iters,
+                        dot=mdot, psum=psum,
                     )
                     smoothers.append(
                         chebyshev_apply(
                             lvl_ops[i],
-                            lvl_dinvs[i],
+                            base,
                             CHEB_SAFETY * lmax_e,
-                            lmin=jnp.maximum(
-                                CHEB_LMIN_SAFETY * lmin_e,
-                                lmax_e / PMG_SMOOTH_RATIO,
-                            ),
+                            lmin=lo,
                             degree=pmg_smooth_degree,
                         )
                     )
@@ -712,16 +1025,18 @@ def dist_cg(
         in_specs=(
             spec, spec, spec, spec, spec,
             tuple((spec, spec, spec, spec) for _ in pmg_data),
+            tuple(tuple(spec for _ in lvl) for lvl in schwarz_data),
         ),
         out_specs=(spec, P(), P(), P()),
         # old jax's check_rep has no rule for while_loop (tol mode) and
         # cannot type the Lanczos/power-iteration carries (in-graph spectrum
         # estimation); keep the guard wherever it can actually run — its
         # replicated outputs are psum-derived either way
-        check_rep=tol is None and not need_power,
+        check_rep=tol is None and not need_power and precond != "schwarz",
     )
     return functools.partial(
-        fn, b, prob.g, prob.w_local, prob.mask, seed_boxes, pmg_data
+        fn, b, prob.g, prob.w_local, prob.mask, seed_boxes, pmg_data,
+        schwarz_data,
     )
 
 
@@ -745,13 +1060,27 @@ def dist_cg_scattered(
     + sum exchange); weighted inner products read the W stream, exactly the
     extra traffic the paper charges against NekBone.
 
-    ``precond``/``tol`` mirror :func:`dist_cg` ("none" | "jacobi" |
-    "chebyshev"; p-multigrid stays assembled-only).  The assembled diagonal
-    is built in padded-box storage and scattered to the element-local
-    layout; on the continuous subspace (range of Z, where the scattered
-    iterates live) the diagonal scale and the Chebyshev polynomial act
-    exactly as their assembled counterparts, so weighted-dot PCG remains
-    valid.  Returns a partial () -> (x, rdotr, iterations).
+    Args:
+      prob / mesh: as in :func:`dist_cg`.
+      b_l: (R, E_loc, p) *consistent* scattered right-hand side (NekBone
+        gather-scatters its random forcing at setup; applying ZZ^T here
+        would alter a general rhs).
+      n_iter / tol / cheb_degree / lanczos_iters / lmax / lmin / local_op:
+        as in :func:`dist_cg`.
+      precond: "none" | "jacobi" | "chebyshev" — the assembled-only rungs
+        (schwarz and p-multigrid live on assembled storage, where block
+        solves and transfers are single gathers; the paper's argument for
+        assembled storage applies doubly to preconditioning).
+
+    The assembled diagonal is built in padded-box storage and scattered to
+    the element-local layout; on the continuous subspace (range of Z,
+    where the scattered iterates live) the diagonal scale and the
+    Chebyshev polynomial act exactly as their assembled counterparts, so
+    weighted-dot PCG remains valid.
+
+    Returns:
+      A jitted-callable partial () -> (x, rdotr, iterations) — note the
+      3-tuple, unlike :func:`dist_cg`'s 4-tuple with history.
     """
     if precond not in ("none", "jacobi", "chebyshev"):
         raise ValueError(

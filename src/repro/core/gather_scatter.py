@@ -27,6 +27,8 @@ __all__ = [
     "scatter",
     "gather",
     "gather_scatter",
+    "scatter_masked",
+    "gather_masked",
     "inverse_degree",
     "local_inverse_degree",
 ]
@@ -47,6 +49,31 @@ def gather(y_l: jax.Array, l2g: jax.Array, n_global: int) -> jax.Array:
 def gather_scatter(y_l: jax.Array, l2g: jax.Array, n_global: int) -> jax.Array:
     """ZZ^T y_L — NekBone's combined gather-scatter on scattered vectors."""
     return scatter(gather(y_l, l2g, n_global), l2g)
+
+
+def scatter_masked(x_g: jax.Array, l2g_ext: jax.Array) -> jax.Array:
+    """Z_s x_G for maps with a dummy slot: out-of-domain entries read 0.
+
+    The extended (overlapping-Schwarz) local-to-global maps use the index
+    ``n_global`` for nodes outside the physical domain; scattering from a
+    zero-padded copy of ``x_g`` turns those slots into zeros without any
+    branching.  Shapes: x_G (N_G,), l2g_ext (E, m^3) -> (E, m^3).
+    """
+    padded = jnp.concatenate([x_g, jnp.zeros((1,), x_g.dtype)])
+    return jnp.take(padded, l2g_ext, axis=0)
+
+
+def gather_masked(y_l: jax.Array, l2g_ext: jax.Array, n_global: int) -> jax.Array:
+    """Z_sᵀ y_L for maps with a dummy slot: out-of-domain entries dropped.
+
+    The transpose of :func:`scatter_masked` — contributions indexed
+    ``n_global`` land in the dummy segment and are sliced away, so the
+    pair stays an exact (adjoint) scatter/gather pair for the PCG-symmetry
+    argument.  Shapes: y_L (E, m^3), l2g_ext (E, m^3) -> (N_G,).
+    """
+    return jax.ops.segment_sum(
+        y_l.reshape(-1), l2g_ext.reshape(-1), num_segments=n_global + 1
+    )[:n_global]
 
 
 def inverse_degree(l2g: np.ndarray, n_global: int) -> np.ndarray:

@@ -40,6 +40,14 @@ existing assembled-storage machinery:
     ``R = Z_c^T Ĵ^T W_f Z_f``, so the V-cycle is a symmetric linear map and
     plain PCG remains valid.
 
+  * **overlapping Schwarz** (``schwarz``): per-element extended-block local
+    solves via tensor-product fast diagonalization (core.schwarz), combined
+    as symmetric weighted additive Schwarz — the Nek5000/RS smoother for
+    deformed / ill-conditioned meshes.  Available standalone
+    (``make_preconditioner("schwarz", ...)``) and as the pMG smoother
+    (``make_pmg_preconditioner(smoother="schwarz")``, Chebyshev-accelerated
+    the way nekRS runs it).
+
 Everything here is expressed through the caller's ``operator`` /
 ``dot`` / ``psum`` callables, so the same code serves the single-device
 assembled path and the sharded padded-box path in core.distributed (where
@@ -56,6 +64,7 @@ import numpy as np
 
 from . import sem
 from .gather_scatter import gather, scatter
+from .schwarz import SCHWARZ_INNER_DEGREE, make_schwarz_apply
 
 __all__ = [
     "local_operator_diagonal",
@@ -71,13 +80,20 @@ __all__ = [
     "make_pmg_preconditioner",
     "make_preconditioner",
     "PRECOND_KINDS",
+    "PMG_SMOOTHERS",
+    "PMG_COARSE_OPS",
     "CHEB_LMIN_RATIO",
     "CHEB_SAFETY",
     "CHEB_LMIN_SAFETY",
     "PMG_SMOOTH_RATIO",
+    "SCHWARZ_INNER_DEGREE",
+    "pmg_smooth_degree_default",
+    "smoother_interval",
 ]
 
-PRECOND_KINDS = ("none", "jacobi", "chebyshev", "pmg")
+PRECOND_KINDS = ("none", "jacobi", "chebyshev", "schwarz", "pmg")
+PMG_SMOOTHERS = ("chebyshev", "schwarz")
+PMG_COARSE_OPS = ("redisc", "galerkin")
 
 # Standard Chebyshev-smoother interval: [lmax/ratio, safety * lmax].
 CHEB_LMIN_RATIO = 30.0
@@ -90,6 +106,9 @@ CHEB_LMIN_SAFETY = 0.8
 # large-λ regime) the interval tightens to [0.8·λ_min, 1.1·λ_max] instead.
 PMG_SMOOTH_RATIO = 6.0
 PMG_SMOOTH_DEGREE = 4
+# Schwarz-smoothed V-cycles need fewer Chebyshev stages per sweep — each
+# Schwarz application is already a strong (near-block-exact) smoother.
+PMG_SCHWARZ_SMOOTH_DEGREE = 2
 
 
 def local_operator_diagonal(
@@ -145,28 +164,43 @@ def _default_dot(a: jax.Array, b: jax.Array) -> jax.Array:
     return jnp.vdot(a, b)
 
 
+def _base_apply(
+    dinv: jax.Array | Callable[[jax.Array], jax.Array],
+) -> Callable[[jax.Array], jax.Array]:
+    """Normalize a base preconditioner: a diagonal array or a callable."""
+    return dinv if callable(dinv) else (lambda r: dinv * r)
+
+
 def power_lambda_max(
     operator: Callable[[jax.Array], jax.Array],
-    dinv: jax.Array,
+    dinv: jax.Array | Callable[[jax.Array], jax.Array],
     v0: jax.Array,
     *,
     iters: int = 15,
     dot: Callable[[jax.Array, jax.Array], jax.Array] | None = None,
     psum: Callable[[jax.Array], jax.Array] | None = None,
 ) -> jax.Array:
-    """λ_max(D⁻¹A) by power iteration from ``v0``.
+    """λ_max(M⁻¹A) by power iteration from ``v0``.
 
-    D⁻¹A is similar to the SPD matrix D^{-1/2} A D^{-1/2}, so the dominant
-    eigenvalue is real and positive and plain power iteration converges.
-    ``dot``/``psum`` let the distributed caller mask replicas and reduce
-    across ranks; the growth ratio ‖w‖/‖v‖ is the eigenvalue estimate.
+    ``dinv`` is the base preconditioner M⁻¹: the inverse assembled diagonal
+    (array, the Jacobi case) or any SPD apply callable (e.g. the Schwarz
+    application).  M⁻¹A is similar to the SPD matrix M^{-1/2} A M^{-1/2},
+    so the dominant eigenvalue is real and positive and plain power
+    iteration converges.  ``dot``/``psum`` let the distributed caller mask
+    replicas and reduce across ranks; the growth ratio ‖w‖/‖v‖ is the
+    eigenvalue estimate.
+
+    Returns:
+      Scalar λ_max estimate (traced; a raw Ritz value — callers apply
+      their own safety factors).
     """
     dp = dot or _default_dot
     allsum = psum or (lambda v: v)
+    base = _base_apply(dinv)
 
     def body(carry, _):
         v, _ = carry
-        w = dinv * operator(v)
+        w = base(operator(v))
         nrm = jnp.sqrt(allsum(dp(w, w)))
         lam = nrm / jnp.sqrt(allsum(dp(v, v)))
         return (w / jnp.maximum(nrm, 1e-30), lam), lam
@@ -213,8 +247,19 @@ def lanczos_extremes(
     callers should widen by CHEB_SAFETY / CHEB_LMIN_SAFETY.
 
     ``dot``/``psum`` as in :func:`power_lambda_max`; the loop is a static
-    python unroll (iters is small), traceable inside shard_map.
+    python unroll (iters is small), traceable inside shard_map.  Unlike
+    :func:`power_lambda_max` this needs the *diagonal* ``dinv`` (the
+    symmetrization splits D^{-1/2} to both sides); callable base
+    preconditioners use power iteration instead.
+
+    Returns:
+      ``(λ_min, λ_max)`` Ritz estimates (traced scalars, no safety factors).
     """
+    if callable(dinv):
+        raise TypeError(
+            "lanczos_extremes needs the diagonal dinv array (it splits "
+            "D^-1/2 symmetrically); use power_lambda_max for callable bases"
+        )
     dp = dot or _default_dot
     allsum = psum or (lambda v: v)
     k = max(2, min(int(iters), int(np.prod(v0.shape)) - 1))
@@ -262,23 +307,33 @@ def jacobi_apply(dinv: jax.Array) -> Callable[[jax.Array], jax.Array]:
 
 def chebyshev_apply(
     operator: Callable[[jax.Array], jax.Array],
-    dinv: jax.Array,
+    dinv: jax.Array | Callable[[jax.Array], jax.Array],
     lmax: jax.Array | float,
     *,
     lmin: jax.Array | float | None = None,
     degree: int = 2,
     fused_d_update: Callable[..., jax.Array] | None = None,
 ) -> Callable[[jax.Array], jax.Array]:
-    """Degree-k Chebyshev–Jacobi preconditioner application z ≈ A⁻¹ r.
+    """Degree-k Chebyshev-accelerated preconditioner application z ≈ A⁻¹ r.
 
     The classic Chebyshev semi-iteration for A z = r with z₀ = 0 on the
-    interval [lmin, lmax] of D⁻¹A; each step costs one A-apply and one
-    D⁻¹-scale.  Under sharding the A-applies reuse the communication-hiding
+    interval [lmin, lmax] of M⁻¹A, where the base preconditioner M⁻¹ is
+    ``dinv`` — the inverse assembled diagonal (array, the Chebyshev–Jacobi
+    case) or any SPD apply callable (Chebyshev-accelerated Schwarz, the
+    nekRS smoother configuration).  Each step costs one A-apply and one
+    M⁻¹-apply.  Under sharding the A-applies reuse the communication-hiding
     split operator, so Chebyshev needs *no new exchange machinery*.
 
+    The result is a fixed polynomial ``q(M⁻¹A) M⁻¹`` — a symmetric linear
+    map whenever M⁻¹ is symmetric (M^{1/2}-similarity), so plain PCG stays
+    valid with any base preconditioner from this module.
+
     ``fused_d_update`` optionally fuses the streaming update
-    d ← a·d + c·(D⁻¹ res) (signature (a, c, d, r) -> d_new; see
+    d ← a·d + c·(M⁻¹ res) (signature (a, c, d, r) -> d_new; see
     kernels.ops.fused_cheb_d_update).
+
+    Returns:
+      ``apply(r) -> z``, same vector layout as ``operator``.
     """
     if degree < 1:
         raise ValueError(f"chebyshev degree must be >= 1, got {degree}")
@@ -288,11 +343,12 @@ def chebyshev_apply(
     delta = 0.5 * (lmax - lmin_v)
     sigma = theta / delta
 
+    base = _base_apply(dinv)
     dupd = fused_d_update or (lambda a, c, d, r: a * d + c * r)
 
     def apply(r: jax.Array) -> jax.Array:
         rho = 1.0 / sigma
-        d = (dinv * r) / theta
+        d = base(r) / theta
         z = d
         res = r
         # degree is a small static int: unrolled at trace time, one compiled
@@ -300,7 +356,7 @@ def chebyshev_apply(
         for _ in range(degree - 1):
             res = res - operator(d)
             rho_new = 1.0 / (2.0 * sigma - rho)
-            d = dupd(rho_new * rho, 2.0 * rho_new / delta, d, dinv * res)
+            d = dupd(rho_new * rho, 2.0 * rho_new / delta, d, base(res))
             z = z + d
             rho = rho_new
         return z
@@ -311,6 +367,61 @@ def chebyshev_apply(
 # ---------------------------------------------------------------------------
 # p-multigrid: degree ladder, transfers, V-cycle
 # ---------------------------------------------------------------------------
+
+
+def pmg_smooth_degree_default(smoother: str) -> int:
+    """Default Chebyshev stages per pMG smoothing sweep for a base kind.
+
+    Schwarz applications are already strong (near-block-exact) smoothers,
+    so they take fewer acceleration stages than pointwise Jacobi.
+    """
+    return (
+        PMG_SCHWARZ_SMOOTH_DEGREE if smoother == "schwarz"
+        else PMG_SMOOTH_DEGREE
+    )
+
+
+def smoother_interval(
+    operator: Callable[[jax.Array], jax.Array],
+    base: jax.Array | Callable[[jax.Array], jax.Array],
+    v0: jax.Array,
+    *,
+    smoother: str,
+    lanczos_iters: int = 10,
+    dot: Callable[[jax.Array, jax.Array], jax.Array] | None = None,
+    psum: Callable[[jax.Array], jax.Array] | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Per-level pMG smoothing interval — one policy for every solver path.
+
+    The Chebyshev base ("chebyshev", diagonal ``base``) takes both interval
+    ends from Lanczos, tightened to
+    [max(0.8·λ_min, λ_max/PMG_SMOOTH_RATIO), λ_max]; the Schwarz base
+    (callable ``base``) uses power iteration for λ_max(M⁻¹A) and the fixed
+    λ_max/PMG_SMOOTH_RATIO bottom (the Schwarz-preconditioned spectrum is
+    already compressed).  ``lanczos_iters`` budgets the estimation on both
+    branches; the power branch runs 1.5x the steps, since power iteration
+    approaches λ_max markedly slower than a Lanczos Ritz value (at the
+    default 10 that recovers the 15-step power budget the standalone
+    estimators use).  Callers multiply λ_max by CHEB_SAFETY themselves.
+
+    Returns:
+      ``(lo, lmax, lmin)`` traced scalars — the interval bottom, the raw
+      λ_max Ritz estimate, and the raw λ_min estimate (λ_max/ratio for the
+      Schwarz base, where no lower Ritz value exists).
+    """
+    if smoother == "schwarz":
+        lmax_e = power_lambda_max(
+            operator, base, v0,
+            iters=max(2, (3 * lanczos_iters) // 2),
+            dot=dot, psum=psum,
+        )
+        lo = lmax_e / PMG_SMOOTH_RATIO
+        return lo, lmax_e, lo
+    lmin_e, lmax_e = lanczos_extremes(
+        operator, base, v0, iters=lanczos_iters, dot=dot, psum=psum
+    )
+    lo = jnp.maximum(CHEB_LMIN_SAFETY * lmin_e, lmax_e / PMG_SMOOTH_RATIO)
+    return lo, lmax_e, lmin_e
 
 
 def pmg_degree_ladder(n: int) -> tuple[int, ...]:
@@ -410,32 +521,73 @@ class PrecondInfo:
     lmax: float | None
     lmin: float | None = None
     levels: tuple[int, ...] | None = None
+    smoother: str | None = None
+    coarse_op: str | None = None
+    overlap: int | None = None
 
 
 def make_pmg_preconditioner(
     prob,
     operator: Callable[[jax.Array], jax.Array],
     *,
-    smooth_degree: int = PMG_SMOOTH_DEGREE,
+    smooth_degree: int | None = None,
+    smoother: str = "chebyshev",
+    coarse_op: str = "redisc",
     lanczos_iters: int = 10,
     coarse_solve: str = "direct",
     coarse_iters: int = 16,
     ladder: Sequence[int] | None = None,
+    schwarz_overlap: int = 1,
+    schwarz_inner_degree: int = SCHWARZ_INNER_DEGREE,
 ) -> tuple[Callable[[jax.Array], jax.Array], PrecondInfo]:
     """Single-shard p-multigrid V-cycle preconditioner.
 
-    Levels are rediscretized with ``operator.coarsen_problem`` down the
-    degree ladder; every smoothed level gets a Chebyshev–Jacobi smoother on
-    the interval [max(0.8·λ_min, λ_max/PMG_SMOOTH_RATIO), CHEB_SAFETY·λ_max]
-    (both ends per level from Lanczos — in the well-conditioned regime the
-    smoother covers the whole spectrum and the cycle nears a direct solve).
-    ``coarse_solve``: "direct" (dense inverse of the degree-1 operator,
-    exact and cheap), "chebyshev" (degree ``coarse_iters`` full-interval
-    Chebyshev), or "jacobi" (``coarse_iters`` damped-Jacobi sweeps) — all
-    fixed linear symmetric maps.
+    Args:
+      prob: the fine-level ``PoissonProblem``.
+      operator: the fine-level A-apply (assembled storage).
+      smooth_degree: Chebyshev stages per smoothing sweep.  Defaults to
+        ``PMG_SMOOTH_DEGREE`` for the Jacobi base and the smaller
+        ``PMG_SCHWARZ_SMOOTH_DEGREE`` for the Schwarz base (each Schwarz
+        application is already a strong smoother).
+      smoother: per-level smoother base — "chebyshev" (Chebyshev–Jacobi on
+        the Lanczos interval) or "schwarz" (Chebyshev-accelerated
+        overlapping Schwarz, the nekRS configuration; spectrum top from
+        power iteration, interval [λ_max/PMG_SMOOTH_RATIO, 1.1·λ_max]).
+      coarse_op: "redisc" (default) rediscretizes every coarse level on the
+        same curved geometry; "galerkin" builds coarse operators as the
+        exact triple products ``A_{l+1} = R_l A_l P_l`` applied matrix-free
+        through the transfer chain — variationally exact (closes the
+        rediscretization gap that caps the small-λ regime) but each coarse
+        A-apply recurses to the fine grid, so per-iteration cost grows with
+        depth; smoother diagonals stay the rediscretized ones (the standard
+        spectrally-equivalent approximation).
+      lanczos_iters: Lanczos steps per level for the Chebyshev intervals.
+      coarse_solve: coarsest-level treatment — "direct" (dense inverse of
+        the degree-1 operator, exact and cheap), "chebyshev" (degree
+        ``coarse_iters`` full-interval Chebyshev), or "jacobi"
+        (``coarse_iters`` damped-Jacobi sweeps) — all fixed linear
+        symmetric maps.
+      coarse_iters: iteration count for the iterated coarse solves.
+      ladder: explicit degree ladder (default N → ⌈N/2⌉ → … → 1).
+      schwarz_overlap / schwarz_inner_degree: Schwarz-smoother knobs
+        (see ``core.schwarz.make_schwarz_apply``).
+
+    Returns:
+      ``(apply, info)``: the V-cycle application z = M⁻¹r and its
+      :class:`PrecondInfo` (fine-level spectrum bounds, ladder, smoother).
     """
     from .operator import coarsen_problem, poisson_assembled
 
+    if smoother not in PMG_SMOOTHERS:
+        raise ValueError(
+            f"unknown pmg smoother {smoother!r}; choose from {PMG_SMOOTHERS}"
+        )
+    if coarse_op not in PMG_COARSE_OPS:
+        raise ValueError(
+            f"unknown pmg coarse_op {coarse_op!r}; choose from {PMG_COARSE_OPS}"
+        )
+    if smooth_degree is None:
+        smooth_degree = pmg_smooth_degree_default(smoother)
     degrees = tuple(ladder) if ladder is not None else pmg_degree_ladder(
         prob.mesh.n_degree
     )
@@ -444,7 +596,6 @@ def make_pmg_preconditioner(
     probs = [prob]
     for nc in degrees[1:]:
         probs.append(coarsen_problem(probs[-1], nc))
-    ops = [operator] + [poisson_assembled(p) for p in probs[1:]]
 
     prolongs, restricts = [], []
     for fine, coarse in zip(probs[:-1], probs[1:]):
@@ -452,22 +603,42 @@ def make_pmg_preconditioner(
         prolongs.append(p_up)
         restricts.append(r_down)
 
+    ops = [operator]
+    for i in range(1, len(probs)):
+        if coarse_op == "galerkin":
+            # A_{l} = R_{l-1} A_{l-1} P_{l-1}, matrix-free through the chain
+            ops.append(
+                lambda v, op=ops[-1], r=restricts[i - 1], p=prolongs[i - 1]: r(
+                    op(p(v))
+                )
+            )
+        else:
+            ops.append(poisson_assembled(probs[i]))
+
     smoothers = []
     lmax0 = lmin0 = None
     for i in range(len(probs) - 1):
         dinv = 1.0 / assembled_diagonal(probs[i])
         v0 = deterministic_seed_vector(probs[i].n_global, dinv.dtype)
-        lmin_e, lmax_e = lanczos_extremes(ops[i], dinv, v0, iters=lanczos_iters)
+        if smoother == "schwarz":
+            base = make_schwarz_apply(
+                probs[i],
+                overlap=min(schwarz_overlap, probs[i].mesh.n_degree - 1),
+                inner_degree=schwarz_inner_degree,
+            )
+        else:
+            base = dinv
+        lo, lmax_e, lmin_e = smoother_interval(
+            ops[i], base, v0, smoother=smoother, lanczos_iters=lanczos_iters
+        )
         if i == 0:
             lmax0, lmin0 = float(lmax_e), float(lmin_e)
         smoothers.append(
             chebyshev_apply(
                 ops[i],
-                dinv,
+                base,
                 CHEB_SAFETY * lmax_e,
-                lmin=jnp.maximum(
-                    CHEB_LMIN_SAFETY * lmin_e, lmax_e / PMG_SMOOTH_RATIO
-                ),
+                lmin=lo,
                 degree=smooth_degree,
             )
         )
@@ -507,7 +678,16 @@ def make_pmg_preconditioner(
         )
 
     apply = make_vcycle(ops[:-1], smoothers, restricts, prolongs, coarse_apply)
-    return apply, PrecondInfo("pmg", smooth_degree, lmax0, lmin0, degrees)
+    return apply, PrecondInfo(
+        "pmg",
+        smooth_degree,
+        lmax0,
+        lmin0,
+        degrees,
+        smoother=smoother,
+        coarse_op=coarse_op,
+        overlap=schwarz_overlap if smoother == "schwarz" else None,
+    )
 
 
 def make_preconditioner(
@@ -520,21 +700,44 @@ def make_preconditioner(
     lanczos_iters: int = 10,
     lmin_source: str = "lanczos",
     fused_d_update: Callable[..., jax.Array] | None = None,
-    pmg_smooth_degree: int = PMG_SMOOTH_DEGREE,
+    pmg_smooth_degree: int | None = None,
+    pmg_smoother: str = "chebyshev",
+    pmg_coarse_op: str = "redisc",
     pmg_coarse_solve: str = "direct",
     pmg_coarse_iters: int = 16,
     pmg_ladder: Sequence[int] | None = None,
+    schwarz_overlap: int = 1,
+    schwarz_weighting: str = "sqrt",
+    schwarz_inner_degree: int = SCHWARZ_INNER_DEGREE,
 ) -> tuple[Callable[[jax.Array], jax.Array] | None, PrecondInfo]:
     """Build a single-device assembled-path preconditioner by name.
 
-    kind: "none" | "jacobi" | "chebyshev" | "pmg".  Returns (apply, info);
-    apply is None for "none" (plain CG).  For "chebyshev",
-    ``lmin_source="lanczos"`` (default) estimates *both* interval ends with
-    ``lanczos_iters`` Lanczos steps; ``"ratio"`` reproduces the legacy fixed
-    λ_max/CHEB_LMIN_RATIO lower bound (with ``power_iters`` power-iteration
-    steps for λ_max).  For "pmg", ``pmg_smooth_degree`` is the per-level
-    smoother degree (``degree`` stays the standalone-Chebyshev knob) and the
-    other ``pmg_*`` knobs select the ladder and coarsest solve.
+    Args:
+      kind: "none" | "jacobi" | "chebyshev" | "schwarz" | "pmg".
+      prob: the ``PoissonProblem``.
+      operator: the assembled A-apply the preconditioner wraps.
+      degree: standalone-Chebyshev polynomial degree.
+      power_iters / lanczos_iters: spectrum-estimation step budget.  For
+        "chebyshev", ``lmin_source="lanczos"`` (default) estimates *both*
+        interval ends with ``lanczos_iters`` Lanczos steps; ``"ratio"``
+        reproduces the legacy fixed λ_max/CHEB_LMIN_RATIO lower bound
+        (with ``power_iters`` power-iteration steps for λ_max).
+      fused_d_update: optional Pallas streaming fusion for the Chebyshev
+        d-update (kernels.ops.fused_cheb_d_update).
+      pmg_*: p-multigrid knobs, forwarded to
+        :func:`make_pmg_preconditioner` (``pmg_smooth_degree`` is the
+        per-level smoother degree; ``degree`` stays the standalone knob).
+      schwarz_*: overlapping-Schwarz knobs — extension width in GLL nodes
+        (``schwarz_overlap``, 0 = block Jacobi), partition-of-unity
+        weighting ("sqrt" symmetric default; "post" = RAS, nonsymmetric,
+        rejected here because plain PCG needs a symmetric M), and the
+        in-eigenbasis block-solve Chebyshev degree
+        (``schwarz_inner_degree``).  Shared by kind="schwarz" and the
+        pmg smoother="schwarz".
+
+    Returns:
+      ``(apply, info)``; ``apply`` is None for "none" (plain CG), else the
+      z = M⁻¹r application, always a symmetric linear map (PCG-valid).
     """
     if kind not in PRECOND_KINDS:
         raise ValueError(f"unknown precond {kind!r}; choose from {PRECOND_KINDS}")
@@ -545,10 +748,30 @@ def make_preconditioner(
             prob,
             operator,
             smooth_degree=pmg_smooth_degree,
+            smoother=pmg_smoother,
+            coarse_op=pmg_coarse_op,
             lanczos_iters=lanczos_iters,
             coarse_solve=pmg_coarse_solve,
             coarse_iters=pmg_coarse_iters,
             ladder=pmg_ladder,
+            schwarz_overlap=schwarz_overlap,
+            schwarz_inner_degree=schwarz_inner_degree,
+        )
+    if kind == "schwarz":
+        if schwarz_weighting == "post":
+            raise ValueError(
+                "schwarz weighting='post' (RAS) is nonsymmetric; plain PCG "
+                "needs the symmetric 'sqrt' (or 'none') weighting — use "
+                "make_schwarz_apply directly for Richardson/flexible solvers"
+            )
+        apply = make_schwarz_apply(
+            prob,
+            overlap=schwarz_overlap,
+            weighting=schwarz_weighting,
+            inner_degree=schwarz_inner_degree,
+        )
+        return apply, PrecondInfo(
+            "schwarz", schwarz_inner_degree, None, overlap=schwarz_overlap
         )
     diag = assembled_diagonal(prob)
     dinv = 1.0 / diag

@@ -19,6 +19,9 @@ __all__ = [
     "reference_element",
     "interpolation_matrix",
     "interp_coords_3d",
+    "stiffness_matrix_1d",
+    "extended_interval_matrices",
+    "fast_diagonalization_1d",
 ]
 
 
@@ -146,8 +149,123 @@ def interp_coords_3d(j: np.ndarray, coords: np.ndarray) -> np.ndarray:
     return c3.reshape(e, -1, 3)
 
 
+@functools.lru_cache(maxsize=64)
+def stiffness_matrix_1d(n_degree: int) -> np.ndarray:
+    """1-D SEM stiffness matrix on the reference interval [-1, 1].
+
+    ``A[i, j] = Σ_q w_q D[q, i] D[q, j]`` — the weak Laplacian of the
+    degree-N Lagrange basis under GLL quadrature (symmetric positive
+    semidefinite; the constant mode is its nullspace).  For an affine
+    element of length ``h`` the physical stiffness is ``(2/h) A`` and the
+    lumped mass is ``(h/2) diag(w)``; these two 1-D matrices are all the
+    fast-diagonalization Schwarz setup needs.
+    """
+    _, w = gll_nodes_weights(int(n_degree))
+    d = derivative_matrix(int(n_degree))
+    return (d * w[:, None]).T @ d
+
+
+def extended_interval_matrices(
+    n_degree: int,
+    overlap: int,
+    h: float,
+    *,
+    has_lo: bool = True,
+    has_hi: bool = True,
+) -> tuple[np.ndarray, np.ndarray]:
+    """1-D operator on an element interval extended ``overlap`` nodes each way.
+
+    The extended grid is the element's ``N+1`` GLL nodes plus the nearest
+    ``overlap`` GLL nodes of each neighbor element (neighbors are
+    approximated as mirror images of the element — exact when adjacent
+    elements share the spacing ``h``, the usual Nek5000/RS FDM setup).
+    The matrices are the 3-element patch-assembled SEM stiffness and lumped
+    mass restricted to the extended window, i.e. homogeneous Dirichlet at
+    the window ends — the local overlapping-Schwarz subdomain problem.
+
+    Args:
+      n_degree: element polynomial degree N.
+      overlap: extension width s in GLL nodes, 0 <= s <= N-1.  ``s = 0``
+        degenerates to the element block of the patch-assembled operator
+        (block Jacobi).
+      h: element length along this direction.
+      has_lo / has_hi: whether a neighbor element exists on that side.  A
+        missing neighbor (physical domain boundary) keeps the element end
+        natural (Neumann) and turns the would-be extension slots into
+        decoupled identity rows (they carry zero data and are masked off by
+        the caller).
+
+    Returns:
+      ``(a_ext, b_ext)``: the (m, m) stiffness and the (m,) lumped-mass
+      diagonal with ``m = N + 1 + 2*overlap``.
+    """
+    n = int(n_degree)
+    s = int(overlap)
+    if not 0 <= s <= n - 1:
+        raise ValueError(f"overlap must be in [0, {n - 1}] for N={n}, got {s}")
+    _, w = gll_nodes_weights(n)
+    a_el = (2.0 / h) * stiffness_matrix_1d(n)
+    b_el = (h / 2.0) * w
+
+    npatch = 3 * n + 1
+    a = np.zeros((npatch, npatch))
+    b = np.zeros(npatch)
+    for e, present in enumerate((has_lo, True, has_hi)):
+        if not present:
+            continue
+        sl = slice(e * n, e * n + n + 1)
+        a[sl, sl] += a_el
+        b[sl] += b_el
+
+    win = slice(n - s, 2 * n + s + 1)
+    a_ext = a[win, win].copy()
+    b_ext = b[win].copy()
+    # absent-neighbor slots: decouple as identity rows (zero data, masked out)
+    dummy = b_ext == 0.0
+    if dummy.any():
+        a_ext[dummy, :] = 0.0
+        a_ext[:, dummy] = 0.0
+        a_ext[dummy, dummy] = 1.0
+        b_ext[dummy] = 1.0
+    return a_ext, b_ext
+
+
+def fast_diagonalization_1d(
+    a_ext: np.ndarray, b_ext: np.ndarray
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Generalized eigendecomposition ``A t = μ B t`` with ``TᵀBT = I``.
+
+    This is the 1-D factor of the tensor-product fast diagonalization
+    (Lynch-Rice-Thomas): with per-direction factors ``(T_d, μ_d)`` the local
+    separable operator ``A⊗B⊗B + B⊗A⊗B + B⊗B⊗A`` inverts as
+
+        Â⁻¹ = (T₃⊗T₂⊗T₁) diag(1 / (μ_i + μ_j + μ_k)) (T₃⊗T₂⊗T₁)ᵀ.
+
+    ``B`` is the diagonal lumped mass, so the generalized problem reduces to
+    a symmetric eigendecomposition of ``B^{-1/2} A B^{-1/2}``.
+
+    Returns:
+      ``(t, mu, s)``: eigenvector matrix (m, m), eigenvalues (m,) ascending,
+      and ``s[i] = (TᵀT)_{ii}`` — the diagonal of the identity's image in
+      the eigenbasis, used to fold NekBone's algebraic screen ``λI`` into
+      the tensor denominators (``λI`` does not tensor-factorize exactly;
+      ``diag(TᵀT)`` is its standard diagonal approximation, exact in the
+      limit of mass ∝ identity).
+    """
+    bh = 1.0 / np.sqrt(b_ext)
+    mu, q = np.linalg.eigh(bh[:, None] * a_ext * bh[None, :])
+    t = bh[:, None] * q
+    return t, np.maximum(mu, 0.0), np.sum(t * t, axis=0)
+
+
 def reference_element(n_degree: int) -> dict[str, np.ndarray]:
-    """Bundle of reference-element constants for degree ``n_degree``."""
+    """Bundle of reference-element constants for degree ``n_degree``.
+
+    Returns:
+      dict with ``nodes`` (N+1,), ``weights`` (N+1,), ``D`` (N+1, N+1) and
+      ``weights3d`` ((N+1)^3,) — the tensor-product quadrature weights in
+      (t, s, r) node order, matching the element-local field layout.
+    """
     x, w = gll_nodes_weights(n_degree)
     d = derivative_matrix(n_degree)
     # 3-D tensor-product quadrature weights, node-ordered (t, s, r) row-major

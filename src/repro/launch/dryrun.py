@@ -348,7 +348,11 @@ def run_poisson_cell(name: str, mesh_kind: str) -> dict:
         prob, mesh, b_in, n_iter=pc.n_iter, tol=pc.tol,
         precond=pc.precond, cheb_degree=pc.cheb_degree,
         pmg_smooth_degree=pc.pmg_smooth_degree,
+        pmg_smoother=pc.pmg_smoother,
+        pmg_coarse_op=pc.pmg_coarse_op,
         pmg_coarse_iters=pc.pmg_coarse_iters,
+        schwarz_overlap=pc.schwarz_overlap,
+        schwarz_inner_degree=pc.schwarz_inner_degree,
     )
     lowered = jax.jit(run.func).lower(*run.args)
     t_lower = time.time() - t0
