@@ -1,4 +1,4 @@
-"""Preconditioned-solve benchmark: iterations-to-tolerance and FOM.
+"""Preconditioned-solve benchmark: iterations-to-tolerance, FOM, precision.
 
 Beyond the NekBone 100-fixed-iteration benchmark: solve λ-screened deformed
 Poisson problems to ``tol=1e-8`` with each rung of the preconditioner
@@ -11,21 +11,35 @@ operators) — and report
     iterations / time) — Chebyshev pays extra operator applies per
     iteration, Schwarz pays per-element extended-block FDM solves, and the
     pMG V-cycle pays a whole smoothing hierarchy, so fewer iterations must
-    buy back the per-iteration cost to win wall-clock.
+    buy back the per-iteration cost to win wall-clock;
+  * the per-application preconditioner wall time (``precond_apply_s``) —
+    the bandwidth axis: a mixed row that ties on iterations still wins if
+    each M⁻¹ apply streams half the bytes.
 
-Degrees follow the paper's sweep corners: N ∈ {3, 7, 9, 15} (quick: {3, 7}),
-deform=0.15 so Jacobi has a non-trivial diagonal to chew on.  Solves run in
-float64 (tol=1e-8 sits below what fp32 CG can resolve).  Acceptance tiers
-(tests/test_schwarz.py, tests/test_pmg.py): at N=7, λ=1.0 pmg reaches tol
-in ≤ half the chebyshev iterations; at N=7, λ=0.1 (the ill-conditioned
-regime Schwarz targets) pmg-schwarz and pmg-galerkin each need ≤ the plain
-pmg count.
+Every preconditioned rung runs twice per (N, λ) cell: ``dtype="fp64"``
+(the all-fp64 baseline — the outer solve must stay fp64 because tol=1e-8
+sits below fp32 CG's stall point) and ``dtype="mixed"`` (fp32
+preconditioner chain behind one cast boundary, flexible-β outer PCG —
+``make_preconditioner(precond_dtype=jnp.float32)`` +
+``cg_assembled(cg_variant="flexible")``).  The acceptance bar: every mixed
+row reaches tolerance within +1 iteration of its fp64 twin.
+
+The fused Pallas streaming stages (fused_jacobi_dot / fused_cheb_d_update)
+auto-enable on the mixed rows when the backend compiles Pallas natively
+(``kernels.ops.should_fuse_streams``: non-interpret backend + fp32 data);
+set ``HIPBONE_FUSED=0`` (or pass ``use_fused=False``) to opt out, ``=1``
+to force them through interpret mode.
+
+Degrees cover the paper's sweep corners: N ∈ {3, 7, 15} (quick; full adds
+9), deform=0.15 so Jacobi has a non-trivial diagonal to chew on.
 
 ``main`` returns CSV rows; ``records`` returns the same data as dicts for
-the machine-readable BENCH json emitted by ``benchmarks.run``.
+the machine-readable BENCH json emitted by ``benchmarks.run``
+(``scripts/compare_bench.py`` gates on the (N, λ, kind, dtype) keys).
 """
 from __future__ import annotations
 
+import os
 import time
 
 # ladder order: cost per application rises, iterations-to-tol falls
@@ -49,9 +63,17 @@ PRECOND_RECIPES = {
     "pmg-galerkin": ("pmg", {"pmg_coarse_op": "galerkin"}),
 }
 TOL = 1e-8
+APPLY_REPS = 10
 
 
-def _solve_case(n: int, shape, lam: float, tol: float):
+def _use_fused_default():
+    env = os.environ.get("HIPBONE_FUSED", "")
+    if env in ("0", "1"):
+        return env == "1"
+    return None  # auto: kernels.ops.should_fuse_streams
+
+
+def _solve_case(n: int, shape, lam: float, tol: float, use_fused=None):
     import jax
 
     jax.config.update("jax_enable_x64", True)
@@ -60,7 +82,21 @@ def _solve_case(n: int, shape, lam: float, tol: float):
 
     from repro.core import build_problem, cg_assembled, poisson_assembled
     from repro.core.fom import nekbone_flops_per_iter
-    from repro.core.precond import make_preconditioner
+    from repro.core.operator import cast_problem
+    from repro.core.precond import (
+        PrecondInfo,
+        assembled_diagonal,
+        cast_apply,
+        jacobi_apply,
+        make_preconditioner,
+    )
+    from repro.kernels import ops
+
+    if use_fused is None:
+        use_fused = _use_fused_default()
+    fuse = (
+        ops.should_fuse_streams(jnp.float32) if use_fused is None else use_fused
+    )
 
     prob = build_problem(n, shape, lam=lam, deform=0.15, dtype=jnp.float64)
     a = poisson_assembled(prob)
@@ -71,60 +107,114 @@ def _solve_case(n: int, shape, lam: float, tol: float):
     out = []
     for name in PRECONDS:
         kind, kwargs = PRECOND_RECIPES[name]
-        pc, info = make_preconditioner(kind, prob, a, **kwargs)
-        solve = jax.jit(
-            lambda bb, pc=pc: cg_assembled(a, bb, n_iter=500, tol=tol, precond=pc)
-        )
-        res = solve(b)
-        jax.block_until_ready(res.x)
-        t0 = time.perf_counter()
-        res = solve(b)
-        jax.block_until_ready(res.x)
-        dt = time.perf_counter() - t0
-        iters = int(res.iterations)
-        fom = nekbone_flops_per_iter(e, n) * iters / dt / 1e9
-        out.append(
-            {
-                "n": n,
-                "dofs": prob.n_global,
-                "lam": lam,
-                "kind": name,
-                "iters_to_tol": iters,
-                "time_s": dt,
-                "fom_gflops": fom,
-                "lmax": info.lmax,
-                "lmin": info.lmin,
-                "levels": None if info.levels is None else list(info.levels),
-            }
-        )
+        for dtype_mode in ("fp64", "mixed"):
+            if dtype_mode == "mixed" and kind == "none":
+                continue  # "mixed" means fp32 M⁻¹; plain CG has no M⁻¹
+            mixed = dtype_mode == "mixed"
+            pc_kwargs = dict(kwargs)
+            if mixed and fuse and kind == "chebyshev":
+                # fused d-update streams the fp32 Chebyshev interior
+                pc_kwargs["fused_d_update"] = ops.make_fused_cheb_d_update()
+            if mixed and fuse and kind == "jacobi":
+                # one fp32 diagonal feeds BOTH the gate apply and the fused
+                # stage, so they cannot drift apart
+                dinv32 = 1.0 / assembled_diagonal(
+                    cast_problem(prob, jnp.float32)
+                )
+                pc = cast_apply(jacobi_apply(dinv32), jnp.float32, jnp.float64)
+                info = PrecondInfo("jacobi", 1, None, dtype="float32")
+            else:
+                dinv32 = None
+                pc, info = make_preconditioner(
+                    kind, prob, a,
+                    precond_dtype=jnp.float32 if mixed else None,
+                    **pc_kwargs,
+                )
+            cg_kwargs = {}
+            if mixed:
+                # fp32 M⁻¹ is only approximately symmetric in fp64 -> PR β
+                cg_kwargs["cg_variant"] = "flexible"
+                if dinv32 is not None:
+                    cg_kwargs["fused_precond_dot"] = ops.make_fused_jacobi_dot(
+                        dinv32, out_dtype=jnp.float64
+                    )
+            solve = jax.jit(
+                lambda bb, pc=pc, kw=cg_kwargs: cg_assembled(
+                    a, bb, n_iter=500, tol=tol, precond=pc, **kw
+                )
+            )
+            res = solve(b)
+            jax.block_until_ready(res.x)
+            t0 = time.perf_counter()
+            res = solve(b)
+            jax.block_until_ready(res.x)
+            dt = time.perf_counter() - t0
+            iters = int(res.iterations)
+            fom = nekbone_flops_per_iter(e, n) * iters / dt / 1e9
+
+            # per-application M⁻¹ wall time: the bandwidth win shows here
+            # even where iteration counts tie
+            apply_s = None
+            if pc is not None:
+                papply = jax.jit(pc)
+                jax.block_until_ready(papply(b))
+                t0 = time.perf_counter()
+                for _ in range(APPLY_REPS):
+                    z = papply(b)
+                jax.block_until_ready(z)
+                apply_s = (time.perf_counter() - t0) / APPLY_REPS
+
+            out.append(
+                {
+                    "n": n,
+                    "dofs": prob.n_global,
+                    "lam": lam,
+                    "kind": name,
+                    "dtype": dtype_mode,
+                    "iters_to_tol": iters,
+                    "time_s": dt,
+                    "fom_gflops": fom,
+                    "precond_apply_s": apply_s,
+                    "lmax": info.lmax,
+                    "lmin": info.lmin,
+                    "levels": None if info.levels is None else list(info.levels),
+                }
+            )
     return out
 
 
-def records(quick: bool = True) -> list[dict]:
-    """Structured sweep results (one dict per (N, λ, precond) case)."""
-    degrees = [3, 7] if quick else [3, 7, 9, 15]
+def records(quick: bool = True, use_fused=None) -> list[dict]:
+    """Structured sweep results (one dict per (N, λ, precond, dtype) case)."""
+    degrees = [3, 7, 15] if quick else [3, 7, 9, 15]
     shapes = {3: (4, 4, 4), 7: (4, 4, 4), 9: (3, 3, 3), 15: (2, 2, 2)}
     recs: list[dict] = []
     for n in degrees:
         for lam in (0.1, 1.0):
-            recs.extend(_solve_case(n, shapes[n], lam, tol=TOL))
+            recs.extend(
+                _solve_case(n, shapes[n], lam, tol=TOL, use_fused=use_fused)
+            )
     return recs
 
 
 def rows_from(recs: list[dict]) -> list[str]:
     """CSV rows for a list of :func:`records` results."""
     rows = [
-        "precond,N,dofs,lam,kind,iters_to_tol,time_s,fom_gflops,"
-        "cheb_lmax,cheb_lmin,pmg_levels"
+        "precond,N,dofs,lam,kind,dtype,iters_to_tol,time_s,fom_gflops,"
+        "precond_apply_s,cheb_lmax,cheb_lmin,pmg_levels"
     ]
     for r in recs:
         lmax = "" if r["lmax"] is None else f"{r['lmax']:.3f}"
         lmin = "" if r["lmin"] is None else f"{r['lmin']:.3f}"
         levels = "" if r["levels"] is None else "-".join(map(str, r["levels"]))
+        papply = (
+            ""
+            if r["precond_apply_s"] is None
+            else f"{r['precond_apply_s']:.5f}"
+        )
         rows.append(
             f"precond,{r['n']},{r['dofs']},{r['lam']},{r['kind']},"
-            f"{r['iters_to_tol']},{r['time_s']:.4f},{r['fom_gflops']:.2f},"
-            f"{lmax},{lmin},{levels}"
+            f"{r['dtype']},{r['iters_to_tol']},{r['time_s']:.4f},"
+            f"{r['fom_gflops']:.2f},{papply},{lmax},{lmin},{levels}"
         )
     return rows
 

@@ -10,10 +10,13 @@
 
 ``--json PATH`` additionally writes a machine-readable summary: every
 section's raw CSV rows plus the precond sweep as structured records
-(per-config iterations-to-tol, solve time, effective FOM) so the perf
-trajectory is tracked across PRs — CI passes ``--json BENCH_pr3.json``
-(bump the name per PR) and gates on ``scripts/compare_bench.py``, which
-fails if any (N, λ, kind) case needs more iterations than the previous
+(per-config iterations-to-tol, solve time, effective FOM, per-application
+preconditioner wall time ``precond_apply_s`` — the bandwidth axis a mixed
+fp32-preconditioner row wins on even when iteration counts tie, and the
+``dtype`` column separating fp64 from mixed rows) so the perf trajectory
+is tracked across PRs — CI passes ``--json BENCH_pr4.json`` (bump the
+name per PR) and gates on ``scripts/compare_bench.py``, which fails if
+any (N, λ, kind, dtype) case needs more iterations than the previous
 PR's json recorded.
 """
 import argparse

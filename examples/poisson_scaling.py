@@ -49,22 +49,46 @@ def main() -> None:
     ap.add_argument("--cheb-degree", type=int, default=2)
     ap.add_argument("--tol", type=float, default=None,
                     help="stop at ||r|| <= tol*||r0|| instead of fixed iters")
+    ap.add_argument("--precond-dtype", choices=["float32", "float64"],
+                    default=None,
+                    help="mixed precision: compute dtype of the whole "
+                         "preconditioner chain (fp32 halves M⁻¹ HBM/wire "
+                         "bytes inside an fp64 solve; implies --dtype "
+                         "float64 makes sense)")
+    ap.add_argument("--dtype", choices=["float32", "float64"],
+                    default="float32", help="outer solve dtype")
+    ap.add_argument("--cg-variant", choices=["standard", "flexible"],
+                    default=None,
+                    help="CG β recurrence; default flexible when the "
+                         "preconditioner dtype is narrower than the solve")
     ap.add_argument("--two-phase", action="store_true",
                     help="paper-faithful two-phase comm (halo + gather)")
     args = ap.parse_args()
 
     ranks = args.ranks
     assert len(jax.devices()) == ranks, "device count mismatch"
+    dtype = jnp.dtype(args.dtype)
+    if dtype == jnp.float64:
+        jax.config.update("jax_enable_x64", True)
+    pdtype = None if args.precond_dtype is None else jnp.dtype(args.precond_dtype)
+    if pdtype is not None and pdtype.itemsize > dtype.itemsize:
+        ap.error(
+            f"--precond-dtype {pdtype.name} is wider than --dtype "
+            f"{dtype.name}; mixed precision narrows the preconditioner"
+        )
+    variant = args.cg_variant or (
+        "flexible" if pdtype is not None and pdtype != dtype else "standard"
+    )
     grid = ProcessGrid(factor3(ranks))
     mesh = make_mesh((ranks,), ("ranks",))
     local = (args.local,) * 3
-    prob = build_dist_problem(args.n, grid, local, lam=1.0, dtype=jnp.float32)
+    prob = build_dist_problem(args.n, grid, local, lam=1.0, dtype=dtype)
     print(f"ranks={ranks} grid={grid.shape} local={local} N={args.n} "
           f"global DOFs={prob.n_global:,} halo elems/rank={prob.halo_elems}/{prob.e_local} "
           f"precond={args.precond}")
 
     rng = np.random.default_rng(0)
-    b = jnp.asarray(rng.standard_normal((ranks, prob.m3)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((ranks, prob.m3)), dtype)
     # estimate the Chebyshev interval once at setup so the timed runs below
     # are pure solve (dist_cg would otherwise re-run the Lanczos operator
     # applies inside every compiled call); pmg estimates per level in-graph
@@ -78,6 +102,7 @@ def main() -> None:
     run = jax.jit(dist_cg(prob, mesh, b, n_iter=args.iters, tol=args.tol,
                           precond=precond, cheb_degree=args.cheb_degree,
                           pmg_smoother=smoother, lmin=lmin, lmax=lmax,
+                          precond_dtype=pdtype, cg_variant=variant,
                           two_phase=args.two_phase, record_history=True))
     x, rdotr, iters, hist = run()
     jax.block_until_ready(x)

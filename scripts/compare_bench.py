@@ -5,11 +5,15 @@ Usage:
     python scripts/compare_bench.py BENCH_pr2.json BENCH_pr3.json [--slack N]
 
 Compares the ``precond_records`` of two ``benchmarks.run --json`` summaries
-on the (N, lam, kind) cases they share and fails (exit 1) if any case in
-the new json needs more than ``slack`` extra CG iterations to reach
+on the (N, lam, kind, dtype) cases they share and fails (exit 1) if any
+case in the new json needs more than ``slack`` extra CG iterations to reach
 tolerance — the preconditioner-quality axis of the FOM must never regress.
-New kinds (ladder growth) and removed cases are reported but never fail;
-wall-clock and GFLOPS are machine-dependent and intentionally ignored.
+Records without a ``dtype`` field (jsons predating the mixed-precision
+sweep, e.g. BENCH_pr3.json) are treated as "fp64", so shared-case matching
+stays stable across that schema growth; mixed rows enter the gate the first
+time they appear.  New kinds (ladder growth) and removed cases are reported
+but never fail; wall-clock and GFLOPS are machine-dependent and
+intentionally ignored.
 """
 from __future__ import annotations
 
@@ -25,7 +29,10 @@ def load_records(path: str) -> dict[tuple, int]:
     if not recs:
         raise SystemExit(f"{path}: no precond_records section")
     return {
-        (r["n"], r["lam"], r["kind"]): int(r["iters_to_tol"]) for r in recs
+        (r["n"], r["lam"], r["kind"], r.get("dtype", "fp64")): int(
+            r["iters_to_tol"]
+        )
+        for r in recs
     }
 
 
@@ -49,21 +56,21 @@ def main() -> int:
 
     failures = []
     for key in shared:
-        n, lam, kind = key
+        n, lam, kind, dtype = key
         delta = cand[key] - base[key]
         marker = "REGRESSION" if delta > args.slack else "ok"
         print(
-            f"{marker:>10}  N={n} lam={lam} {kind:>14}: "
+            f"{marker:>10}  N={n} lam={lam} {kind:>14} [{dtype}]: "
             f"{base[key]} -> {cand[key]} ({delta:+d})"
         )
         if delta > args.slack:
             failures.append(key)
     for key in new:
-        n, lam, kind = key
-        print(f"{'new':>10}  N={n} lam={lam} {kind:>14}: {cand[key]}")
+        n, lam, kind, dtype = key
+        print(f"{'new':>10}  N={n} lam={lam} {kind:>14} [{dtype}]: {cand[key]}")
     for key in gone:
-        n, lam, kind = key
-        print(f"{'removed':>10}  N={n} lam={lam} {kind:>14}")
+        n, lam, kind, dtype = key
+        print(f"{'removed':>10}  N={n} lam={lam} {kind:>14} [{dtype}]")
 
     if not shared:
         print("error: no shared (N, lam, kind) cases to compare")

@@ -18,8 +18,21 @@ gslib setup discovers generically.
 All functions run inside shard_map over ``axis_name`` whose size equals
 ``grid.size``. Boxes are passed as 3-D arrays indexed [z, y, x]
 (x fastest in the flat layout).
+
+**Wire precision.**  Payload dtype follows the box dtype, so the
+mixed-precision preconditioner path (fp32 boxes inside an fp64 PCG) halves
+its wire bytes with no code here.  Every primitive additionally accepts
+``wire_dtype``: faces/shells are rounded to that dtype just before the
+``ppermute`` and widened back on receipt — fp32 wires under fp64 boxes for
+payload-bound exchanges where the *accumulation* must stay wide.  Summed
+exchanges still accumulate in the box dtype; only the transported slab is
+narrowed, and any interface value that travels is rounded on the owning
+rank as well, so owner and replicas keep holding the same value (the
+consistency contract of the padded box survives the narrow wire).
 """
 from __future__ import annotations
+
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -34,6 +47,30 @@ __all__ = [
     "contract_exchange",
     "rank_coords",
 ]
+
+
+def _wire_permute(
+    val: jax.Array, axis_name: str, perm, wire_dtype: Any | None
+) -> jax.Array:
+    """ppermute with an optional cast-on-the-wire of the payload slab."""
+    if wire_dtype is None or jnp.dtype(wire_dtype) == val.dtype:
+        return lax.ppermute(val, axis_name, perm)
+    return lax.ppermute(
+        val.astype(wire_dtype), axis_name, perm
+    ).astype(val.dtype)
+
+
+def _wire_round(val: jax.Array, wire_dtype: Any | None) -> jax.Array:
+    """Round a slab to the wire dtype in place (idempotent).
+
+    The replica-consistency guard for narrowed wires: any value that
+    travels MUST also be rounded on the rank that keeps a copy of it,
+    otherwise the owner would hold the exact value while every replica
+    holds the rounded one and the same global DOF would differ by rank.
+    """
+    if wire_dtype is None or jnp.dtype(wire_dtype) == val.dtype:
+        return val
+    return val.astype(wire_dtype).astype(val.dtype)
 
 
 def rank_coords(grid: ProcessGrid, axis_name: str) -> tuple[jax.Array, jax.Array, jax.Array]:
@@ -70,13 +107,22 @@ def _add_face(box: jax.Array, dim: int, idx: int, val: jax.Array) -> jax.Array:
     return box.at[tuple(sl)].add(val)
 
 
-def sum_exchange(box: jax.Array, grid: ProcessGrid, axis_name: str) -> jax.Array:
+def sum_exchange(
+    box: jax.Array,
+    grid: ProcessGrid,
+    axis_name: str,
+    wire_dtype: Any | None = None,
+) -> jax.Array:
     """Assemble interface partial sums; all replicas end up consistent.
 
     Per partitioned dim: (1) low faces shift down and accumulate into the
     -neighbor's high face (which is the canonical interface slab); (2) the
     summed high face shifts back up into the +neighbor's low face.
     Boundary ranks receive ppermute zero-fill and are masked.
+    ``wire_dtype`` narrows the transported faces only (sums stay in the
+    box dtype); every interface value that travels is rounded on the
+    owner too, so all copies of a DOF hold the *same* rounded sum — the
+    consistency contract survives the narrow wire.
     """
     coords = rank_coords(grid, axis_name)
     for dim in range(3):
@@ -87,11 +133,13 @@ def sum_exchange(box: jax.Array, grid: ProcessGrid, axis_name: str) -> jax.Array
         c = coords[dim]
         # (1) low face -> -neighbor high face (sum)
         low = _face(box, dim, 0)
-        recv = lax.ppermute(low, axis_name, grid.shift_perm(dim, -1))
+        recv = _wire_permute(low, axis_name, grid.shift_perm(dim, -1), wire_dtype)
         box = _add_face(box, dim, m - 1, recv)
-        # (2) summed high face -> +neighbor low face (copy)
-        hi = _face(box, dim, m - 1)
-        recv = lax.ppermute(hi, axis_name, grid.shift_perm(dim, +1))
+        # (2) summed high face -> +neighbor low face (copy); the owner
+        # keeps the same rounded value it ships (replica consistency)
+        hi = _wire_round(_face(box, dim, m - 1), wire_dtype)
+        box = _set_face(box, dim, m - 1, hi)
+        recv = _wire_permute(hi, axis_name, grid.shift_perm(dim, +1), wire_dtype)
         keep = _face(box, dim, 0)
         new_low = jnp.where(c > 0, recv, keep)
         box = _set_face(box, dim, 0, new_low)
@@ -117,7 +165,11 @@ def _add_shell(box: jax.Array, dim: int, lo: int, hi: int, val) -> jax.Array:
 
 
 def expand_exchange(
-    box: jax.Array, grid: ProcessGrid, axis_name: str, depth: int
+    box: jax.Array,
+    grid: ProcessGrid,
+    axis_name: str,
+    depth: int,
+    wire_dtype: Any | None = None,
 ) -> jax.Array:
     """Grow a consistent box by a ``depth``-node shell of neighbor data.
 
@@ -147,25 +199,31 @@ def expand_exchange(
         morig = m - 2 * d
         # low shell <- -neighbor's top interior slab (their original
         # indices [morig-1-d, morig-1) == padded [morig-1, morig-1+d))
-        recv = lax.ppermute(
+        recv = _wire_permute(
             _shell(box, dim, morig - 1, morig - 1 + d),
             axis_name,
             grid.shift_perm(dim, +1),
+            wire_dtype,
         )
         box = _set_shell(box, dim, 0, d, recv)
         # high shell <- +neighbor's bottom interior slab (their original
         # [1, 1+d) == padded [1+d, 1+2d))
-        recv = lax.ppermute(
+        recv = _wire_permute(
             _shell(box, dim, 1 + d, 1 + 2 * d),
             axis_name,
             grid.shift_perm(dim, -1),
+            wire_dtype,
         )
         box = _set_shell(box, dim, m - d, m, recv)
     return box
 
 
 def contract_exchange(
-    box: jax.Array, grid: ProcessGrid, axis_name: str, depth: int
+    box: jax.Array,
+    grid: ProcessGrid,
+    axis_name: str,
+    depth: int,
+    wire_dtype: Any | None = None,
 ) -> jax.Array:
     """Adjoint of :func:`expand_exchange`: return shell contributions home.
 
@@ -189,12 +247,14 @@ def contract_exchange(
         if grid.shape[dim] > 1:
             # my low shell -> -neighbor's top interior ([morig-1, morig-1+d)
             # in their padded indexing); I receive the +neighbor's low shell
-            recv = lax.ppermute(
-                _shell(box, dim, 0, d), axis_name, grid.shift_perm(dim, -1)
+            recv = _wire_permute(
+                _shell(box, dim, 0, d), axis_name,
+                grid.shift_perm(dim, -1), wire_dtype,
             )
             box = _add_shell(box, dim, morig - 1, morig - 1 + d, recv)
-            recv = lax.ppermute(
-                _shell(box, dim, m - d, m), axis_name, grid.shift_perm(dim, +1)
+            recv = _wire_permute(
+                _shell(box, dim, m - d, m), axis_name,
+                grid.shift_perm(dim, +1), wire_dtype,
             )
             box = _add_shell(box, dim, 1 + d, 1 + 2 * d, recv)
         zero = jnp.zeros_like(_shell(box, dim, 0, d))
@@ -203,12 +263,19 @@ def contract_exchange(
     return box[d:-d, d:-d, d:-d]
 
 
-def copy_exchange(box: jax.Array, grid: ProcessGrid, axis_name: str) -> jax.Array:
+def copy_exchange(
+    box: jax.Array,
+    grid: ProcessGrid,
+    axis_name: str,
+    wire_dtype: Any | None = None,
+) -> jax.Array:
     """Refresh replica slabs from owners (owner = low-side rank).
 
     The canonical copy of an interface point lives on the rank where it sits
     on the HIGH face of the padded box; the +neighbor's low-face replica is
     overwritten. This is hipBone's scatter-side halo exchange in isolation.
+    With ``wire_dtype`` the owner's high face is rounded to the wire dtype
+    too, so replicas and owner agree on the rounded value.
     """
     coords = rank_coords(grid, axis_name)
     for dim in range(3):
@@ -217,8 +284,9 @@ def copy_exchange(box: jax.Array, grid: ProcessGrid, axis_name: str) -> jax.Arra
             continue
         m = box.shape[_axis(dim)]
         c = coords[dim]
-        hi = _face(box, dim, m - 1)
-        recv = lax.ppermute(hi, axis_name, grid.shift_perm(dim, +1))
+        hi = _wire_round(_face(box, dim, m - 1), wire_dtype)
+        box = _set_face(box, dim, m - 1, hi)
+        recv = _wire_permute(hi, axis_name, grid.shift_perm(dim, +1), wire_dtype)
         keep = _face(box, dim, 0)
         box = _set_face(box, dim, 0, jnp.where(c > 0, recv, keep))
     return box

@@ -45,6 +45,13 @@ class PoissonConfig:
     # block inverses at ~linear extra cost per application).
     schwarz_overlap: int = 1
     schwarz_inner_degree: int = 7
+    # mixed precision: compute dtype of the whole preconditioner chain
+    # (None = dtype).  "float32" inside a float64 solve halves
+    # preconditioner HBM/wire traffic (the production Nek5000/RS trick);
+    # pair it with cg_variant="flexible" — the fp32 M⁻¹ is only
+    # approximately symmetric in fp64 arithmetic.
+    precond_dtype: str | None = None
+    cg_variant: str = "standard"        # "standard" (FR β) | "flexible" (PR β)
 
     def __post_init__(self):
         if self.precond not in ("none", "jacobi", "chebyshev", "schwarz", "pmg"):
@@ -53,6 +60,10 @@ class PoissonConfig:
             raise ValueError(f"unknown pmg_smoother {self.pmg_smoother!r}")
         if self.pmg_coarse_op not in ("redisc", "galerkin"):
             raise ValueError(f"unknown pmg_coarse_op {self.pmg_coarse_op!r}")
+        if self.precond_dtype not in (None, "float32", "float64"):
+            raise ValueError(f"unknown precond_dtype {self.precond_dtype!r}")
+        if self.cg_variant not in ("standard", "flexible"):
+            raise ValueError(f"unknown cg_variant {self.cg_variant!r}")
 
     def dofs_per_rank(self) -> int:
         n = self.n_degree
@@ -87,6 +98,18 @@ CONFIGS = {
     "hipbone_n7_pmg_schwarz": PoissonConfig(
         "hipbone_n7_pmg_schwarz", 7, (8, 8, 8), lam=0.1,
         precond="pmg", pmg_smoother="schwarz", tol=1e-8
+    ),
+    # mixed precision: fp64 outer PCG, fp32 preconditioner chain (halved
+    # preconditioner HBM streams and halo wire payloads), flexible β
+    "hipbone_n7_pmg_fp32": PoissonConfig(
+        "hipbone_n7_pmg_fp32", 7, (8, 8, 8), lam=0.1,
+        precond="pmg", tol=1e-8, dtype="float64",
+        precond_dtype="float32", cg_variant="flexible"
+    ),
+    "hipbone_n7_schwarz_fp32": PoissonConfig(
+        "hipbone_n7_schwarz_fp32", 7, (8, 8, 8), lam=0.1,
+        precond="schwarz", tol=1e-8, dtype="float64",
+        precond_dtype="float32", cg_variant="flexible"
     ),
 }
 

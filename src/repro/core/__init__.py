@@ -4,7 +4,13 @@ Screened-Poisson SEM operator (assembled + scattered storage), CG solver
 with hipBone's fusion/overlap schedule, gather-scatter machinery, and the
 paper's FOM/roofline models.
 """
-from .cg import CGResult, cg_assembled, cg_scattered, fused_residual_update
+from .cg import (
+    CG_VARIANTS,
+    CGResult,
+    cg_assembled,
+    cg_scattered,
+    fused_residual_update,
+)
 from .fom import (
     TPU_V5E,
     TpuSpec,
@@ -28,6 +34,7 @@ from .mesh import BoxMesh, build_box_mesh, partition_elements
 from .operator import (
     PoissonProblem,
     build_problem,
+    cast_problem,
     coarsen_problem,
     local_poisson,
     poisson_assembled,

@@ -24,6 +24,16 @@ Iteration control: a fixed count (NekBone uses 100) runs under ``lax.scan``
 so a single compiled program covers the whole benchmark; passing ``tol``
 switches to ``lax.while_loop`` stopping at ‖r‖ ≤ tol·‖r₀‖ (capped at
 ``n_iter``), with ``CGResult.iterations`` reporting the count actually run.
+
+CG variants: the default ``cg_variant="standard"`` uses the Fletcher–Reeves
+β = (r·z)_new/(r·z)_old, which assumes M⁻¹ is a *fixed symmetric* linear
+map.  ``cg_variant="flexible"`` switches β to the Polak–Ribière form
+β = z_new·(r_new − r_old)/(r·z)_old (flexible CG, Notay 2000) — robust to
+preconditioners that are only approximately symmetric in the outer dtype's
+arithmetic, e.g. an fp32 V-cycle or Schwarz apply inside an fp64 solve
+(precond.make_preconditioner(precond_dtype=...)).  The extra cost is one
+inner product per iteration, fused into the existing allreduce as a
+length-2 payload.
 """
 from __future__ import annotations
 
@@ -33,7 +43,15 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-__all__ = ["CGResult", "cg_assembled", "cg_scattered", "fused_residual_update"]
+__all__ = [
+    "CGResult",
+    "CG_VARIANTS",
+    "cg_assembled",
+    "cg_scattered",
+    "fused_residual_update",
+]
+
+CG_VARIANTS = ("standard", "flexible")
 
 
 class CGResult(NamedTuple):
@@ -76,7 +94,12 @@ def _pcg(
     fused_update: Callable[..., tuple[jax.Array, jax.Array]] | None,
     fused_precond_dot: Callable[..., tuple[jax.Array, jax.Array]] | None,
     record_history: bool,
+    variant: str = "standard",
 ) -> CGResult:
+    if variant not in CG_VARIANTS:
+        raise ValueError(
+            f"unknown cg_variant {variant!r}; choose from {CG_VARIANTS}"
+        )
     if isinstance(precond, str):
         raise TypeError(
             f"precond must be a callable z = M⁻¹r (or None), got the string "
@@ -90,6 +113,10 @@ def _pcg(
         )
     allsum = psum or (lambda v: v)
     upd = fused_update or fused_residual_update
+    # without a preconditioner z_new == r_new, so Polak–Ribière reduces to
+    # Fletcher–Reeves up to the (exactly-orthogonal) r_new·r_old term — keep
+    # the cheaper standard recurrence there
+    flexible = variant == "flexible" and precond is not None
     x = jnp.zeros_like(b) if x0 is None else x0
 
     def apply_precond(r_vec):
@@ -125,10 +152,18 @@ def _pcg(
         rdotr_new = allsum(rr_local)
         if precond is None:
             z_new, rz_new = r_new, rdotr_new
+            beta = _safe_div(rz_new, rz)
+        elif flexible:
+            # Polak–Ribière β = z_new·(r_new − r_old)/rz_old; the extra
+            # z_new·r_old dot rides the same allreduce as r_new·z_new
+            z_new, rz_local = apply_precond(r_new)
+            pair = allsum(jnp.stack([rz_local, _dot(z_new, r, weight)]))
+            rz_new = pair[0]
+            beta = _safe_div(rz_new - pair[1], rz)
         else:
             z_new, rz_local = apply_precond(r_new)
             rz_new = allsum(rz_local)
-        beta = _safe_div(rz_new, rz)
+            beta = _safe_div(rz_new, rz)
         p_new = z_new + beta * p
         return x_new, r_new, p_new, rz_new, rdotr_new
 
@@ -186,6 +221,7 @@ def cg_assembled(
     fused_update: Callable[..., tuple[jax.Array, jax.Array]] | None = None,
     fused_precond_dot: Callable[..., tuple[jax.Array, jax.Array]] | None = None,
     record_history: bool = False,
+    cg_variant: str = "standard",
 ) -> CGResult:
     """hipBone (P)CG on assembled (length N_G) vectors; unweighted dots.
 
@@ -193,6 +229,9 @@ def cg_assembled(
     gives the seed's plain CG.  ``fused_precond_dot``: optional one-pass
     (M⁻¹r, r·M⁻¹r) — the Pallas streaming fusion of the PCG inner product.
     ``tol``: stop at ‖r‖ ≤ tol·‖r₀‖ instead of running n_iter iterations.
+    ``cg_variant``: "standard" (Fletcher–Reeves β, exact-symmetric M⁻¹) or
+    "flexible" (Polak–Ribière β, robust to inexactly-symmetric appliers
+    such as mixed-precision preconditioners — see module docstring).
     """
     return _pcg(
         operator,
@@ -206,6 +245,7 @@ def cg_assembled(
         fused_update=fused_update,
         fused_precond_dot=fused_precond_dot,
         record_history=record_history,
+        variant=cg_variant,
     )
 
 
@@ -220,6 +260,7 @@ def cg_scattered(
     psum: Callable[[jax.Array], jax.Array] | None = None,
     precond: Callable[[jax.Array], jax.Array] | None = None,
     record_history: bool = False,
+    cg_variant: str = "standard",
 ) -> CGResult:
     """NekBone baseline (P)CG on scattered (length N_L) vectors; weighted dots."""
     return _pcg(
@@ -234,4 +275,5 @@ def cg_scattered(
         fused_update=None,
         fused_precond_dot=None,
         record_history=record_history,
+        variant=cg_variant,
     )

@@ -48,7 +48,7 @@ from ..comms.halo import (
 from ..comms.topology import ProcessGrid
 from ..compat import shard_map
 from . import sem
-from .cg import CGResult, _pcg
+from .cg import CG_VARIANTS, CGResult, _pcg
 from .geometry import geometric_factors_from_coords
 from .operator import local_poisson
 from .precond import (
@@ -57,6 +57,7 @@ from .precond import (
     PMG_SMOOTHERS,
     PRECOND_KINDS,
     SCHWARZ_INNER_DEGREE,
+    cast_apply,
     chebyshev_apply,
     jacobi_apply,
     lanczos_extremes,
@@ -769,6 +770,8 @@ def dist_cg(
     pmg_ladder: tuple[int, ...] | None = None,
     schwarz_overlap: int = 1,
     schwarz_inner_degree: int = SCHWARZ_INNER_DEGREE,
+    precond_dtype: Any = None,
+    cg_variant: str = "standard",
     local_op: Callable[..., jax.Array] | None = None,
     two_phase: bool = False,
     record_history: bool = False,
@@ -800,6 +803,18 @@ def dist_cg(
       schwarz_overlap / schwarz_inner_degree: overlapping-Schwarz knobs
         (extension width in GLL nodes; in-eigenbasis block-solve degree) for
         ``precond="schwarz"`` and ``pmg_smoother="schwarz"``.
+      precond_dtype: compute dtype of the whole preconditioner chain
+        (default None = ``prob.dtype``).  With fp32 inside an fp64 solve,
+        every preconditioner ingredient — A-applies, diagonals, Schwarz
+        FDM fields, every coarse pMG level and transfer — runs on fp32
+        boxes, so *all* preconditioner halo payloads (sum/copy/expand/
+        contract exchanges, coarse-level included) are fp32 on the wire
+        while the outer fp64 recurrence keeps tol=1e-8 reachable.  One
+        cast boundary wraps the apply; the outer operator and its halo
+        exchange stay fp64.  Pair with ``cg_variant="flexible"``.
+      cg_variant: "standard" (Fletcher–Reeves β) or "flexible"
+        (Polak–Ribière β; robust when M⁻¹ is only fp32-symmetric — see
+        core.cg).
       local_op: optional Pallas element kernel replacing the jnp reference.
       two_phase: paper-faithful two-phase exchange instead of the fused one.
       record_history: carry the per-iteration ‖r‖² history buffer.
@@ -842,31 +857,47 @@ def dist_cg(
             "operator is single-device only (make_pmg_preconditioner); the "
             "sharded V-cycle rediscretizes its coarse levels"
         )
+    if cg_variant not in CG_VARIANTS:
+        raise ValueError(
+            f"unknown cg_variant {cg_variant!r}; choose from {CG_VARIANTS}"
+        )
     if pmg_smooth_degree is None:
         pmg_smooth_degree = pmg_smooth_degree_default(pmg_smoother)
     op = local_op or local_poisson
     spec = P(prob.axis_name)
     hist_len = n_iter
 
+    # Mixed precision: the preconditioner chain is built from a cast *view*
+    # of the problem (pprob) — its d matrix and every coarse pMG level /
+    # Schwarz FDM field carry cdtype, so preconditioner boxes (and hence
+    # every preconditioner halo payload) live in cdtype end to end.  The
+    # fine-level sharded g/w are cast once inside the compiled program.
+    cdtype = jnp.dtype(prob.dtype if precond_dtype is None else precond_dtype)
+    mixed = cdtype != jnp.dtype(prob.dtype)
+    pprob = prob if not mixed else dataclasses.replace(
+        prob, d=prob.d.astype(cdtype), dtype=cdtype
+    )
+
     need_power = (precond == "chebyshev" and lmax is None) or precond == "pmg"
+    # the seeds only feed preconditioner spectrum estimation -> cdtype
     seed_boxes = jnp.asarray(
-        seed_values(_box_global_indices(prob)), prob.dtype
-    ) if need_power else jnp.zeros((prob.grid.size, 1), prob.dtype)
+        seed_values(_box_global_indices(prob)), cdtype
+    ) if need_power else jnp.zeros((prob.grid.size, 1), cdtype)
 
     if precond == "pmg":
-        levels, jmats = build_pmg_levels(prob, pmg_ladder)
-        jmats = [jnp.asarray(j, prob.dtype) for j in jmats]
+        levels, jmats = build_pmg_levels(pprob, pmg_ladder)
+        jmats = [jnp.asarray(j, cdtype) for j in jmats]
         pmg_data = tuple(
             (
                 lvl.g,
                 lvl.w_local,
                 lvl.mask,
-                jnp.asarray(seed_values(_box_global_indices(lvl)), prob.dtype),
+                jnp.asarray(seed_values(_box_global_indices(lvl)), cdtype),
             )
             for lvl in levels[1:]
         )
     else:
-        levels, jmats, pmg_data = [prob], [], ()
+        levels, jmats, pmg_data = [pprob], [], ()
 
     # Schwarz setup: one _SchwarzDist per level that smooths with it —
     # level 0 for the standalone kind (overlap validated like the
@@ -876,7 +907,7 @@ def dist_cg(
     # arguments; static index maps stay in the closure.
     if precond == "schwarz":
         schwarz_setups = [
-            _schwarz_setup(prob, schwarz_overlap, schwarz_inner_degree)
+            _schwarz_setup(pprob, schwarz_overlap, schwarz_inner_degree)
         ]
     elif precond == "pmg" and pmg_smoother == "schwarz":
         schwarz_setups = [
@@ -905,6 +936,19 @@ def dist_cg(
         )
         psum = lambda v: lax.psum(v, prob.axis_name)
 
+        # preconditioner-dtype views of the fine-level shards: the casts are
+        # single ops reused by every M⁻¹-internal A-apply in the program
+        if mixed:
+            g1c, w1c, m1c = (
+                g1.astype(cdtype), w1.astype(cdtype), m1.astype(cdtype)
+            )
+            operator_pc = lambda v: _apply_assembled(
+                pprob, v, g1c, w1c, local_op=op, two_phase=two_phase
+            )
+        else:
+            g1c, w1c, m1c = g1, w1, m1
+            operator_pc = operator
+
         def schwarz_apply(i: int, lvl: DistPoisson):
             fields1 = tuple(f[0] for f in schwarz_s[i][:6])
             return _box_schwarz_apply(
@@ -913,34 +957,34 @@ def dist_cg(
 
         pc = None
         if precond != "none":
-            dinv = _box_dinv(prob, g1, w1)
+            dinv = _box_dinv(pprob, g1c, w1c)
             if precond == "jacobi":
                 pc = jacobi_apply(dinv)
             elif precond == "schwarz":
-                pc = schwarz_apply(0, prob)
+                pc = schwarz_apply(0, pprob)
             elif precond == "chebyshev":
                 if lmax is None:
-                    mdot = lambda a, bb: jnp.vdot(a * m1, bb)
+                    mdot = lambda a, bb: jnp.vdot(a * m1c, bb)
                     lmin_e, lmax_e = lanczos_extremes(
-                        operator, dinv, seed_s[0],
+                        operator_pc, dinv, seed_s[0],
                         iters=lanczos_iters, dot=mdot, psum=psum,
                     )
                     top = CHEB_SAFETY * lmax_e
                     low = CHEB_LMIN_SAFETY * lmin_e
                 else:
-                    top = CHEB_SAFETY * jnp.asarray(lmax, b1.dtype)
+                    top = CHEB_SAFETY * jnp.asarray(lmax, cdtype)
                     low = None if lmin is None else (
-                        CHEB_LMIN_SAFETY * jnp.asarray(lmin, b1.dtype)
+                        CHEB_LMIN_SAFETY * jnp.asarray(lmin, cdtype)
                     )
                 pc = chebyshev_apply(
-                    operator, dinv, top, lmin=low, degree=cheb_degree
+                    operator_pc, dinv, top, lmin=low, degree=cheb_degree
                 )
             else:  # pmg
-                lvl_ops = [operator]
+                lvl_ops = [operator_pc]
                 lvl_dinvs = [dinv]
-                lvl_masks = [m1]
+                lvl_masks = [m1c]
                 lvl_seeds = [seed_s[0]]
-                lvl_wlocs = [w1]
+                lvl_wlocs = [w1c]
                 for lvl, (g_l, w_l, mk_l, sd_l) in zip(levels[1:], pmg_s):
                     g1l, w1l = g_l[0], w_l[0]
                     lvl_ops.append(
@@ -997,6 +1041,9 @@ def dist_cg(
                 pc = make_vcycle(
                     lvl_ops[:-1], smoothers, restricts, prolongs, coarse_apply
                 )
+        if mixed and pc is not None:
+            # the one cast boundary: round r to cdtype, widen z back
+            pc = cast_apply(pc, cdtype, b1.dtype)
 
         res = _pcg(
             operator,
@@ -1010,6 +1057,7 @@ def dist_cg(
             fused_update=None,
             fused_precond_dot=None,
             record_history=record_history,
+            variant=cg_variant,
         )
         hist = res.rdotr_history
         return (
@@ -1052,6 +1100,8 @@ def dist_cg_scattered(
     lanczos_iters: int = 10,
     lmax: float | None = None,
     lmin: float | None = None,
+    precond_dtype: Any = None,
+    cg_variant: str = "standard",
     local_op: Callable[..., jax.Array] | None = None,
 ):
     """Distributed NekBone baseline: scattered (R, E_loc, p) vectors.
@@ -1071,6 +1121,10 @@ def dist_cg_scattered(
         (schwarz and p-multigrid live on assembled storage, where block
         solves and transfers are single gathers; the paper's argument for
         assembled storage applies doubly to preconditioning).
+      precond_dtype / cg_variant: as in :func:`dist_cg` — an fp32
+        Jacobi/Chebyshev chain (scattered fields, gather-scatter boxes and
+        their exchanges all in fp32) behind one cast boundary, with the
+        flexible (Polak–Ribière) β available for robustness.
 
     The assembled diagonal is built in padded-box storage and scattered to
     the element-local layout; on the continuous subspace (range of Z,
@@ -1086,15 +1140,25 @@ def dist_cg_scattered(
         raise ValueError(
             f"dist_cg_scattered supports none|jacobi|chebyshev, got {precond!r}"
         )
+    if cg_variant not in CG_VARIANTS:
+        raise ValueError(
+            f"unknown cg_variant {cg_variant!r}; choose from {CG_VARIANTS}"
+        )
     op = local_op or local_poisson
     spec = P(prob.axis_name)
     l2g_flat = jnp.asarray(prob.l2g.reshape(-1))
     m3 = prob.m3
+    cdtype = jnp.dtype(prob.dtype if precond_dtype is None else precond_dtype)
+    mixed = cdtype != jnp.dtype(prob.dtype)
+    pprob = prob if not mixed else dataclasses.replace(
+        prob, d=prob.d.astype(cdtype), dtype=cdtype
+    )
+    d_pc = pprob.d
 
     need_lanczos = precond == "chebyshev" and lmax is None
     seed_boxes = jnp.asarray(
-        seed_values(_box_global_indices(prob)), prob.dtype
-    ) if need_lanczos else jnp.zeros((prob.grid.size, 1), prob.dtype)
+        seed_values(_box_global_indices(prob)), cdtype
+    ) if need_lanczos else jnp.zeros((prob.grid.size, 1), cdtype)
 
     def gather_scatter(y_l):
         box = jax.ops.segment_sum(y_l.reshape(-1), l2g_flat, num_segments=m3)
@@ -1113,35 +1177,50 @@ def dist_cg_scattered(
             s = op(x_l, g1, prob.d, 0.0, None)
             return gather_scatter(s) + prob.lam * x_l
 
+        # preconditioner-dtype operator: fp32 local fields, fp32
+        # gather-scatter boxes (hence fp32 exchange payloads) when mixed
+        if mixed:
+            g1c, w1c = g1.astype(cdtype), w1.astype(cdtype)
+
+            def operator_pc(x_l):
+                s = op(x_l, g1c, d_pc, 0.0, None)
+                return gather_scatter(s) + jnp.asarray(prob.lam, cdtype) * x_l
+
+        else:
+            g1c, w1c = g1, w1
+            operator_pc = operator
+
         pc = None
         if precond != "none":
             # assembled diag in box storage, scattered to the local layout:
             # Z diag(A)⁻¹ — consistent on the continuous subspace for free
             dinv_l = jnp.take(
-                _box_dinv(prob, g1, w1), l2g_flat, axis=0
+                _box_dinv(pprob, g1c, w1c), l2g_flat, axis=0
             ).reshape(b1.shape)
             if precond == "jacobi":
                 pc = jacobi_apply(dinv_l)
             else:
-                wdot = lambda a, bb: jnp.vdot(a * w1, bb)
+                wdot = lambda a, bb: jnp.vdot(a * w1c, bb)
                 if lmax is None:
                     seed_l = jnp.take(seed_s[0], l2g_flat, axis=0).reshape(
                         b1.shape
                     )
                     lmin_e, lmax_e = lanczos_extremes(
-                        operator, dinv_l, seed_l,
+                        operator_pc, dinv_l, seed_l,
                         iters=lanczos_iters, dot=wdot, psum=psum,
                     )
                     top = CHEB_SAFETY * lmax_e
                     low = CHEB_LMIN_SAFETY * lmin_e
                 else:
-                    top = CHEB_SAFETY * jnp.asarray(lmax, b1.dtype)
+                    top = CHEB_SAFETY * jnp.asarray(lmax, cdtype)
                     low = None if lmin is None else (
-                        CHEB_LMIN_SAFETY * jnp.asarray(lmin, b1.dtype)
+                        CHEB_LMIN_SAFETY * jnp.asarray(lmin, cdtype)
                     )
                 pc = chebyshev_apply(
-                    operator, dinv_l, top, lmin=low, degree=cheb_degree
+                    operator_pc, dinv_l, top, lmin=low, degree=cheb_degree
                 )
+            if mixed:
+                pc = cast_apply(pc, cdtype, b1.dtype)
 
         res = _pcg(
             operator,
@@ -1155,6 +1234,7 @@ def dist_cg_scattered(
             fused_update=None,
             fused_precond_dot=None,
             record_history=False,
+            variant=cg_variant,
         )
         return res.x[None], res.rdotr, jnp.asarray(res.iterations)
 

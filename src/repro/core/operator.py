@@ -33,6 +33,7 @@ __all__ = [
     "build_problem",
     "problem_from_mesh",
     "coarsen_problem",
+    "cast_problem",
     "poisson_assembled",
     "poisson_scattered",
 ]
@@ -173,6 +174,26 @@ def coarsen_problem(prob: PoissonProblem, n_coarse: int) -> PoissonProblem:
     coords = sem.interp_coords_3d(j, mf.coords)
     mesh_c = dataclasses.replace(base, coords=coords)
     return problem_from_mesh(mesh_c, lam=prob.lam, dtype=prob.dtype)
+
+
+def cast_problem(prob: PoissonProblem, dtype: Any) -> PoissonProblem:
+    """The same problem with every runtime array cast to ``dtype``.
+
+    The mixed-precision hook: ``make_preconditioner(precond_dtype=...)``
+    builds its whole operator/diagonal/transfer chain from the cast copy, so
+    every preconditioner byte (HBM streams and, sharded, wire payloads) is
+    in the narrow dtype while the outer PCG keeps the original problem.
+    Setup metadata (mesh, l2g) is shared, not copied.
+    """
+    return dataclasses.replace(
+        prob,
+        d=prob.d.astype(dtype),
+        g=prob.g.astype(dtype),
+        jw=prob.jw.astype(dtype),
+        w_local=prob.w_local.astype(dtype),
+        w_global=prob.w_global.astype(dtype),
+        dtype=dtype,
+    )
 
 
 def poisson_assembled(

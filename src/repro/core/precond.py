@@ -52,6 +52,15 @@ Everything here is expressed through the caller's ``operator`` /
 ``dot`` / ``psum`` callables, so the same code serves the single-device
 assembled path and the sharded padded-box path in core.distributed (where
 dots are replica-masked and psum is a real collective).
+
+**Precision is a first-class axis**: ``make_preconditioner(...,
+precond_dtype=jnp.float32)`` builds the whole ladder rung — diagonals,
+Chebyshev A-apply chains, Schwarz FDM blocks, every pMG level and transfer
+— in fp32 and wraps it in a single :func:`cast_apply` boundary, so an fp64
+outer PCG streams half the preconditioner bytes (the production
+Nek5000/NekRS trick).  The fp32 apply is symmetric only to fp32 roundoff
+when viewed from fp64, so pair it with ``cg_variant="flexible"``
+(core.cg) near tight tolerances.
 """
 from __future__ import annotations
 
@@ -73,6 +82,8 @@ __all__ = [
     "lanczos_extremes",
     "jacobi_apply",
     "chebyshev_apply",
+    "cast_apply",
+    "deterministic_seed_vector",
     "tensor3_interp",
     "pmg_degree_ladder",
     "make_transfer_pair",
@@ -210,14 +221,22 @@ def power_lambda_max(
     return lam
 
 
-def deterministic_seed_vector(n: int, dtype=jnp.float32) -> jax.Array:
+def deterministic_seed_vector(n: int, dtype=None) -> jax.Array:
     """Reproducible high-frequency start vector for the power iteration.
 
     A smooth vector (ones) is nearly the *lowest* mode of D⁻¹A; this hash
     puts energy in the top of the spectrum so few iterations suffice.  The
     same formula evaluated on *global* indices is what the distributed path
     uses, keeping replicas consistent by construction.
+
+    ``dtype=None`` resolves to the canonical float dtype (fp64 under
+    jax_enable_x64) — every solver call site passes the problem dtype
+    explicitly so the seed follows the solve precision; the hash itself is
+    always evaluated in numpy fp64 and *then* cast, so the fp32 seed is
+    exactly the rounded fp64 seed (dtype-stable determinism).
     """
+    if dtype is None:
+        dtype = jnp.asarray(0.0).dtype
     return jnp.asarray(seed_values(np.arange(n)), dtype)
 
 
@@ -524,6 +543,9 @@ class PrecondInfo:
     smoother: str | None = None
     coarse_op: str | None = None
     overlap: int | None = None
+    # compute dtype of the preconditioner chain when it differs from the
+    # problem dtype (mixed precision); None = same as the problem
+    dtype: str | None = None
 
 
 def make_pmg_preconditioner(
@@ -690,6 +712,20 @@ def make_pmg_preconditioner(
     )
 
 
+def cast_apply(
+    apply: Callable[[jax.Array], jax.Array], compute_dtype, out_dtype
+) -> Callable[[jax.Array], jax.Array]:
+    """Wrap an apply with the mixed-precision cast boundary.
+
+    The returned callable rounds its input to ``compute_dtype``, runs the
+    wrapped chain there, and widens the result back to ``out_dtype`` — the
+    single pair of casts the whole mixed-precision preconditioner needs
+    (everything inside already lives in ``compute_dtype``).
+    """
+    cdt, odt = jnp.dtype(compute_dtype), jnp.dtype(out_dtype)
+    return lambda r: apply(r.astype(cdt)).astype(odt)
+
+
 def make_preconditioner(
     kind: str,
     prob,
@@ -709,6 +745,7 @@ def make_preconditioner(
     schwarz_overlap: int = 1,
     schwarz_weighting: str = "sqrt",
     schwarz_inner_degree: int = SCHWARZ_INNER_DEGREE,
+    precond_dtype=None,
 ) -> tuple[Callable[[jax.Array], jax.Array] | None, PrecondInfo]:
     """Build a single-device assembled-path preconditioner by name.
 
@@ -734,15 +771,57 @@ def make_preconditioner(
         in-eigenbasis block-solve Chebyshev degree
         (``schwarz_inner_degree``).  Shared by kind="schwarz" and the
         pmg smoother="schwarz".
+      precond_dtype: compute dtype of the *entire* preconditioner chain
+        (default None = the problem dtype).  Passing e.g. ``jnp.float32``
+        inside an fp64 solve rebuilds every preconditioner ingredient —
+        A-applies, diagonals, Chebyshev recurrences, Schwarz FDM blocks,
+        pMG levels and transfers — from an fp32 cast of the problem
+        (``operator.cast_problem``), wraps the result in one
+        :func:`cast_apply` boundary, and roughly halves preconditioner
+        bandwidth.  The fp32 apply is only approximately symmetric in fp64
+        arithmetic, so pair it with ``cg_assembled(cg_variant="flexible")``
+        for robustness near tight tolerances.  The caller's ``operator``
+        is NOT used inside the mixed chain (it computes in the problem
+        dtype); it still defines the outer solve.
 
     Returns:
       ``(apply, info)``; ``apply`` is None for "none" (plain CG), else the
-      z = M⁻¹r application, always a symmetric linear map (PCG-valid).
+      z = M⁻¹r application, always a symmetric linear map (PCG-valid) —
+      symmetric to working precision only under ``precond_dtype``.
     """
     if kind not in PRECOND_KINDS:
         raise ValueError(f"unknown precond {kind!r}; choose from {PRECOND_KINDS}")
     if kind == "none":
         return None, PrecondInfo("none", 0, None)
+    if precond_dtype is not None and jnp.dtype(precond_dtype) != jnp.dtype(
+        prob.dtype
+    ):
+        from .operator import cast_problem, poisson_assembled
+
+        prob_c = cast_problem(prob, precond_dtype)
+        inner, info = make_preconditioner(
+            kind,
+            prob_c,
+            poisson_assembled(prob_c),
+            degree=degree,
+            power_iters=power_iters,
+            lanczos_iters=lanczos_iters,
+            lmin_source=lmin_source,
+            fused_d_update=fused_d_update,
+            pmg_smooth_degree=pmg_smooth_degree,
+            pmg_smoother=pmg_smoother,
+            pmg_coarse_op=pmg_coarse_op,
+            pmg_coarse_solve=pmg_coarse_solve,
+            pmg_coarse_iters=pmg_coarse_iters,
+            pmg_ladder=pmg_ladder,
+            schwarz_overlap=schwarz_overlap,
+            schwarz_weighting=schwarz_weighting,
+            schwarz_inner_degree=schwarz_inner_degree,
+        )
+        return (
+            cast_apply(inner, precond_dtype, prob.dtype),
+            dataclasses.replace(info, dtype=jnp.dtype(precond_dtype).name),
+        )
     if kind == "pmg":
         return make_pmg_preconditioner(
             prob,

@@ -27,6 +27,7 @@ from .streams import (
 
 __all__ = [
     "default_interpret",
+    "should_fuse_streams",
     "poisson_local",
     "fused_axpy_dot",
     "fused_xpay",
@@ -42,6 +43,20 @@ __all__ = [
 def default_interpret() -> bool:
     """Interpret Pallas kernels unless running on a real TPU."""
     return jax.default_backend() != "tpu"
+
+
+def should_fuse_streams(dtype) -> bool:
+    """Auto-enable policy for the fused streaming stages in solver hot paths.
+
+    True when Pallas compiles natively (non-interpret backend, i.e. real
+    TPU/GPU — interpret mode makes the fusions *slower* on CPU) AND the
+    vectors the stage streams are fp32: the kernels' scalar reductions
+    accumulate in fp32, which is exact enough for fp32 solves and for the
+    fp32 interior of a mixed-precision preconditioner, but would throw away
+    bits an fp64 tol=1e-8 recurrence needs (and TPUs have no native fp64
+    regardless).  Callers keep an explicit opt-out knob on top of this.
+    """
+    return (not default_interpret()) and jnp.dtype(dtype) == jnp.float32
 
 
 def _pad_rows(x: jax.Array, multiple: int) -> tuple[jax.Array, int]:
@@ -166,9 +181,27 @@ def fused_cheb_d_update(
     return out[:n].reshape(shape)
 
 
-def make_fused_jacobi_dot(dinv: jax.Array, *, interpret: bool | None = None):
-    """Adapter with cg_assembled's fused_precond_dot signature r -> (z, r·z)."""
-    return lambda r: fused_jacobi_dot(dinv, r, interpret=interpret)
+def make_fused_jacobi_dot(
+    dinv: jax.Array, *, interpret: bool | None = None, out_dtype=None
+):
+    """Adapter with cg_assembled's fused_precond_dot signature r -> (z, r·z).
+
+    ``out_dtype`` is the mixed-precision boundary: r is rounded to
+    ``dinv.dtype`` before the fused pass and (z, r·z) widened back, so an
+    fp32 fused Jacobi stage (fp32 dinv) can gate an fp64 outer PCG — the
+    fp32-input variant of the stage the mixed path uses.
+    """
+    if out_dtype is None:
+        return lambda r: fused_jacobi_dot(dinv, r, interpret=interpret)
+    odt = jnp.dtype(out_dtype)
+
+    def apply(r: jax.Array) -> tuple[jax.Array, jax.Array]:
+        z, rz = fused_jacobi_dot(
+            dinv, r.astype(dinv.dtype), interpret=interpret
+        )
+        return z.astype(odt), rz.astype(odt)
+
+    return apply
 
 
 def make_fused_cheb_d_update(*, interpret: bool | None = None):

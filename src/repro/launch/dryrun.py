@@ -312,6 +312,13 @@ def run_poisson_cell(name: str, mesh_kind: str) -> dict:
     from repro.core import sem
 
     pc = POISSON[name]
+    # fp64 presets (mixed-precision cells) need x64, else jit canonicalizes
+    # every fp64 aval to fp32 and the lowered HLO measures the wrong program
+    if jnp.dtype(pc.dtype) == jnp.float64 or (
+        pc.precond_dtype is not None
+        and jnp.dtype(pc.precond_dtype) == jnp.float64
+    ):
+        jax.config.update("jax_enable_x64", True)
     prod = make_production_mesh(multi_pod=(mesh_kind == "multi"))
     mesh = flat_mesh(prod)
     chips = int(np.prod(mesh.devices.shape))
@@ -353,6 +360,8 @@ def run_poisson_cell(name: str, mesh_kind: str) -> dict:
         pmg_coarse_iters=pc.pmg_coarse_iters,
         schwarz_overlap=pc.schwarz_overlap,
         schwarz_inner_degree=pc.schwarz_inner_degree,
+        precond_dtype=pc.precond_dtype,
+        cg_variant=pc.cg_variant,
     )
     lowered = jax.jit(run.func).lower(*run.args)
     t_lower = time.time() - t0

@@ -1,0 +1,450 @@
+"""Mixed-precision preconditioning: fp32 M⁻¹ chains inside fp64 PCG.
+
+Covers the precision axis end to end: the fp32-CG stall point that forces
+the outer solve to stay fp64, the cast-boundary preconditioners
+(``make_preconditioner(precond_dtype=...)``), flexible (Polak–Ribière) CG,
+seed-vector dtype determinism, the fused fp32-input Pallas stage adapters,
+the wire-dtype halo casts, and distributed-vs-single-shard parity of the
+mixed path.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import run_subprocess
+from repro.core import build_problem, cg_assembled, poisson_assembled
+from repro.core.operator import cast_problem
+from repro.core.precond import (
+    assembled_diagonal,
+    deterministic_seed_vector,
+    make_preconditioner,
+)
+from repro.kernels import ops
+
+
+@pytest.fixture(scope="module")
+def prob64():
+    jax.config.update("jax_enable_x64", True)
+    return build_problem(4, (3, 2, 2), lam=0.7, deform=0.2, dtype=jnp.float64)
+
+
+# ---------------------------------------------------------------------------
+# why the outer solve stays fp64
+# ---------------------------------------------------------------------------
+
+
+def test_fp32_cg_stalls_above_tol():
+    """Characterize the fp32 stall point: an all-fp32 CG's *recurrence*
+    residual may cross tol=1e-8, but the TRUE residual ‖b − Ax‖/‖b‖ stalls
+    at fp32 roundoff (~1e-6), two orders of magnitude short of the target
+    the fp64 solve actually delivers — the documented reason
+    ``precond_dtype`` narrows only the preconditioner and never the outer
+    recurrence."""
+    jax.config.update("jax_enable_x64", True)
+    rng = np.random.default_rng(0)
+    tol, cap = 1e-8, 300
+
+    prob32 = build_problem(3, (4, 4, 4), lam=0.1, deform=0.15, dtype=jnp.float32)
+    b32 = jnp.asarray(rng.standard_normal(prob32.n_global), jnp.float32)
+    res32 = cg_assembled(poisson_assembled(prob32), b32, n_iter=cap, tol=tol)
+    assert res32.x.dtype == jnp.float32
+
+    prob = build_problem(3, (4, 4, 4), lam=0.1, deform=0.15, dtype=jnp.float64)
+    a64 = poisson_assembled(prob)
+    b = jnp.asarray(np.asarray(b32), jnp.float64)
+    bnorm = float(jnp.linalg.norm(b))
+
+    # the fp32 "solution", measured honestly in fp64: stalled >> tol
+    rel32 = float(
+        jnp.linalg.norm(a64(jnp.asarray(np.asarray(res32.x), jnp.float64)) - b)
+    ) / bnorm
+    assert rel32 > 10 * tol, rel32
+
+    res64 = cg_assembled(a64, b, n_iter=cap, tol=tol)
+    assert int(res64.iterations) < cap
+    rel64 = float(jnp.linalg.norm(a64(res64.x) - b)) / bnorm
+    assert rel64 < 10 * tol, rel64
+    # the gap IS the stall: fp32 lands well above what fp64 delivers
+    assert rel32 > 10 * rel64, (rel32, rel64)
+
+
+# ---------------------------------------------------------------------------
+# the cast-boundary preconditioners
+# ---------------------------------------------------------------------------
+
+
+def test_precond_dtype_cast_boundary_and_info(prob64):
+    """fp32 preconditioners consume/produce fp64 vectors through one cast
+    boundary and report their compute dtype in PrecondInfo."""
+    a = poisson_assembled(prob64)
+    rng = np.random.default_rng(1)
+    r = jnp.asarray(rng.standard_normal(prob64.n_global), jnp.float64)
+    for kind in ("jacobi", "chebyshev", "schwarz", "pmg"):
+        pc, info = make_preconditioner(
+            kind, prob64, a, precond_dtype=jnp.float32
+        )
+        z = pc(r)
+        assert z.dtype == jnp.float64, (kind, z.dtype)
+        assert info.dtype == "float32", (kind, info.dtype)
+        # the fp32 apply matches its fp64 twin to fp32 working accuracy
+        pc64, info64 = make_preconditioner(kind, prob64, a)
+        assert info64.dtype is None
+        z64 = pc64(r)
+        err = float(jnp.linalg.norm(z - z64) / jnp.linalg.norm(z64))
+        assert err < 1e-5, (kind, err)
+
+
+def test_mixed_precision_within_one_iteration(prob64):
+    """ISSUE acceptance (small-N tier): every mixed rung reaches tol=1e-8
+    within +1 iteration of the all-fp64 baseline and solves the system."""
+    a = poisson_assembled(prob64)
+    rng = np.random.default_rng(2)
+    b = jnp.asarray(rng.standard_normal(prob64.n_global), jnp.float64)
+    bnorm = float(jnp.linalg.norm(b))
+    for kind, kw in (
+        ("jacobi", {}),
+        ("chebyshev", {}),
+        ("schwarz", {}),
+        ("pmg", {}),
+        ("pmg", {"pmg_smoother": "schwarz"}),
+    ):
+        pc64, _ = make_preconditioner(kind, prob64, a, **kw)
+        r64 = cg_assembled(a, b, n_iter=500, tol=1e-8, precond=pc64)
+        pc32, _ = make_preconditioner(
+            kind, prob64, a, precond_dtype=jnp.float32, **kw
+        )
+        rmx = cg_assembled(
+            a, b, n_iter=500, tol=1e-8, precond=pc32, cg_variant="flexible"
+        )
+        assert int(rmx.iterations) <= int(r64.iterations) + 1, (
+            kind, kw, int(rmx.iterations), int(r64.iterations)
+        )
+        rel = float(jnp.linalg.norm(a(rmx.x) - b)) / bnorm
+        assert rel < 1e-7, (kind, kw, rel)
+
+
+@pytest.mark.slow
+def test_mixed_precision_acceptance_n7():
+    """ISSUE acceptance at the benchmark corner N=7, λ=0.1: mixed pMG and
+    Schwarz within +1 iteration of fp64."""
+    jax.config.update("jax_enable_x64", True)
+    prob = build_problem(7, (4, 4, 4), lam=0.1, deform=0.15, dtype=jnp.float64)
+    a = poisson_assembled(prob)
+    rng = np.random.default_rng(0)
+    b = jnp.asarray(rng.standard_normal(prob.n_global), jnp.float64)
+    for kind, kw in (("schwarz", {}), ("pmg", {})):
+        pc64, _ = make_preconditioner(kind, prob, a, **kw)
+        r64 = cg_assembled(a, b, n_iter=500, tol=1e-8, precond=pc64)
+        pc32, _ = make_preconditioner(
+            kind, prob, a, precond_dtype=jnp.float32, **kw
+        )
+        rmx = cg_assembled(
+            a, b, n_iter=500, tol=1e-8, precond=pc32, cg_variant="flexible"
+        )
+        assert int(rmx.iterations) <= int(r64.iterations) + 1, (
+            kind, int(rmx.iterations), int(r64.iterations)
+        )
+
+
+# ---------------------------------------------------------------------------
+# flexible CG
+# ---------------------------------------------------------------------------
+
+
+def test_flexible_equals_standard_with_exact_precond(prob64):
+    """ISSUE satellite: with an exact-fp64 (hence exactly symmetric)
+    preconditioner, Polak–Ribière β reduces to Fletcher–Reeves β up to
+    roundoff — same residual trajectory, same iterations-to-tol."""
+    a = poisson_assembled(prob64)
+    rng = np.random.default_rng(3)
+    b = jnp.asarray(rng.standard_normal(prob64.n_global), jnp.float64)
+    pc, _ = make_preconditioner("jacobi", prob64, a)
+    std = cg_assembled(a, b, n_iter=25, precond=pc, record_history=True)
+    flx = cg_assembled(
+        a, b, n_iter=25, precond=pc, record_history=True,
+        cg_variant="flexible",
+    )
+    np.testing.assert_allclose(
+        np.array(flx.rdotr_history), np.array(std.rdotr_history), rtol=1e-6
+    )
+    s_tol = cg_assembled(a, b, n_iter=300, tol=1e-10, precond=pc)
+    f_tol = cg_assembled(
+        a, b, n_iter=300, tol=1e-10, precond=pc, cg_variant="flexible"
+    )
+    assert int(s_tol.iterations) == int(f_tol.iterations)
+    np.testing.assert_allclose(
+        np.array(f_tol.x), np.array(s_tol.x), atol=1e-9
+    )
+
+
+def test_unknown_cg_variant_rejected(prob64):
+    a = poisson_assembled(prob64)
+    b = jnp.zeros(prob64.n_global)
+    with pytest.raises(ValueError, match="cg_variant"):
+        cg_assembled(a, b, cg_variant="prestissimo")
+
+
+# ---------------------------------------------------------------------------
+# seed-vector dtype determinism
+# ---------------------------------------------------------------------------
+
+
+def test_seed_vector_dtype_follows_and_is_deterministic():
+    """ISSUE satellite regression: the seed follows the requested dtype
+    (default = canonical float dtype, not a hard-coded fp32), and the fp32
+    seed is bit-exactly the rounded fp64 seed, so spectrum estimates on a
+    cast problem see the same vector the fp64 path sees."""
+    jax.config.update("jax_enable_x64", True)
+    n = 257
+    s64 = deterministic_seed_vector(n, jnp.float64)
+    s32 = deterministic_seed_vector(n, jnp.float32)
+    assert s64.dtype == jnp.float64 and s32.dtype == jnp.float32
+    np.testing.assert_array_equal(
+        np.array(s32), np.array(s64).astype(np.float32)
+    )
+    # default dtype = the canonical float dtype of the session
+    assert deterministic_seed_vector(n).dtype == jnp.asarray(0.0).dtype
+    # repeated calls are identical (pure function of n)
+    np.testing.assert_array_equal(
+        np.array(deterministic_seed_vector(n, jnp.float32)), np.array(s32)
+    )
+
+
+# ---------------------------------------------------------------------------
+# fused fp32-input stages
+# ---------------------------------------------------------------------------
+
+
+def test_fused_jacobi_dot_mixed_boundary(rng):
+    """The out_dtype adapter rounds r to the fp32 stage and widens (z, r·z)
+    back — the fused analogue of the mixed Jacobi preconditioner stage."""
+    jax.config.update("jax_enable_x64", True)
+    n = 1000
+    dinv32 = jnp.abs(
+        jnp.asarray(rng.standard_normal(n), jnp.float32)
+    ) + 0.1
+    r = jnp.asarray(rng.standard_normal(n), jnp.float64)
+    fdot = ops.make_fused_jacobi_dot(
+        dinv32, interpret=True, out_dtype=jnp.float64
+    )
+    z, rz = fdot(r)
+    assert z.dtype == jnp.float64 and rz.dtype == jnp.float64
+    z_ref = (dinv32.astype(jnp.float64) * r).astype(jnp.float32)
+    np.testing.assert_allclose(np.array(z), np.array(z_ref), rtol=1e-6)
+    rz_ref = float(jnp.vdot(r.astype(jnp.float32), z_ref.astype(jnp.float32)))
+    assert abs(float(rz) - rz_ref) <= 1e-4 * abs(rz_ref)
+
+
+def test_should_fuse_streams_policy():
+    """Auto-enable only off interpret mode and only for fp32 streams."""
+    import jax as _jax
+
+    on_tpu = _jax.default_backend() == "tpu"
+    assert ops.should_fuse_streams(jnp.float32) == on_tpu
+    # fp64 streams never auto-fuse: the kernels' reductions are fp32
+    assert ops.should_fuse_streams(jnp.float64) is False
+
+
+def test_mixed_pcg_with_fused_stages(prob64):
+    """The fused fp32 stages drop into the mixed path without changing the
+    solution: fused jacobi-dot (cast boundary) and fused cheb-d-update
+    (fp32 interior) vs their unfused twins."""
+    a = poisson_assembled(prob64)
+    rng = np.random.default_rng(4)
+    b = jnp.asarray(rng.standard_normal(prob64.n_global), jnp.float64)
+
+    pc, _ = make_preconditioner(
+        "jacobi", prob64, a, precond_dtype=jnp.float32
+    )
+    ref = cg_assembled(a, b, n_iter=300, tol=1e-8, precond=pc,
+                       cg_variant="flexible")
+    dinv32 = 1.0 / assembled_diagonal(cast_problem(prob64, jnp.float32))
+    got = cg_assembled(
+        a, b, n_iter=300, tol=1e-8, precond=pc, cg_variant="flexible",
+        fused_precond_dot=ops.make_fused_jacobi_dot(
+            dinv32, interpret=True, out_dtype=jnp.float64
+        ),
+    )
+    np.testing.assert_allclose(np.array(got.x), np.array(ref.x), atol=1e-7)
+
+    pc_f, _ = make_preconditioner(
+        "chebyshev", prob64, a, precond_dtype=jnp.float32,
+        fused_d_update=ops.make_fused_cheb_d_update(interpret=True),
+    )
+    pc_u, _ = make_preconditioner(
+        "chebyshev", prob64, a, precond_dtype=jnp.float32
+    )
+    r = jnp.asarray(rng.standard_normal(prob64.n_global), jnp.float64)
+    np.testing.assert_allclose(
+        np.array(pc_f(r)), np.array(pc_u(r)), rtol=2e-4, atol=2e-6
+    )
+
+
+# ---------------------------------------------------------------------------
+# wire-dtype halo casts + distributed parity
+# ---------------------------------------------------------------------------
+
+
+def test_halo_wire_dtype_casts():
+    """wire_dtype narrows only the transported slabs: fp64 boxes keep
+    their dtype, results match the wide-wire exchange to fp32 accuracy,
+    and a same-dtype wire is the identity configuration."""
+    run_subprocess(
+        """
+import jax
+jax.config.update("jax_enable_x64", True)
+import numpy as np, jax.numpy as jnp
+from repro.compat import make_mesh, shard_map
+from jax.sharding import PartitionSpec as P
+from repro.comms.halo import contract_exchange, expand_exchange, sum_exchange
+from repro.comms.topology import ProcessGrid
+
+grid = ProcessGrid((2, 2, 2))
+shape, depth = (5, 4, 6), 1
+ext = tuple(s + 2*depth for s in shape)
+mesh = make_mesh((8,), ("ranks",))
+rng = np.random.default_rng(0)
+x = jnp.asarray(rng.standard_normal((8,) + shape))
+y = jnp.asarray(rng.standard_normal((8,) + ext))
+
+from repro.comms.halo import copy_exchange
+
+def fn(x_s, y_s):
+    wide = sum_exchange(x_s[0], grid, "ranks")
+    narrow = sum_exchange(x_s[0], grid, "ranks", wire_dtype=jnp.float32)
+    # replica consistency must survive the narrow wire: a wide replica
+    # refresh from the owners must be a no-op on the narrowed result
+    refreshed = copy_exchange(narrow, grid, "ranks")
+    same = sum_exchange(x_s[0], grid, "ranks", wire_dtype=jnp.float64)
+    e_n = expand_exchange(x_s[0], grid, "ranks", depth, wire_dtype=jnp.float32)
+    e_w = expand_exchange(x_s[0], grid, "ranks", depth)
+    c_n = contract_exchange(y_s[0], grid, "ranks", depth, wire_dtype=jnp.float32)
+    c_w = contract_exchange(y_s[0], grid, "ranks", depth)
+    return wide, narrow, refreshed, same, e_n, e_w, c_n, c_w
+
+spec = P("ranks")
+outs = jax.jit(shard_map(
+    fn, mesh=mesh, in_specs=(spec, spec),
+    out_specs=tuple(spec for _ in range(8)), check_rep=False))(x, y)
+wide, narrow, refreshed, same, e_n, e_w, c_n, c_w = (np.array(o) for o in outs)
+assert narrow.dtype == np.float64
+np.testing.assert_array_equal(refreshed, narrow)  # owner == replicas
+np.testing.assert_array_equal(same, wide)         # fp64 wire == no cast
+np.testing.assert_allclose(narrow, wide, rtol=1e-6, atol=1e-6)
+np.testing.assert_allclose(e_n, e_w, rtol=1e-6, atol=1e-6)
+np.testing.assert_allclose(c_n, c_w, rtol=1e-6, atol=1e-6)
+print("OK")
+"""
+    )
+
+
+def test_mixed_dist_matches_single_shard_fast():
+    """Mixed fp32-preconditioner dist_cg (jacobi + chebyshev + pmg)
+    reproduces the single-device mixed solve iteration-for-iteration."""
+    run_subprocess(
+        """
+import jax
+jax.config.update("jax_enable_x64", True)
+import numpy as np, jax.numpy as jnp
+from repro.compat import make_mesh
+from repro.core.distributed import build_dist_problem, dist_cg
+from repro.comms.topology import ProcessGrid
+from repro.core import build_problem, poisson_assembled, cg_assembled
+from repro.core.precond import make_preconditioner
+
+N = 3
+grid = ProcessGrid((2, 2, 2)); local = (2, 1, 1)
+gshape = (4, 2, 2)
+ref = build_problem(N, gshape, lam=0.8, dtype=jnp.float64)
+A = poisson_assembled(ref)
+mesh = make_mesh((8,), ("ranks",))
+prob = build_dist_problem(N, grid, local, lam=0.8, dtype=jnp.float64)
+rng = np.random.default_rng(0)
+bg = rng.standard_normal(ref.n_global)
+GX, GY = gshape[0]*N+1, gshape[1]*N+1
+def box_from_global(vec):
+    out = np.zeros((grid.size, prob.m3))
+    mx, my, mz = prob.box_shape
+    for r in range(grid.size):
+        ci, cj, ck = grid.coords(r)
+        ox, oy, oz = ci*local[0]*N, cj*local[1]*N, ck*local[2]*N
+        x, y, z = np.meshgrid(np.arange(mx), np.arange(my), np.arange(mz), indexing="ij")
+        gidx = (ox+x) + GX*((oy+y) + GY*(oz+z))
+        out[r] = vec[gidx.transpose(2,1,0).reshape(-1)]
+    return out
+b_boxes = jnp.asarray(box_from_global(bg))
+for kind in ("jacobi", "chebyshev", "pmg"):
+    run = jax.jit(dist_cg(prob, mesh, b_boxes, n_iter=200, tol=1e-10,
+                          precond=kind, cheb_degree=2,
+                          precond_dtype=jnp.float32, cg_variant="flexible"))
+    x_boxes, rdotr, iters, hist = run()
+    assert int(iters) < 200, (kind, int(iters))
+    pc, info = make_preconditioner(kind, ref, A, degree=2,
+                                   precond_dtype=jnp.float32)
+    assert info.dtype == "float32"
+    res = cg_assembled(A, jnp.asarray(bg), n_iter=200, tol=1e-10, precond=pc,
+                       cg_variant="flexible")
+    assert int(iters) == int(res.iterations), (
+        kind, int(iters), int(res.iterations))
+    err = np.abs(np.array(x_boxes) - box_from_global(np.array(res.x))).max()
+    assert err < 1e-8, (kind, err)
+print("OK")
+"""
+    )
+
+
+@pytest.mark.slow
+def test_mixed_dist_schwarz_parity_overlap():
+    """ISSUE satellite: mixed-precision dist-vs-single-shard parity for the
+    Schwarz rung at overlap 0/1/2 — same iterations, same solution, fp32
+    shells on the wire."""
+    run_subprocess(
+        """
+import jax
+jax.config.update("jax_enable_x64", True)
+import numpy as np, jax.numpy as jnp
+from repro.compat import make_mesh
+from repro.core.distributed import build_dist_problem, dist_cg
+from repro.comms.topology import ProcessGrid
+from repro.core import build_problem, poisson_assembled, cg_assembled
+from repro.core.precond import make_preconditioner
+
+N = 3
+grid = ProcessGrid((2, 2, 2)); local = (2, 1, 1)
+gshape = (4, 2, 2)
+ref = build_problem(N, gshape, lam=0.8, dtype=jnp.float64)
+A = poisson_assembled(ref)
+mesh = make_mesh((8,), ("ranks",))
+prob = build_dist_problem(N, grid, local, lam=0.8, dtype=jnp.float64)
+rng = np.random.default_rng(0)
+bg = rng.standard_normal(ref.n_global)
+GX, GY = gshape[0]*N+1, gshape[1]*N+1
+def box_from_global(vec):
+    out = np.zeros((grid.size, prob.m3))
+    mx, my, mz = prob.box_shape
+    for r in range(grid.size):
+        ci, cj, ck = grid.coords(r)
+        ox, oy, oz = ci*local[0]*N, cj*local[1]*N, ck*local[2]*N
+        x, y, z = np.meshgrid(np.arange(mx), np.arange(my), np.arange(mz), indexing="ij")
+        gidx = (ox+x) + GX*((oy+y) + GY*(oz+z))
+        out[r] = vec[gidx.transpose(2,1,0).reshape(-1)]
+    return out
+b_boxes = jnp.asarray(box_from_global(bg))
+for overlap in (0, 1, 2):
+    run = jax.jit(dist_cg(prob, mesh, b_boxes, n_iter=200, tol=1e-10,
+                          precond="schwarz", schwarz_overlap=overlap,
+                          precond_dtype=jnp.float32, cg_variant="flexible"))
+    x_boxes, rdotr, iters, hist = run()
+    assert int(iters) < 200, int(iters)
+    pc, _ = make_preconditioner("schwarz", ref, A, schwarz_overlap=overlap,
+                                precond_dtype=jnp.float32)
+    res = cg_assembled(A, jnp.asarray(bg), n_iter=200, tol=1e-10, precond=pc,
+                       cg_variant="flexible")
+    assert int(iters) == int(res.iterations), (
+        overlap, int(iters), int(res.iterations))
+    err = np.abs(np.array(x_boxes) - box_from_global(np.array(res.x))).max()
+    assert err < 1e-6, (overlap, err)
+    print("OK overlap", overlap, int(iters))
+"""
+    )
