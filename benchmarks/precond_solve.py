@@ -4,7 +4,9 @@ Beyond the NekBone 100-fixed-iteration benchmark: solve λ-screened deformed
 Poisson problems to ``tol=1e-8`` with each rung of the preconditioner
 ladder — none / jacobi / chebyshev / schwarz / pmg (Chebyshev-smoothed) /
 pmg-schwarz (Schwarz-smoothed) / pmg-galerkin (exact PᵀAP coarse
-operators) — and report
+operators, chained matrix-free) / pmg-galerkin-mat (the same PᵀAP
+materialized at setup into per-element blocks, zero fine-operator work per
+coarse apply) — and report
 
   * iterations to tolerance (the preconditioner-quality signal),
   * wall time, and the *effective* FOM GFLOPS (NekBone flop model ×
@@ -43,6 +45,10 @@ import os
 import time
 
 # ladder order: cost per application rises, iterations-to-tol falls
+# (pmg-galerkin-mat: same iterations as pmg-galerkin by construction —
+# the materialized P^T A P blocks are the same matrix — with the chained
+# fine-grid recursion replaced by one batched element matvec per coarse
+# apply; the win shows in precond_apply_s)
 PRECONDS = (
     "none",
     "jacobi",
@@ -51,6 +57,7 @@ PRECONDS = (
     "pmg",
     "pmg-schwarz",
     "pmg-galerkin",
+    "pmg-galerkin-mat",
 )
 # kind -> (make_preconditioner kind, extra kwargs)
 PRECOND_RECIPES = {
@@ -61,6 +68,7 @@ PRECOND_RECIPES = {
     "pmg": ("pmg", {}),
     "pmg-schwarz": ("pmg", {"pmg_smoother": "schwarz"}),
     "pmg-galerkin": ("pmg", {"pmg_coarse_op": "galerkin"}),
+    "pmg-galerkin-mat": ("pmg", {"pmg_coarse_op": "galerkin_mat"}),
 }
 TOL = 1e-8
 APPLY_REPS = 10
@@ -115,6 +123,9 @@ def _solve_case(n: int, shape, lam: float, tol: float, use_fused=None):
             if mixed and fuse and kind == "chebyshev":
                 # fused d-update streams the fp32 Chebyshev interior
                 pc_kwargs["fused_d_update"] = ops.make_fused_cheb_d_update()
+            if mixed and fuse and kwargs.get("pmg_coarse_op") == "galerkin_mat":
+                # Pallas batched matvec over the fp32 materialized blocks
+                pc_kwargs["galerkin_matvec"] = ops.make_block_matvec()
             if mixed and fuse and kind == "jacobi":
                 # one fp32 diagonal feeds BOTH the gate apply and the fused
                 # stage, so they cannot drift apart

@@ -14,10 +14,11 @@ section's raw CSV rows plus the precond sweep as structured records
 preconditioner wall time ``precond_apply_s`` — the bandwidth axis a mixed
 fp32-preconditioner row wins on even when iteration counts tie, and the
 ``dtype`` column separating fp64 from mixed rows) so the perf trajectory
-is tracked across PRs — CI passes ``--json BENCH_pr4.json`` (bump the
+is tracked across PRs — CI passes ``--json BENCH_pr5.json`` (bump the
 name per PR) and gates on ``scripts/compare_bench.py``, which fails if
 any (N, λ, kind, dtype) case needs more iterations than the previous
-PR's json recorded.
+PR's json recorded.  The full json schema and gate rules are documented
+in docs/BENCHMARKS.md.
 """
 import argparse
 import json

@@ -44,8 +44,11 @@ def main() -> None:
     ap.add_argument("--iters", type=int, default=100)
     ap.add_argument("--precond",
                     choices=["none", "jacobi", "chebyshev", "schwarz", "pmg",
-                             "pmg-schwarz"],
-                    default="none", help="PCG preconditioner")
+                             "pmg-schwarz", "pmg-galerkin-mat"],
+                    default="none", help="PCG preconditioner "
+                    "(pmg-galerkin-mat = materialized P^T A P coarse "
+                    "operators, the benchmark ladder's name for "
+                    "pmg_coarse_op='galerkin_mat')")
     ap.add_argument("--cheb-degree", type=int, default=2)
     ap.add_argument("--tol", type=float, default=None,
                     help="stop at ||r|| <= tol*||r0|| instead of fixed iters")
@@ -96,12 +99,15 @@ def main() -> None:
     if args.precond == "chebyshev":
         lmin, lmax = dist_spectrum(prob, mesh, two_phase=args.two_phase)
         print(f"lanczos: spectrum(D^-1 A) ~= [{lmin:.4f}, {lmax:.4f}]")
-    precond, smoother = args.precond, "chebyshev"
+    precond, smoother, coarse_op = args.precond, "chebyshev", "redisc"
     if precond == "pmg-schwarz":
         precond, smoother = "pmg", "schwarz"
+    elif precond == "pmg-galerkin-mat":
+        precond, coarse_op = "pmg", "galerkin_mat"
     run = jax.jit(dist_cg(prob, mesh, b, n_iter=args.iters, tol=args.tol,
                           precond=precond, cheb_degree=args.cheb_degree,
-                          pmg_smoother=smoother, lmin=lmin, lmax=lmax,
+                          pmg_smoother=smoother, pmg_coarse_op=coarse_op,
+                          lmin=lmin, lmax=lmax,
                           precond_dtype=pdtype, cg_variant=variant,
                           two_phase=args.two_phase, record_history=True))
     x, rdotr, iters, hist = run()

@@ -2,30 +2,57 @@
 """Verify that markdown cross-references in this repo resolve.
 
 Usage:
-    python scripts/check_links.py [files...]       # default: README + docs/
+    python scripts/check_links.py [--no-code-refs] [files...]
+    # default files: README + ROADMAP + docs/
 
-Checks every ``[text](target)`` and bare ``path`` reference in backticks:
+Checks every ``[text](target)`` markdown link and every backtick reference:
 
   * relative file links (``docs/SOLVERS.md``, ``src/repro/core/precond.py``)
     must exist on disk (anchors after ``#`` are stripped);
-  * ``module.attr``-style backtick references are left alone (not links);
+  * **code references** (the stricter mode, on by default): backtick
+    tokens that look like code must resolve against the source tree —
+    dotted module paths (``repro.core.galerkin``, ``benchmarks.run``) must
+    map to a module file/package, and identifier references (public
+    symbols like ``dist_cg_scattered``, config knobs like
+    ``pmg_coarse_op``, env vars like ``HIPBONE_FUSED``) must appear as a
+    word somewhere under src/, scripts/, benchmarks/, examples/, tests/ or
+    .github/ — so renaming a symbol without updating the docs fails CI;
   * http(s) URLs are *not* fetched (CI runs offline) — only syntax-checked.
+
+Only the *leading* dotted identifier of a backtick span is checked (so
+``make_preconditioner(kind, prob, a)`` checks ``make_preconditioner``),
+bare identifiers are checked only when they contain an underscore (plain
+words like ``direct`` or ``pmg`` are prose, not references), and spans
+containing ``<``/``>``/``*`` placeholders (``BENCH_pr<k>.json``) are
+descriptive and skipped.
 
 Exit 1 with a per-file report if anything dangles, so the docs cannot
 drift from the tree they describe.
 """
 from __future__ import annotations
 
+import argparse
 import re
 import sys
 from pathlib import Path
 
 REPO = Path(__file__).resolve().parent.parent
-DEFAULT = ["README.md", "ROADMAP.md", "docs/ARCHITECTURE.md", "docs/SOLVERS.md"]
+DEFAULT = [
+    "README.md",
+    "ROADMAP.md",
+    "docs/ARCHITECTURE.md",
+    "docs/SOLVERS.md",
+    "docs/BENCHMARKS.md",
+]
+# where code-reference identifiers must live
+SOURCE_DIRS = ("src", "scripts", "benchmarks", "examples", "tests", ".github")
+SOURCE_SUFFIXES = {".py", ".yml", ".yaml", ".toml", ".md", ".json"}
 
 MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 # backtick references that look like repo paths (contain a slash and a dot)
 TICK_PATH = re.compile(r"`([A-Za-z0-9_./-]+/[A-Za-z0-9_.-]+\.[A-Za-z0-9]+)`")
+TICK_ANY = re.compile(r"`([^`\n]+)`")
+LEADING_IDENT = re.compile(r"^([A-Za-z_][A-Za-z0-9_]*(?:\.[A-Za-z_][A-Za-z0-9_]*)*)")
 
 
 def _display(md: Path) -> str:
@@ -35,14 +62,74 @@ def _display(md: Path) -> str:
         return str(md)
 
 
-def check_file(md: Path) -> list[str]:
+def _source_universe() -> str:
+    """Concatenated source text the identifier references resolve against."""
+    chunks = []
+    for d in SOURCE_DIRS:
+        root = REPO / d
+        if not root.exists():
+            continue
+        for f in sorted(root.rglob("*")):
+            if f.is_file() and f.suffix in SOURCE_SUFFIXES:
+                try:
+                    chunks.append(f.read_text())
+                except UnicodeDecodeError:
+                    pass
+    chunks.append((REPO / "pyproject.toml").read_text())
+    return "\n".join(chunks)
+
+
+def _module_candidates(parts: list[str]) -> list[Path]:
+    """Places a dotted module prefix may live (``repro.`` maps to src/)."""
+    rel = "/".join(parts)
+    cands = [REPO / f"{rel}.py", REPO / rel]
+    cands += [REPO / "src" / f"{rel}.py", REPO / "src" / rel]
+    if parts and parts[0] != "repro":
+        cands += [
+            REPO / "src" / "repro" / f"{rel}.py",
+            REPO / "src" / "repro" / rel,
+        ]
+    return cands
+
+
+def check_code_ref(token: str, universe: str) -> str | None:
+    """Resolve one leading dotted identifier; return an error or None."""
+    parts = token.split(".")
+    if len(parts) > 1:
+        # dotted: accept any prefix resolving to a module file/package whose
+        # remaining attribute parts appear in the source universe
+        for k in range(len(parts), 0, -1):
+            if any(c.exists() for c in _module_candidates(parts[:k])):
+                missing = [
+                    a
+                    for a in parts[k:]
+                    if not re.search(rf"\b{re.escape(a)}\b", universe)
+                ]
+                if missing:
+                    return f"module {'.'.join(parts[:k])} lacks {missing}"
+                return None
+        # external libs (jnp.float32, lax.psum): final attribute must at
+        # least occur in the source — docs shouldn't cite calls we never make
+        if re.search(rf"\b{re.escape(parts[-1])}\b", universe):
+            return None
+        return f"attribute {parts[-1]!r} not found in source tree"
+    if "_" not in token:
+        return None  # plain word — prose, not a reference
+    if re.search(rf"\b{re.escape(token)}\b", universe):
+        return None
+    return f"identifier {token!r} not found in source tree"
+
+
+def check_file(md: Path, universe: str | None) -> list[str]:
     errors = []
     text = md.read_text()
     targets = []
     for match in MD_LINK.finditer(text):
         targets.append((match.group(1), "link"))
+    tick_paths = set()
     for match in TICK_PATH.finditer(text):
         targets.append((match.group(1), "backtick path"))
+        tick_paths.add(match.group(1))
     for target, kind in targets:
         if target.startswith(("http://", "https://", "mailto:")):
             continue
@@ -60,26 +147,58 @@ def check_file(md: Path) -> list[str]:
         )
         if not any(c.exists() for c in candidates):
             errors.append(f"{_display(md)}: dangling {kind} -> {target}")
+
+    if universe is None:
+        return errors
+
+    seen = set()
+    for match in TICK_ANY.finditer(text):
+        span = match.group(1)
+        if span in tick_paths or any(ch in span for ch in "*<>"):
+            continue
+        ident = LEADING_IDENT.match(span)
+        if not ident:
+            continue
+        token = ident.group(1)
+        if token in seen:
+            continue
+        seen.add(token)
+        # repo files referenced without a slash (BENCH_pr4.json)
+        if (REPO / token).exists():
+            continue
+        err = check_code_ref(token, universe)
+        if err:
+            errors.append(f"{_display(md)}: dangling code ref `{span}`: {err}")
     return errors
 
 
 def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("files", nargs="*")
+    ap.add_argument(
+        "--no-code-refs",
+        action="store_true",
+        help="skip the backtick code-reference resolution (links only)",
+    )
+    args = ap.parse_args()
     # relative CLI paths resolve against the repo root, not the cwd
     files = [
-        Path(a) if Path(a).is_absolute() else REPO / a for a in sys.argv[1:]
+        Path(a) if Path(a).is_absolute() else REPO / a for a in args.files
     ] or [REPO / rel for rel in DEFAULT if (REPO / rel).exists()]
+    universe = None if args.no_code_refs else _source_universe()
     all_errors = []
     for md in files:
         if not md.exists():
             all_errors.append(f"missing file: {md}")
             continue
-        all_errors.extend(check_file(md))
+        all_errors.extend(check_file(md, universe))
     for err in all_errors:
         print(err)
     if all_errors:
         print(f"\n{len(all_errors)} dangling reference(s)")
         return 1
-    print(f"all references resolve in {len(files)} file(s)")
+    mode = "links only" if args.no_code_refs else "links + code refs"
+    print(f"all references resolve in {len(files)} file(s) ({mode})")
     return 0
 
 

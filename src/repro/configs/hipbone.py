@@ -32,9 +32,11 @@ class PoissonConfig:
     # smoothing sweeps; None = per-smoother default), the smoother base
     # ("chebyshev" = Chebyshev–Jacobi, "schwarz" = Chebyshev-accelerated
     # overlapping Schwarz), the coarse-operator construction ("redisc"
-    # rediscretizes, "galerkin" = exact P^T A P triple products,
-    # single-device only), and the degree of the full-interval Chebyshev
-    # solve on the coarsest (N=1) level of the ladder.
+    # rediscretizes, "galerkin" = exact P^T A P chained matrix-free,
+    # single-device only, "galerkin_mat" = the same triple products
+    # materialized at setup into per-element blocks — sharded-capable,
+    # zero fine-operator work per coarse apply), and the degree of the
+    # full-interval Chebyshev solve on the coarsest (N=1) ladder level.
     pmg_smooth_degree: int | None = None
     pmg_smoother: str = "chebyshev"
     pmg_coarse_op: str = "redisc"
@@ -58,7 +60,7 @@ class PoissonConfig:
             raise ValueError(f"unknown precond {self.precond!r}")
         if self.pmg_smoother not in ("chebyshev", "schwarz"):
             raise ValueError(f"unknown pmg_smoother {self.pmg_smoother!r}")
-        if self.pmg_coarse_op not in ("redisc", "galerkin"):
+        if self.pmg_coarse_op not in ("redisc", "galerkin", "galerkin_mat"):
             raise ValueError(f"unknown pmg_coarse_op {self.pmg_coarse_op!r}")
         if self.precond_dtype not in (None, "float32", "float64"):
             raise ValueError(f"unknown precond_dtype {self.precond_dtype!r}")
@@ -98,6 +100,19 @@ CONFIGS = {
     "hipbone_n7_pmg_schwarz": PoissonConfig(
         "hipbone_n7_pmg_schwarz", 7, (8, 8, 8), lam=0.1,
         precond="pmg", pmg_smoother="schwarz", tol=1e-8
+    ),
+    # the iteration-count champion for the ill-conditioned tier:
+    # variationally-exact P^T A P coarse operators, materialized once at
+    # setup into per-element blocks (sharded-capable, no fine-operator
+    # work per coarse apply — core/galerkin.py)
+    "hipbone_n7_pmg_galerkin": PoissonConfig(
+        "hipbone_n7_pmg_galerkin", 7, (8, 8, 8), lam=0.1,
+        precond="pmg", pmg_coarse_op="galerkin_mat", tol=1e-8
+    ),
+    "hipbone_n7_pmg_galerkin_fp32": PoissonConfig(
+        "hipbone_n7_pmg_galerkin_fp32", 7, (8, 8, 8), lam=0.1,
+        precond="pmg", pmg_coarse_op="galerkin_mat", tol=1e-8,
+        dtype="float64", precond_dtype="float32", cg_variant="flexible"
     ),
     # mixed precision: fp64 outer PCG, fp32 preconditioner chain (halved
     # preconditioner HBM streams and halo wire payloads), flexible β

@@ -22,6 +22,13 @@ from .fom import (
     operator_flops,
     roofline_gflops,
 )
+from .galerkin import (
+    coarsen_element_blocks,
+    galerkin_assembled_diagonal,
+    galerkin_block_apply,
+    galerkin_element_blocks,
+    galerkin_ladder_blocks,
+)
 from .gather_scatter import (
     gather,
     gather_scatter,

@@ -49,6 +49,7 @@ from ..comms.topology import ProcessGrid
 from ..compat import shard_map
 from . import sem
 from .cg import CG_VARIANTS, CGResult, _pcg
+from .galerkin import block_matvec_einsum, galerkin_ladder_blocks
 from .geometry import geometric_factors_from_coords
 from .operator import local_poisson
 from .precond import (
@@ -83,11 +84,18 @@ __all__ = [
     "DistPoisson",
     "build_dist_problem",
     "build_pmg_levels",
+    "build_pmg_galerkin_blocks",
     "dist_cg",
     "dist_cg_scattered",
     "dist_lambda_max",
     "dist_spectrum",
 ]
+
+# dist_cg's supported coarse-operator constructions: the chained "galerkin"
+# stays single-device (its recursive fine applies would serialize the whole
+# transfer chain through every rank); the materialized "galerkin_mat" is the
+# sharded-capable form — per-rank blocks, standard sum-exchange at apply.
+PMG_COARSE_OPS_DIST = ("redisc", "galerkin_mat")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -365,6 +373,93 @@ def build_pmg_levels(
         )
         jmats.append(sem.interpolation_matrix(nc, pf.n_degree))
     return levels, jmats
+
+
+def build_pmg_galerkin_blocks(
+    prob: DistPoisson, levels: list[DistPoisson]
+) -> list[jax.Array]:
+    """Per-rank materialized Galerkin blocks for every coarse pMG level.
+
+    The sharded face of ``core.galerkin``: each dense element block
+    ``Ĵᵀ(S_L^e + λW_e)Ĵ`` reads only the owning rank's geometric factors
+    and inverse-degree weights — and ``w_local`` already carries the
+    *global* inverse degree (cross-rank sharing accounted for at
+    ``_rank_data`` time) — so assembly of the owned coarse elements is
+    embarrassingly rank-local on the padded box: **no setup exchange**.
+    Apply time then needs only the standard sum-exchange of halo-element
+    contributions (``_box_galerkin_apply``), identical in shape to any
+    rediscretized level's.
+
+    Fields are cast to ``prob.dtype`` first, so a mixed-precision caller
+    (``dist_cg(precond_dtype=jnp.float32)`` passes its cast problem view)
+    assembles the blocks once in fp32 behind the usual cast boundary.
+
+    Args:
+      prob: the fine-level :class:`DistPoisson` (or its cast view).
+      levels: the ``build_pmg_levels`` hierarchy (``levels[0] is prob``).
+
+    Returns:
+      One ``(R, E_loc, p_c, p_c)`` sharded block stack per coarse level
+      ``levels[1:]``.
+    """
+    r, e_loc = prob.g.shape[:2]
+    degrees = tuple(lvl.n_degree for lvl in levels)
+
+    def build(g: jax.Array, w: jax.Array) -> list[jax.Array]:
+        g2 = g.astype(prob.dtype).reshape(r * e_loc, *g.shape[2:])
+        w2 = w.astype(prob.dtype).reshape(r * e_loc, -1)
+        blocks = galerkin_ladder_blocks(g2, prob.d, prob.lam, w2, degrees)
+        return [b.reshape(r, e_loc, *b.shape[1:]) for b in blocks]
+
+    if not isinstance(prob.g, jax.Array):
+        # dry-run lowering passes abstract ShapeDtypeStruct shards; give the
+        # compiled program matching abstract block operands
+        return list(jax.eval_shape(build, prob.g, prob.w_local))
+    return build(prob.g, prob.w_local)
+
+
+def _box_galerkin_apply(
+    prob: DistPoisson, blocks: jax.Array, *, two_phase: bool = False
+) -> Callable[[jax.Array], jax.Array]:
+    """Materialized Galerkin coarse-level A-apply on consistent padded boxes.
+
+    The Fig. 2 halo/interior split of ``_apply_assembled`` with the fused
+    local kernel replaced by one batched dense element matvec: halo-element
+    matvecs feed the sum-exchange first, interior-element matvecs overlap
+    it, and zero fine-operator work happens per apply — the coarse level
+    touches only its own (E_loc, p_c, p_c) blocks and its own box.
+    ``two_phase`` mirrors ``_apply_assembled``'s paper-faithful explicit
+    scatter-side halo refresh, so the comparison mode stays uniform across
+    every level of the V-cycle.
+    """
+    eh = prob.halo_elems
+    l2g_flat = jnp.asarray(prob.l2g.reshape(-1))
+    m3 = prob.m3
+    p = prob.l2g.shape[1]
+
+    def apply(x_box: jax.Array) -> jax.Array:
+        if two_phase:
+            x_box = copy_exchange(
+                x_box.reshape(prob.box_shape[::-1]), prob.grid, prob.axis_name
+            ).reshape(-1)
+        u = jnp.take(x_box, l2g_flat, axis=0).reshape(prob.e_local, p)
+
+        y_h = block_matvec_einsum(blocks[:eh], u[:eh])
+        box_h = jax.ops.segment_sum(
+            y_h.reshape(-1), l2g_flat[: eh * p], num_segments=m3
+        )
+        box_h = sum_exchange(
+            box_h.reshape(prob.box_shape[::-1]), prob.grid, prob.axis_name
+        ).reshape(-1)
+
+        # interior blocks: no rank-boundary contact -> overlap the exchange
+        y_i = block_matvec_einsum(blocks[eh:], u[eh:])
+        box_i = jax.ops.segment_sum(
+            y_i.reshape(-1), l2g_flat[eh * p :], num_segments=m3
+        )
+        return box_h + box_i
+
+    return apply
 
 
 def _apply_assembled(
@@ -795,9 +890,18 @@ def dist_cg(
       pmg_smoother: "chebyshev" (Chebyshev–Jacobi) or "schwarz"
         (Chebyshev-accelerated overlapping Schwarz on every smoothed
         level — the nekRS configuration).
-      pmg_coarse_op: only "redisc" here.  The Galerkin (PᵀAP) option is
-        single-device for now (``precond.make_pmg_preconditioner``);
-        requesting it raises instead of silently rediscretizing.
+      pmg_coarse_op: "redisc" (default) rediscretizes every coarse level;
+        "galerkin_mat" applies the variationally-exact PᵀAP coarse
+        operators as materialized per-element blocks
+        (``build_pmg_galerkin_blocks``): assembly is rank-local at setup
+        (no extra exchange — ``w_local`` already carries the global
+        inverse degree), and each coarse apply is one batched element
+        matvec riding the standard halo/interior split + sum-exchange
+        (``_box_galerkin_apply``) — matching the single-device
+        ``make_pmg_preconditioner(coarse_op="galerkin_mat")``
+        iteration-for-iteration, including under ``precond_dtype``.  The
+        *chained* "galerkin" form stays single-device (its coarse applies
+        recurse to the fine grid) and raises here.
       pmg_coarse_iters: degree of the coarsest-level full-interval Chebyshev.
       pmg_ladder: explicit degree ladder (default N → ⌈N/2⌉ → … → 1).
       schwarz_overlap / schwarz_inner_degree: overlapping-Schwarz knobs
@@ -851,11 +955,13 @@ def dist_cg(
         raise ValueError(
             f"unknown pmg smoother {pmg_smoother!r}; choose from {PMG_SMOOTHERS}"
         )
-    if pmg_coarse_op != "redisc":
+    if pmg_coarse_op not in PMG_COARSE_OPS_DIST:
         raise NotImplementedError(
-            f"dist_cg pmg_coarse_op={pmg_coarse_op!r}: the Galerkin coarse "
-            "operator is single-device only (make_pmg_preconditioner); the "
-            "sharded V-cycle rediscretizes its coarse levels"
+            f"dist_cg pmg_coarse_op={pmg_coarse_op!r}: the chained Galerkin "
+            "form is single-device only (make_pmg_preconditioner) — its "
+            "coarse applies recurse to the fine grid; use the materialized "
+            "'galerkin_mat' for the sharded variationally-exact V-cycle, "
+            f"or one of {PMG_COARSE_OPS_DIST}"
         )
     if cg_variant not in CG_VARIANTS:
         raise ValueError(
@@ -887,6 +993,13 @@ def dist_cg(
     if precond == "pmg":
         levels, jmats = build_pmg_levels(pprob, pmg_ladder)
         jmats = [jnp.asarray(j, cdtype) for j in jmats]
+        # materialized Galerkin: per-rank block assembly at setup (pprob is
+        # the cast view when mixed, so blocks are assembled once in cdtype)
+        gal_blocks = (
+            build_pmg_galerkin_blocks(pprob, levels)
+            if pmg_coarse_op == "galerkin_mat"
+            else [() for _ in levels[1:]]
+        )
         pmg_data = tuple(
             (
                 lvl.g,
@@ -894,7 +1007,8 @@ def dist_cg(
                 lvl.mask,
                 jnp.asarray(seed_values(_box_global_indices(lvl)), cdtype),
             )
-            for lvl in levels[1:]
+            + ((blk,) if pmg_coarse_op == "galerkin_mat" else ())
+            for lvl, blk in zip(levels[1:], gal_blocks)
         )
     else:
         levels, jmats, pmg_data = [pprob], [], ()
@@ -985,13 +1099,28 @@ def dist_cg(
                 lvl_masks = [m1c]
                 lvl_seeds = [seed_s[0]]
                 lvl_wlocs = [w1c]
-                for lvl, (g_l, w_l, mk_l, sd_l) in zip(levels[1:], pmg_s):
+                for lvl, data_l in zip(levels[1:], pmg_s):
+                    g_l, w_l, mk_l, sd_l = data_l[:4]
                     g1l, w1l = g_l[0], w_l[0]
-                    lvl_ops.append(
-                        lambda v, lvl=lvl, g1l=g1l, w1l=w1l: _apply_assembled(
-                            lvl, v, g1l, w1l, local_op=op, two_phase=two_phase
+                    if pmg_coarse_op == "galerkin_mat":
+                        # materialized P^T A P apply: batched element
+                        # matvec + the standard sum-exchange, zero
+                        # fine-operator work per coarse apply
+                        lvl_ops.append(
+                            _box_galerkin_apply(
+                                lvl, data_l[4][0], two_phase=two_phase
+                            )
                         )
-                    )
+                    else:
+                        lvl_ops.append(
+                            lambda v, lvl=lvl, g1l=g1l, w1l=w1l:
+                            _apply_assembled(
+                                lvl, v, g1l, w1l, local_op=op,
+                                two_phase=two_phase,
+                            )
+                        )
+                    # smoother diagonals stay the rediscretized ones for
+                    # the Galerkin variants, matching the single-device path
                     lvl_dinvs.append(_box_dinv(lvl, g1l, w1l))
                     lvl_masks.append(mk_l[0])
                     lvl_seeds.append(sd_l[0])
@@ -1072,7 +1201,7 @@ def dist_cg(
         mesh=mesh,
         in_specs=(
             spec, spec, spec, spec, spec,
-            tuple((spec, spec, spec, spec) for _ in pmg_data),
+            tuple(tuple(spec for _ in entry) for entry in pmg_data),
             tuple(tuple(spec for _ in lvl) for lvl in schwarz_data),
         ),
         out_specs=(spec, P(), P(), P()),

@@ -29,6 +29,7 @@ from .mesh import BoxMesh, build_box_mesh
 
 __all__ = [
     "local_poisson",
+    "local_operator_columns",
     "PoissonProblem",
     "build_problem",
     "problem_from_mesh",
@@ -90,6 +91,38 @@ def local_poisson(
     if w is not None:
         screen = w * screen
     return out + lam * screen
+
+
+def local_operator_columns(
+    g: jax.Array,
+    d: jax.Array,
+    lam: jax.Array | float,
+    w: jax.Array | None,
+    cols: jax.Array,
+) -> jax.Array:
+    """Element-local operator applied to a stack of shared probe columns.
+
+    Each column of ``cols`` is broadcast to every element and pushed through
+    :func:`local_poisson`, so the result materializes the element-local
+    operator restricted to the probed subspace — the workhorse of
+    :mod:`core.galerkin`'s setup-time block assembly, where ``cols`` holds
+    the lifted coarse basis Ĵ.  Columns are swept sequentially
+    (``lax.map``): setup-time memory stays one element-local field per
+    probe instead of a (k × E × p) temporary blow-up.
+
+    Args:
+      g / d / lam / w: as in :func:`local_poisson`.
+      cols: (p, k) probe columns, p = (N+1)³.
+
+    Returns:
+      (E, p, k) with ``out[e, :, k] = (S_L^e + λ·screen_e) cols[:, k]``.
+    """
+    e = g.shape[0]
+
+    def apply_col(c: jax.Array) -> jax.Array:
+        return local_poisson(jnp.broadcast_to(c, (e, c.shape[0])), g, d, lam, w)
+
+    return jnp.moveaxis(jax.lax.map(apply_col, cols.T), 0, 2)
 
 
 @dataclasses.dataclass(frozen=True)

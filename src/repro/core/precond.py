@@ -104,7 +104,7 @@ __all__ = [
 
 PRECOND_KINDS = ("none", "jacobi", "chebyshev", "schwarz", "pmg")
 PMG_SMOOTHERS = ("chebyshev", "schwarz")
-PMG_COARSE_OPS = ("redisc", "galerkin")
+PMG_COARSE_OPS = ("redisc", "galerkin", "galerkin_mat")
 
 # Standard Chebyshev-smoother interval: [lmax/ratio, safety * lmax].
 CHEB_LMIN_RATIO = 30.0
@@ -561,6 +561,7 @@ def make_pmg_preconditioner(
     ladder: Sequence[int] | None = None,
     schwarz_overlap: int = 1,
     schwarz_inner_degree: int = SCHWARZ_INNER_DEGREE,
+    galerkin_matvec: Callable[[jax.Array, jax.Array], jax.Array] | None = None,
 ) -> tuple[Callable[[jax.Array], jax.Array], PrecondInfo]:
     """Single-shard p-multigrid V-cycle preconditioner.
 
@@ -581,8 +582,18 @@ def make_pmg_preconditioner(
         through the transfer chain — variationally exact (closes the
         rediscretization gap that caps the small-λ regime) but each coarse
         A-apply recurses to the fine grid, so per-iteration cost grows with
-        depth; smoother diagonals stay the rediscretized ones (the standard
-        spectrally-equivalent approximation).
+        depth; "galerkin_mat" materializes the *same* triple products once
+        at setup into dense per-element blocks (``core.galerkin``), so
+        every level below the finest applies the variationally-exact
+        operator with one batched element matvec and **zero fine-operator
+        applies per coarse apply**.  Smoother diagonals stay the
+        rediscretized ones for both Galerkin variants (the standard
+        spectrally-equivalent approximation — and what keeps
+        "galerkin_mat" iteration-identical to the chained form).
+      galerkin_matvec: optional batched element matvec ``(blocks, u) → y``
+        for the "galerkin_mat" coarse applies (e.g.
+        ``kernels.ops.block_matvec``, the Pallas variant); default is the
+        XLA einsum.
       lanczos_iters: Lanczos steps per level for the Chebyshev intervals.
       coarse_solve: coarsest-level treatment — "direct" (dense inverse of
         the degree-1 operator, exact and cheap), "chebyshev" (degree
@@ -626,16 +637,32 @@ def make_pmg_preconditioner(
         restricts.append(r_down)
 
     ops = [operator]
-    for i in range(1, len(probs)):
-        if coarse_op == "galerkin":
-            # A_{l} = R_{l-1} A_{l-1} P_{l-1}, matrix-free through the chain
+    if coarse_op == "galerkin_mat":
+        # materialize P^T A P once: probe the fine element-local operator
+        # for level 1, contract blocks for deeper rungs (core.galerkin)
+        from .galerkin import galerkin_block_apply, galerkin_ladder_blocks
+
+        ladder_blocks = galerkin_ladder_blocks(
+            prob.g, prob.d, prob.lam, prob.w_local, degrees
+        )
+        for pc_prob, blocks in zip(probs[1:], ladder_blocks):
             ops.append(
-                lambda v, op=ops[-1], r=restricts[i - 1], p=prolongs[i - 1]: r(
-                    op(p(v))
+                galerkin_block_apply(
+                    blocks, pc_prob.l2g, pc_prob.n_global,
+                    matvec=galerkin_matvec,
                 )
             )
-        else:
-            ops.append(poisson_assembled(probs[i]))
+    else:
+        for i in range(1, len(probs)):
+            if coarse_op == "galerkin":
+                # A_l = R_{l-1} A_{l-1} P_{l-1}, matrix-free through the
+                # chain — every coarse apply recurses to the fine grid
+                ops.append(
+                    lambda v, op=ops[-1], r=restricts[i - 1],
+                    p=prolongs[i - 1]: r(op(p(v)))
+                )
+            else:
+                ops.append(poisson_assembled(probs[i]))
 
     smoothers = []
     lmax0 = lmin0 = None
@@ -745,6 +772,7 @@ def make_preconditioner(
     schwarz_overlap: int = 1,
     schwarz_weighting: str = "sqrt",
     schwarz_inner_degree: int = SCHWARZ_INNER_DEGREE,
+    galerkin_matvec: Callable[[jax.Array, jax.Array], jax.Array] | None = None,
     precond_dtype=None,
 ) -> tuple[Callable[[jax.Array], jax.Array] | None, PrecondInfo]:
     """Build a single-device assembled-path preconditioner by name.
@@ -763,7 +791,11 @@ def make_preconditioner(
         d-update (kernels.ops.fused_cheb_d_update).
       pmg_*: p-multigrid knobs, forwarded to
         :func:`make_pmg_preconditioner` (``pmg_smooth_degree`` is the
-        per-level smoother degree; ``degree`` stays the standalone knob).
+        per-level smoother degree; ``degree`` stays the standalone knob;
+        ``pmg_coarse_op="galerkin_mat"`` materializes the PᵀAP coarse
+        operators into per-element blocks — ``core.galerkin``).
+      galerkin_matvec: optional batched element matvec for the
+        "galerkin_mat" coarse applies (``kernels.ops.block_matvec``).
       schwarz_*: overlapping-Schwarz knobs — extension width in GLL nodes
         (``schwarz_overlap``, 0 = block Jacobi), partition-of-unity
         weighting ("sqrt" symmetric default; "post" = RAS, nonsymmetric,
@@ -817,6 +849,7 @@ def make_preconditioner(
             schwarz_overlap=schwarz_overlap,
             schwarz_weighting=schwarz_weighting,
             schwarz_inner_degree=schwarz_inner_degree,
+            galerkin_matvec=galerkin_matvec,
         )
         return (
             cast_apply(inner, precond_dtype, prob.dtype),
@@ -835,6 +868,7 @@ def make_preconditioner(
             ladder=pmg_ladder,
             schwarz_overlap=schwarz_overlap,
             schwarz_inner_degree=schwarz_inner_degree,
+            galerkin_matvec=galerkin_matvec,
         )
     if kind == "schwarz":
         if schwarz_weighting == "post":

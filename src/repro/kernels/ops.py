@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
+from .blocks import block_matvec_pallas, pick_block_matvec_e
 from .poisson import pick_block_e, poisson_local_pallas
 from .streams import (
     LANES,
@@ -29,6 +30,8 @@ __all__ = [
     "default_interpret",
     "should_fuse_streams",
     "poisson_local",
+    "block_matvec",
+    "make_block_matvec",
     "fused_axpy_dot",
     "fused_xpay",
     "weighted_dot",
@@ -92,6 +95,36 @@ def poisson_local(
         u_p, g_p, w_p, d, lam=lam, block_e=eb, interpret=interp
     )
     return out[:e]
+
+
+def block_matvec(
+    blocks: jax.Array,
+    u: jax.Array,
+    *,
+    block_e: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Batched dense element matvec y_e = B_e u_e with element padding.
+
+    The Pallas form of the materialized-Galerkin coarse apply
+    (``core.galerkin.block_matvec_einsum`` is the XLA reference); see
+    kernels/blocks.py.  Shapes: (E, p, p), (E, p) -> (E, p).
+    """
+    interp = default_interpret() if interpret is None else interpret
+    e, p = u.shape
+    eb = block_e or pick_block_matvec_e(p, u.dtype)
+    eb = max(1, min(eb, e))
+    b_p, _ = _pad_rows(blocks, eb)
+    u_p, _ = _pad_rows(u, eb)
+    out = block_matvec_pallas(b_p, u_p, block_e=eb, interpret=interp)
+    return out[:e]
+
+
+def make_block_matvec(*, block_e: int | None = None, interpret: bool | None = None):
+    """Adapter with core.galerkin's ``matvec`` signature (blocks, u) -> y."""
+    return lambda blocks, u: block_matvec(
+        blocks, u, block_e=block_e, interpret=interpret
+    )
 
 
 def _pad_vec(x: jax.Array, multiple: int) -> tuple[jax.Array, int]:

@@ -4,10 +4,12 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.galerkin import block_matvec_einsum
 from repro.core.operator import local_poisson
 
 __all__ = [
     "poisson_local_ref",
+    "block_matvec_ref",
     "fused_axpy_dot_ref",
     "fused_xpay_ref",
     "weighted_dot_ref",
@@ -21,6 +23,12 @@ def poisson_local_ref(
 ) -> jax.Array:
     """y = (S_L + λ diag(w)) u — reference for kernels/poisson.py."""
     return local_poisson(u, g, d, lam, w)
+
+
+def block_matvec_ref(blocks: jax.Array, u: jax.Array) -> jax.Array:
+    """y_e = B_e u_e — reference for kernels/blocks.py (Galerkin coarse
+    apply on materialized per-element blocks)."""
+    return block_matvec_einsum(blocks, u)
 
 
 def fused_axpy_dot_ref(
