@@ -6,7 +6,19 @@ GPUs against an empirically calibrated streaming roofline (Eq. 4). Here:
     empirically measured CPU streaming bandwidth calibrating the same
     roofline form — the paper's methodology, ported to the host we have;
   * modeled: the TPU-v5e roofline targets (197 TF peak / 819 GB/s HBM)
-    that §Roofline uses for the dry-run cells.
+    that §Roofline uses for the dry-run cells;
+  * dry-run roofline: every row also carries ``model_bytes`` /
+    ``achievable_s`` / ``pct_roofline`` from an AOT compile of the *full*
+    assembled apply y_G = Z^T (S_L + λW) Z x_G — the analytic
+    ``fom.assembled_apply_bytes`` bound over the compiled program's own
+    HLO roofline time (see roofline/bench.py). Machine-independent, gated
+    across PRs by scripts/compare_bench.py. ``fused_model_bytes`` is the
+    single-kernel bound (``fom.fused_apply_bytes``) the fused operator
+    (kernels/poisson_fused.py) targets; the ratio is the headroom the
+    fusion can reclaim.
+
+``records`` returns the structured rows for the BENCH json
+(``fig3_records``); ``main`` renders the CSV.
 """
 from __future__ import annotations
 
@@ -14,15 +26,14 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import build_problem, fom
+from repro.core import build_problem, fom, poisson_assembled
 from repro.core.operator import local_poisson
-from repro.kernels import ops
+from repro.roofline import dryrun_roofline
 
 
 def _time(f, *args, reps=5) -> float:
-    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else jax.block_until_ready(f(*args))
+    jax.block_until_ready(f(*args))
     t0 = time.perf_counter()
     for _ in range(reps):
         jax.block_until_ready(f(*args))
@@ -42,10 +53,11 @@ def measure_stream_bandwidth() -> float:
     return 9 * n * 4 / dt  # 8 reads + 1 write
 
 
-def main(quick: bool = True) -> list[str]:
-    rows = ["fig3,N,dofs,elements,cpu_us,cpu_gflops,cpu_roofline_gflops,tpu_roofline_gflops,ai_f32"]
+def records(quick: bool = True) -> list[dict]:
+    """One dict per degree N = 1..15 (plus the stream-bandwidth meta row)."""
     bw = measure_stream_bandwidth()
     target_dofs = 80_000 if quick else 2_000_000
+    recs: list[dict] = []
     for n in range(1, 16):
         # mesh sized to ~target DOFs (paper: fixed ~40M per degree)
         e_per_dim = max(2, round((target_dofs / n**3) ** (1 / 3)))
@@ -54,9 +66,7 @@ def main(quick: bool = True) -> list[str]:
         e = prob.mesh.n_elements
         u = jnp.ones((e, prob.mesh.points_per_element), jnp.float32)
 
-        op = jax.jit(
-            lambda u, g, d, w: local_poisson(u, g, d, 1.0, w)
-        )
+        op = jax.jit(lambda u, g, d, w: local_poisson(u, g, d, 1.0, w))
         dt = _time(op, u, prob.g, prob.d, prob.w_local)
         flops = fom.operator_flops(e, n)
         ai = flops / fom.operator_bytes(e, n, word=4)
@@ -68,12 +78,57 @@ def main(quick: bool = True) -> list[str]:
         tpu_roof = fom.roofline_gflops(
             n, peak_gflops=197_000, bandwidth_gbs=819, word=4
         )
-        rows.append(
-            f"fig3,{n},{prob.n_global},{e},{dt*1e6:.0f},{cpu_gflops:.2f},"
-            f"{cpu_roof:.2f},{tpu_roof:.0f},{ai:.3f}"
+
+        # dry-run roofline of the full assembled apply (split pipeline):
+        # analytic Eq. 4 + gather traffic over the compiled HLO bound
+        a = poisson_assembled(prob, fused=False)
+        x = jnp.ones((prob.n_global,), jnp.float32)
+        compiled = jax.jit(a).lower(x).compile()
+        roof = dryrun_roofline(
+            compiled,
+            model_bytes=fom.assembled_apply_bytes(e, n, word=4),
         )
-    rows.append(f"fig3_meta,stream_bw_gbs,{bw/1e9:.2f}")
+
+        recs.append(
+            {
+                "n": n,
+                "dofs": prob.n_global,
+                "elements": e,
+                "cpu_us": dt * 1e6,
+                "cpu_gflops": cpu_gflops,
+                "cpu_roofline_gflops": cpu_roof,
+                "tpu_roofline_gflops": tpu_roof,
+                "ai_f32": ai,
+                "model_bytes": roof["model_bytes"],
+                "achievable_s": roof["achievable_s"],
+                "pct_roofline": roof["pct_roofline"],
+                "fused_model_bytes": fom.fused_apply_bytes(e, n, word=4),
+                "stream_bw_gbs": bw / 1e9,
+            }
+        )
+    return recs
+
+
+def rows_from(recs: list[dict]) -> list[str]:
+    """CSV rows for a list of :func:`records` results."""
+    rows = [
+        "fig3,N,dofs,elements,cpu_us,cpu_gflops,cpu_roofline_gflops,"
+        "tpu_roofline_gflops,ai_f32,pct_roofline"
+    ]
+    for r in recs:
+        rows.append(
+            f"fig3,{r['n']},{r['dofs']},{r['elements']},{r['cpu_us']:.0f},"
+            f"{r['cpu_gflops']:.2f},{r['cpu_roofline_gflops']:.2f},"
+            f"{r['tpu_roofline_gflops']:.0f},{r['ai_f32']:.3f},"
+            f"{r['pct_roofline']:.1f}"
+        )
+    if recs:
+        rows.append(f"fig3_meta,stream_bw_gbs,{recs[0]['stream_bw_gbs']:.2f}")
     return rows
+
+
+def main(quick: bool = True) -> list[str]:
+    return rows_from(records(quick))
 
 
 if __name__ == "__main__":

@@ -41,7 +41,6 @@ the machine-readable BENCH json emitted by ``benchmarks.run``
 """
 from __future__ import annotations
 
-import os
 import time
 
 # ladder order: cost per application rises, iterations-to-tol falls
@@ -75,10 +74,9 @@ APPLY_REPS = 10
 
 
 def _use_fused_default():
-    env = os.environ.get("HIPBONE_FUSED", "")
-    if env in ("0", "1"):
-        return env == "1"
-    return None  # auto: kernels.ops.should_fuse_streams
+    from repro.kernels import ops
+
+    return ops.fused_override()  # None -> auto: should_fuse_streams
 
 
 def _solve_case(n: int, shape, lam: float, tol: float, use_fused=None):
@@ -89,7 +87,7 @@ def _solve_case(n: int, shape, lam: float, tol: float, use_fused=None):
     import numpy as np
 
     from repro.core import build_problem, cg_assembled, poisson_assembled
-    from repro.core.fom import nekbone_flops_per_iter
+    from repro.core.fom import cg_iter_bytes, nekbone_flops_per_iter
     from repro.core.operator import cast_problem
     from repro.core.precond import (
         PrecondInfo,
@@ -99,6 +97,7 @@ def _solve_case(n: int, shape, lam: float, tol: float, use_fused=None):
         make_preconditioner,
     )
     from repro.kernels import ops
+    from repro.roofline import dryrun_roofline
 
     if use_fused is None:
         use_fused = _use_fused_default()
@@ -149,19 +148,30 @@ def _solve_case(n: int, shape, lam: float, tol: float, use_fused=None):
                     cg_kwargs["fused_precond_dot"] = ops.make_fused_jacobi_dot(
                         dinv32, out_dtype=jnp.float64
                     )
+            # AOT: one lowering serves both the timed run and the dry-run
+            # HLO roofline analysis (compiled.as_text()).
             solve = jax.jit(
                 lambda bb, pc=pc, kw=cg_kwargs: cg_assembled(
                     a, bb, n_iter=500, tol=tol, precond=pc, **kw
                 )
             )
-            res = solve(b)
+            compiled = solve.lower(b).compile()
+            res = compiled(b)
             jax.block_until_ready(res.x)
             t0 = time.perf_counter()
-            res = solve(b)
+            res = compiled(b)
             jax.block_until_ready(res.x)
             dt = time.perf_counter() - t0
             iters = int(res.iterations)
             fom = nekbone_flops_per_iter(e, n) * iters / dt / 1e9
+            # pct_roofline: analytic Eq. 6 traffic × the HLO n_iter cap vs
+            # the compiled program's own roofline bound — machine-free, so
+            # compare_bench.py can gate it across PRs.
+            roof = dryrun_roofline(
+                compiled,
+                model_bytes_per_iter=cg_iter_bytes(e, n, word=8),
+                trip_cap=500,
+            )
 
             # per-application M⁻¹ wall time: the bandwidth win shows here
             # even where iteration counts tie
@@ -185,6 +195,9 @@ def _solve_case(n: int, shape, lam: float, tol: float, use_fused=None):
                     "iters_to_tol": iters,
                     "time_s": dt,
                     "fom_gflops": fom,
+                    "model_bytes": roof["model_bytes"],
+                    "achievable_s": roof["achievable_s"],
+                    "pct_roofline": roof["pct_roofline"],
                     "precond_apply_s": apply_s,
                     "lmax": info.lmax,
                     "lmin": info.lmin,
@@ -211,7 +224,7 @@ def rows_from(recs: list[dict]) -> list[str]:
     """CSV rows for a list of :func:`records` results."""
     rows = [
         "precond,N,dofs,lam,kind,dtype,iters_to_tol,time_s,fom_gflops,"
-        "precond_apply_s,cheb_lmax,cheb_lmin,pmg_levels"
+        "pct_roofline,precond_apply_s,cheb_lmax,cheb_lmin,pmg_levels"
     ]
     for r in recs:
         lmax = "" if r["lmax"] is None else f"{r['lmax']:.3f}"
@@ -222,10 +235,15 @@ def rows_from(recs: list[dict]) -> list[str]:
             if r["precond_apply_s"] is None
             else f"{r['precond_apply_s']:.5f}"
         )
+        pct = (
+            ""
+            if r.get("pct_roofline") is None
+            else f"{r['pct_roofline']:.1f}"
+        )
         rows.append(
             f"precond,{r['n']},{r['dofs']},{r['lam']},{r['kind']},"
             f"{r['dtype']},{r['iters_to_tol']},{r['time_s']:.4f},"
-            f"{r['fom_gflops']:.2f},{papply},{lmax},{lmin},{levels}"
+            f"{r['fom_gflops']:.2f},{pct},{papply},{lmax},{lmin},{levels}"
         )
     return rows
 

@@ -8,17 +8,22 @@
   exchange — routing-algorithm selection          (paper §MPI Communication)
   precond  — PCG iterations-to-tolerance + FOM    (beyond the benchmark)
 
+``--only`` takes a comma-separated section list (``--only fig3,precond``).
+
 ``--json PATH`` additionally writes a machine-readable summary: every
-section's raw CSV rows plus the precond sweep as structured records
-(per-config iterations-to-tol, solve time, effective FOM, per-application
-preconditioner wall time ``precond_apply_s`` — the bandwidth axis a mixed
-fp32-preconditioner row wins on even when iteration counts tie, and the
-``dtype`` column separating fp64 from mixed rows) so the perf trajectory
-is tracked across PRs — CI passes ``--json BENCH_pr5.json`` (bump the
-name per PR) and gates on ``scripts/compare_bench.py``, which fails if
-any (N, λ, kind, dtype) case needs more iterations than the previous
-PR's json recorded.  The full json schema and gate rules are documented
-in docs/BENCHMARKS.md.
+section's raw CSV rows plus the precond sweep (``precond_records``) and
+the fig3 sweep (``fig3_records``) as structured records.  Every record in
+both carries the dry-run roofline triple ``model_bytes`` /
+``achievable_s`` / ``pct_roofline`` (analytic Eq. 4–6 traffic bound over
+the AOT-compiled program's own HLO roofline time at the TPU_V5E
+constants — machine-independent; see roofline/bench.py), alongside the
+precond sweep's per-config iterations-to-tol, solve time, effective FOM
+and per-application preconditioner wall time ``precond_apply_s``.  The
+perf trajectory is tracked across PRs — CI passes ``--json
+BENCH_pr6.json`` (bump the name per PR) and gates on
+``scripts/compare_bench.py``, which fails if any shared case needs more
+iterations or loses more roofline fraction than the slack allows.  The
+full json schema and gate rules are documented in docs/BENCHMARKS.md.
 """
 import argparse
 import json
@@ -29,7 +34,11 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="larger problem sizes")
-    ap.add_argument("--only", default=None)
+    ap.add_argument(
+        "--only",
+        default=None,
+        help="comma-separated section names (e.g. fig3,precond)",
+    )
     ap.add_argument(
         "--json",
         default="",
@@ -48,17 +57,22 @@ def main() -> None:
     )
 
     sections = {
-        "fig3": fig3_operator.main,
+        "fig3": None,  # records sections: sweep runs once, json gets dicts
         "table1": table1_blocks.main,
         "fig456": fig456_scaling.main,
         "table2": table2_fom.main,
         "exchange": exchange_select.main,
-        "precond": None,  # handled below so the sweep runs once
+        "precond": None,
     }
+    only = set(args.only.split(",")) if args.only else None
+    if only:
+        unknown = only - set(sections)
+        if unknown:
+            sys.exit(f"unknown section(s): {','.join(sorted(unknown))}")
     summary: dict = {"quick": quick, "sections": {}, "failures": []}
     failures = 0
     for name, fn in sections.items():
-        if args.only and name != args.only:
+        if only and name not in only:
             continue
         t0 = time.time()
         print(f"# --- {name} ---", flush=True)
@@ -67,6 +81,10 @@ def main() -> None:
                 recs = precond_solve.records(quick=quick)
                 rows = precond_solve.rows_from(recs)
                 summary["precond_records"] = recs
+            elif name == "fig3":
+                recs = fig3_operator.records(quick=quick)
+                rows = fig3_operator.rows_from(recs)
+                summary["fig3_records"] = recs
             else:
                 rows = list(fn(quick=quick))
             for row in rows:

@@ -40,7 +40,7 @@ def bench(run):
         fn()[1].block_until_ready()
     return (time.perf_counter() - t0) / 3
 
-t_asm = bench(dist_cg(prob, mesh, b, n_iter=n_iter))
+t_asm = bench(dist_cg(prob, mesh, b, n_iter=n_iter, fused_operator=FUSED))
 t_sca = bench(dist_cg_scattered(prob, mesh, bL, n_iter=n_iter))
 e_tot = ranks * prob.e_local
 flops = nekbone_flops_per_iter(e_tot, n) * n_iter
@@ -55,11 +55,12 @@ print(json.dumps({
 """
 
 
-def _run(ranks: int) -> dict:
+def _run(ranks: int, fused: bool | None = None) -> dict:
     env = dict(os.environ)
     env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    child = _CHILD.replace("RANKS", str(ranks)).replace("FUSED", repr(fused))
     out = subprocess.run(
-        [sys.executable, "-c", _CHILD.replace("RANKS", str(ranks))],
+        [sys.executable, "-c", child],
         capture_output=True, text=True, env=env, timeout=900,
     )
     if out.returncode != 0:
@@ -67,14 +68,14 @@ def _run(ranks: int) -> dict:
     return json.loads(out.stdout.strip().splitlines()[-1])
 
 
-def main(quick: bool = True) -> list[str]:
+def main(quick: bool = True, fused: bool | None = None) -> list[str]:
     rows = [
         "table2,ranks,fom_assembled_gflops,fom_per_rank,weak_scaling_eff_pct,"
         "fom_scattered_gflops,assembled_speedup,bytes_model_ratio"
     ]
     base = None
     for ranks in ([1, 2, 4, 8] if not quick else [1, 4]):
-        r = _run(ranks)
+        r = _run(ranks, fused)
         per = r["fom_assembled"] / ranks
         if base is None:
             base = per
@@ -87,4 +88,19 @@ def main(quick: bool = True) -> list[str]:
 
 
 if __name__ == "__main__":
-    print("\n".join(main(quick=False)))
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument(
+        "--fused-operator",
+        action="store_true",
+        help="single-kernel fused assembled apply on the interior block "
+             "(kernels/poisson_fused.py) in the assembled-mode runs",
+    )
+    args = ap.parse_args()
+    print(
+        "\n".join(
+            main(quick=args.quick, fused=args.fused_operator or None)
+        )
+    )

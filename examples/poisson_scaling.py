@@ -66,6 +66,10 @@ def main() -> None:
                          "preconditioner dtype is narrower than the solve")
     ap.add_argument("--two-phase", action="store_true",
                     help="paper-faithful two-phase comm (halo + gather)")
+    ap.add_argument("--fused-operator", action="store_true",
+                    help="single-kernel fused assembled apply for the "
+                         "interior element block (kernels/poisson_fused.py); "
+                         "default: kernels.ops.should_fuse_operator policy")
     args = ap.parse_args()
 
     ranks = args.ranks
@@ -109,7 +113,8 @@ def main() -> None:
                           pmg_smoother=smoother, pmg_coarse_op=coarse_op,
                           lmin=lmin, lmax=lmax,
                           precond_dtype=pdtype, cg_variant=variant,
-                          two_phase=args.two_phase, record_history=True))
+                          two_phase=args.two_phase, record_history=True,
+                          fused_operator=args.fused_operator or None))
     x, rdotr, iters, hist = run()
     jax.block_until_ready(x)
     t0 = time.perf_counter()

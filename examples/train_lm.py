@@ -23,7 +23,6 @@ if __name__ == "__main__":
         )
         os.execv(sys.executable, [sys.executable] + sys.argv)
 
-import functools
 import time
 
 import jax

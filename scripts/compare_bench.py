@@ -1,19 +1,35 @@
 #!/usr/bin/env python
-"""Gate iterations-to-tolerance against the previous PR's BENCH json.
+"""Gate benchmark regressions against the previous PR's BENCH json.
 
 Usage:
-    python scripts/compare_bench.py BENCH_pr2.json BENCH_pr3.json [--slack N]
+    python scripts/compare_bench.py BENCH_pr5.json BENCH_pr6.json \
+        [--slack N] [--roofline-slack PTS] [--allow-new-sections]
 
-Compares the ``precond_records`` of two ``benchmarks.run --json`` summaries
-on the (N, lam, kind, dtype) cases they share and fails (exit 1) if any
-case in the new json needs more than ``slack`` extra CG iterations to reach
-tolerance — the preconditioner-quality axis of the FOM must never regress.
-Records without a ``dtype`` field (jsons predating the mixed-precision
-sweep, e.g. BENCH_pr3.json) are treated as "fp64", so shared-case matching
-stays stable across that schema growth; mixed rows enter the gate the first
-time they appear.  New kinds (ladder growth) and removed cases are reported
-but never fail; wall-clock and GFLOPS are machine-dependent and
-intentionally ignored.
+Two gated record sections, compared on the cases both jsons share:
+
+  * ``precond_records`` (key: N, lam, kind, dtype) — fails if any case
+    needs more than ``--slack`` extra CG iterations to reach tolerance,
+    or loses more than ``--roofline-slack`` percentage points of
+    ``pct_roofline``;
+  * ``fig3_records`` (key: N) — fails on ``pct_roofline`` drops beyond
+    the slack.
+
+``pct_roofline`` is machine-independent by construction (analytic traffic
+bound over the dry-run HLO roofline time, both at the TPU_V5E constants —
+see roofline/bench.py), which is what makes it gateable; wall-clock and
+GFLOPS are machine-dependent and intentionally ignored.  Records without
+a ``pct_roofline`` field (jsons predating this PR) are simply not
+roofline-gated, mirroring how records without ``dtype`` are treated as
+"fp64" — schema growth never breaks old baselines.
+
+Section-presence is itself checked: a gated section present in the
+candidate but missing from the baseline is an error (the baseline predates
+the section — rerun it, or pass ``--allow-new-sections`` to acknowledge
+the schema growth explicitly, as CI does on the first PR that introduces
+a section), and a section present in the baseline but missing from the
+candidate always fails (benchmark coverage must not shrink).  New kinds
+within a section (ladder growth) and removed cases are reported but never
+fail.
 """
 from __future__ import annotations
 
@@ -21,22 +37,82 @@ import argparse
 import json
 import sys
 
+GATED_SECTIONS = ("precond_records", "fig3_records")
+
+
+def _key(section: str, r: dict) -> tuple:
+    if section == "precond_records":
+        return (r["n"], r["lam"], r["kind"], r.get("dtype", "fp64"))
+    return (r["n"],)
+
+
+def _fmt_key(section: str, key: tuple) -> str:
+    if section == "precond_records":
+        n, lam, kind, dtype = key
+        return f"N={n} lam={lam} {kind:>16} [{dtype}]"
+    return f"N={key[0]}"
+
+
+def load_summary(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
 
 def load_records(path: str) -> dict[tuple, int]:
-    with open(path) as f:
-        summary = json.load(f)
-    recs = summary.get("precond_records", [])
+    """Iteration counts keyed by case (kept for tooling that imports it)."""
+    recs = load_summary(path).get("precond_records", [])
     if not recs:
         raise SystemExit(f"{path}: no precond_records section")
-    return {
-        (r["n"], r["lam"], r["kind"], r.get("dtype", "fp64")): int(
-            r["iters_to_tol"]
-        )
-        for r in recs
-    }
+    return {_key("precond_records", r): int(r["iters_to_tol"]) for r in recs}
 
 
-def main() -> int:
+def compare_section(
+    section: str,
+    base: list[dict],
+    cand: list[dict],
+    *,
+    slack: int,
+    roofline_slack: float,
+) -> list[str]:
+    """Print the per-case comparison; return failure descriptions."""
+    bmap = {_key(section, r): r for r in base}
+    cmap = {_key(section, r): r for r in cand}
+    shared = sorted(set(bmap) & set(cmap))
+    failures: list[str] = []
+    for key in shared:
+        b, c = bmap[key], cmap[key]
+        label = _fmt_key(section, key)
+        msgs = []
+        bad = False
+        if "iters_to_tol" in b and "iters_to_tol" in c:
+            delta = int(c["iters_to_tol"]) - int(b["iters_to_tol"])
+            msgs.append(
+                f"iters {b['iters_to_tol']} -> {c['iters_to_tol']} ({delta:+d})"
+            )
+            if delta > slack:
+                bad = True
+        if b.get("pct_roofline") is not None and c.get("pct_roofline") is not None:
+            drop = float(b["pct_roofline"]) - float(c["pct_roofline"])
+            msgs.append(
+                f"roofline {b['pct_roofline']:.1f}% -> "
+                f"{c['pct_roofline']:.1f}% ({-drop:+.1f}pt)"
+            )
+            if drop > roofline_slack:
+                bad = True
+        marker = "REGRESSION" if bad else "ok"
+        print(f"{marker:>10}  {section[:-8]} {label}: {', '.join(msgs)}")
+        if bad:
+            failures.append(f"{section} {label}")
+    for key in sorted(set(cmap) - set(bmap)):
+        print(f"{'new':>10}  {section[:-8]} {_fmt_key(section, key)}")
+    for key in sorted(set(bmap) - set(cmap)):
+        print(f"{'removed':>10}  {section[:-8]} {_fmt_key(section, key)}")
+    if not shared:
+        failures.append(f"{section}: no shared cases to compare")
+    return failures
+
+
+def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("baseline", help="previous PR's BENCH json")
     ap.add_argument("candidate", help="this PR's BENCH json")
@@ -46,42 +122,67 @@ def main() -> int:
         default=0,
         help="allowed extra iterations per case (default 0)",
     )
-    args = ap.parse_args()
+    ap.add_argument(
+        "--roofline-slack",
+        type=float,
+        default=5.0,
+        help="allowed pct_roofline drop in percentage points (default 5)",
+    )
+    ap.add_argument(
+        "--allow-new-sections",
+        action="store_true",
+        help="don't fail when the baseline predates a gated section",
+    )
+    args = ap.parse_args(argv)
 
-    base = load_records(args.baseline)
-    cand = load_records(args.candidate)
-    shared = sorted(set(base) & set(cand))
-    new = sorted(set(cand) - set(base))
-    gone = sorted(set(base) - set(cand))
+    base = load_summary(args.baseline)
+    cand = load_summary(args.candidate)
 
-    failures = []
-    for key in shared:
-        n, lam, kind, dtype = key
-        delta = cand[key] - base[key]
-        marker = "REGRESSION" if delta > args.slack else "ok"
-        print(
-            f"{marker:>10}  N={n} lam={lam} {kind:>14} [{dtype}]: "
-            f"{base[key]} -> {cand[key]} ({delta:+d})"
+    failures: list[str] = []
+    compared = 0
+    for section in GATED_SECTIONS:
+        in_base, in_cand = bool(base.get(section)), bool(cand.get(section))
+        if in_cand and not in_base:
+            if args.allow_new_sections:
+                print(f"{'new-section':>11}  {section} (baseline predates it)")
+                continue
+            print(
+                f"error: baseline {args.baseline} has no {section!r} but the "
+                f"candidate does; rerun the baseline or pass "
+                f"--allow-new-sections"
+            )
+            return 1
+        if in_base and not in_cand:
+            print(
+                f"error: candidate {args.candidate} dropped the {section!r} "
+                f"section present in {args.baseline}"
+            )
+            return 1
+        if not in_base:
+            continue
+        compared += 1
+        failures.extend(
+            compare_section(
+                section,
+                base[section],
+                cand[section],
+                slack=args.slack,
+                roofline_slack=args.roofline_slack,
+            )
         )
-        if delta > args.slack:
-            failures.append(key)
-    for key in new:
-        n, lam, kind, dtype = key
-        print(f"{'new':>10}  N={n} lam={lam} {kind:>14} [{dtype}]: {cand[key]}")
-    for key in gone:
-        n, lam, kind, dtype = key
-        print(f"{'removed':>10}  N={n} lam={lam} {kind:>14} [{dtype}]")
 
-    if not shared:
-        print("error: no shared (N, lam, kind) cases to compare")
+    if compared == 0:
+        print("error: no gated record sections found in either json")
         return 1
     if failures:
-        print(
-            f"\n{len(failures)} iterations-to-tol regression(s) vs "
-            f"{args.baseline}"
-        )
+        print(f"\n{len(failures)} regression(s) vs {args.baseline}:")
+        for f in failures:
+            print(f"  {f}")
         return 1
-    print(f"\nall {len(shared)} shared cases within slack={args.slack}")
+    print(
+        f"\nall shared cases within slack (iters={args.slack}, "
+        f"roofline={args.roofline_slack}pt)"
+    )
     return 0
 
 

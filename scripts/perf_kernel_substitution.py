@@ -16,7 +16,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.fom import TPU_V5E
 from repro.roofline.hlo_model import analyze_hlo
 
 W = 4  # f32 bytes (CPU-lowered HLO is f32 for these subgraphs)

@@ -13,7 +13,6 @@ from __future__ import annotations
 
 import functools
 import time
-from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -17,7 +17,6 @@ All functions run INSIDE shard_map over ``axis_name`` and are jit-safe.
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax

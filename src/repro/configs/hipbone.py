@@ -54,6 +54,12 @@ class PoissonConfig:
     # approximately symmetric in fp64 arithmetic.
     precond_dtype: str | None = None
     cg_variant: str = "standard"        # "standard" (FR β) | "flexible" (PR β)
+    # fused assembled operator: True forces the single-kernel Pallas apply
+    # (kernels/poisson_fused.py — gather, local operator and scatter-add in
+    # one pass, interior block only under sharding), False pins the split
+    # scatter/local/gather pipeline, None defers to the backend policy
+    # (kernels.ops.should_fuse_operator; HIPBONE_FUSED=0/1 overrides).
+    fused_operator: bool | None = None
 
     def __post_init__(self):
         if self.precond not in ("none", "jacobi", "chebyshev", "schwarz", "pmg"):
@@ -66,6 +72,11 @@ class PoissonConfig:
             raise ValueError(f"unknown precond_dtype {self.precond_dtype!r}")
         if self.cg_variant not in ("standard", "flexible"):
             raise ValueError(f"unknown cg_variant {self.cg_variant!r}")
+        if self.fused_operator not in (None, True, False):
+            raise ValueError(
+                f"fused_operator must be None/True/False, "
+                f"got {self.fused_operator!r}"
+            )
 
     def dofs_per_rank(self) -> int:
         n = self.n_degree

@@ -37,7 +37,6 @@ length-2 payload.
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable, NamedTuple
 
 import jax

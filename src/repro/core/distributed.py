@@ -48,7 +48,7 @@ from ..comms.halo import (
 from ..comms.topology import ProcessGrid
 from ..compat import shard_map
 from . import sem
-from .cg import CG_VARIANTS, CGResult, _pcg
+from .cg import CG_VARIANTS, _pcg
 from .galerkin import block_matvec_einsum, galerkin_ladder_blocks
 from .geometry import geometric_factors_from_coords
 from .operator import local_poisson
@@ -470,9 +470,21 @@ def _apply_assembled(
     *,
     local_op: Callable[..., jax.Array],
     two_phase: bool,
+    fused_interior: bool = False,
 ) -> jax.Array:
-    """One A-apply inside shard_map, with the Fig. 2 overlap split."""
+    """One A-apply inside shard_map, with the Fig. 2 overlap split.
+
+    ``fused_interior`` replaces the interior block's three-stage pipeline
+    (gather u, ``local_op``, segment_sum) with the single-pass Pallas
+    kernel ``kernels.ops.poisson_assembled_fused`` over the rank-local
+    padded box — the interior elements touch no rank boundary, so their
+    gather source and scatter target are both the local box and the fused
+    apply still overlaps the halo sum-exchange.  The halo block stays
+    split: its scatter-add must be materialized before it can feed the
+    exchange.
+    """
     eh = prob.halo_elems
+    p = prob.l2g.shape[1]
     l2g_flat = jnp.asarray(prob.l2g.reshape(-1))
     m3 = prob.m3
 
@@ -482,22 +494,41 @@ def _apply_assembled(
             x_box.reshape(prob.box_shape[::-1]), prob.grid, prob.axis_name
         ).reshape(-1)
 
-    u = jnp.take(x_box, l2g_flat, axis=0).reshape(prob.e_local, -1)
+    if fused_interior:
+        u_h = jnp.take(x_box, l2g_flat[: eh * p], axis=0).reshape(eh, p)
+    else:
+        u = jnp.take(x_box, l2g_flat, axis=0).reshape(prob.e_local, -1)
+        u_h = u[:eh]
 
     # halo elements first; their contributions feed the exchange
-    y_h = local_op(u[:eh], g[:eh], prob.d, prob.lam, w[:eh])
+    y_h = local_op(u_h, g[:eh], prob.d, prob.lam, w[:eh])
     box_h = jax.ops.segment_sum(
-        y_h.reshape(-1), l2g_flat[: eh * y_h.shape[1]], num_segments=m3
+        y_h.reshape(-1), l2g_flat[: eh * p], num_segments=m3
     )
     box_h = sum_exchange(
         box_h.reshape(prob.box_shape[::-1]), prob.grid, prob.axis_name
     ).reshape(-1)
 
     # interior elements: no boundary contact -> overlaps the exchange above
-    y_i = local_op(u[eh:], g[eh:], prob.d, prob.lam, w[eh:])
-    box_i = jax.ops.segment_sum(
-        y_i.reshape(-1), l2g_flat[eh * y_i.shape[1] :], num_segments=m3
-    )
+    if fused_interior:
+        if prob.e_local > eh:
+            from ..kernels import ops as _kops  # lazy: kernels import core
+
+            box_i = _kops.poisson_assembled_fused(
+                x_box,
+                jnp.asarray(prob.l2g)[eh:],
+                g[eh:],
+                w[eh:],
+                prob.d,
+                lam=prob.lam,
+            )
+        else:
+            box_i = jnp.zeros_like(box_h)
+    else:
+        y_i = local_op(u[eh:], g[eh:], prob.d, prob.lam, w[eh:])
+        box_i = jax.ops.segment_sum(
+            y_i.reshape(-1), l2g_flat[eh * p :], num_segments=m3
+        )
     return box_h + box_i
 
 
@@ -868,6 +899,7 @@ def dist_cg(
     precond_dtype: Any = None,
     cg_variant: str = "standard",
     local_op: Callable[..., jax.Array] | None = None,
+    fused_operator: bool | None = None,
     two_phase: bool = False,
     record_history: bool = False,
 ):
@@ -920,6 +952,16 @@ def dist_cg(
         (Polak–Ribière β; robust when M⁻¹ is only fp32-symmetric — see
         core.cg).
       local_op: optional Pallas element kernel replacing the jnp reference.
+      fused_operator: run the outer operator's interior block through the
+        single-pass fused assembled kernel
+        (``kernels.ops.poisson_assembled_fused`` — gather, local op and
+        scatter-add in one Pallas pass over the rank-local box) instead of
+        the split pipeline.  ``None`` defers to
+        ``kernels.ops.should_fuse_operator`` (native-Pallas backend + VMEM
+        fit; ``HIPBONE_FUSED=0/1`` forces), except when an explicit
+        ``local_op`` pins the split pipeline.  Preconditioner-internal
+        A-applies keep the split form — they run in ``precond_dtype`` and
+        their traffic is not the Eq. 4 bound this kernel targets.
       two_phase: paper-faithful two-phase exchange instead of the fused one.
       record_history: carry the per-iteration ‖r‖² history buffer.
 
@@ -970,6 +1012,15 @@ def dist_cg(
     if pmg_smooth_degree is None:
         pmg_smooth_degree = pmg_smooth_degree_default(pmg_smoother)
     op = local_op or local_poisson
+    if fused_operator is None:
+        if local_op is not None:
+            fused_operator = False
+        else:
+            from ..kernels import ops as _kops  # lazy: kernels import core
+
+            fused_operator = _kops.should_fuse_operator(
+                prob.dtype, n_degree=prob.n_degree, n_global=prob.m3
+            )
     spec = P(prob.axis_name)
     hist_len = n_iter
 
@@ -1046,7 +1097,8 @@ def dist_cg(
         ).reshape(-1)
 
         operator = lambda v: _apply_assembled(
-            prob, v, g1, w1, local_op=op, two_phase=two_phase
+            prob, v, g1, w1, local_op=op, two_phase=two_phase,
+            fused_interior=fused_operator,
         )
         psum = lambda v: lax.psum(v, prob.axis_name)
 

@@ -13,6 +13,8 @@ __all__ = [
     "hipbone_flops_per_iter",
     "operator_flops",
     "operator_bytes",
+    "assembled_apply_bytes",
+    "fused_apply_bytes",
     "cg_iter_bytes",
     "roofline_gflops",
     "fom_gflops",
@@ -49,6 +51,36 @@ def operator_bytes(e: int, n: int, *, word: int = 8, index: int = 4) -> float:
     n_l = e * _np1(n) ** 3
     n_g = e * n**3
     return word * n_g + (index + 8 * word) * n_l
+
+
+def assembled_apply_bytes(e: int, n: int, *, word: int = 8, index: int = 4) -> float:
+    """Full assembled A-apply  y_G = Z^T (S_L + λW) Z x_G, split form.
+
+    The Eq. 4 operator bound plus the gather's CSR traffic: the split
+    (scatter → local op → gather) pipeline materializes y_L once, so
+      operator (word N_G + (index + 8 word) N_L)
+    + gather  (read y_L + CSR cols (word+index) N_L, rows + write b_G
+               (word+index) N_G).
+    """
+    n_l = e * _np1(n) ** 3
+    n_g = e * n**3
+    op = word * n_g + (index + 8 * word) * n_l
+    gather = (word + index) * n_l + (word + index) * n_g
+    return op + gather
+
+
+def fused_apply_bytes(e: int, n: int, *, word: int = 8, index: int = 4) -> float:
+    """Single-kernel fused A-apply (kernels/poisson_fused.py) traffic bound.
+
+    The gather, local operator and scatter-add share one pass, so y_L is
+    never materialized and the l2g index tile is read once for both the
+    gather and the scatter:
+      x_G read + y_G write (2 word N_G) + [l2g index + 6 G factors + W]
+      per local node ((index + 7 word) N_L).
+    """
+    n_l = e * _np1(n) ** 3
+    n_g = e * n**3
+    return 2 * word * n_g + (index + 7 * word) * n_l
 
 
 def cg_iter_bytes(e: int, n: int, *, word: int = 8, index: int = 4) -> float:

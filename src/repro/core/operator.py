@@ -16,7 +16,6 @@ Pallas TPU kernel with identical semantics (validated against this).
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable
 
 import jax
@@ -232,13 +231,46 @@ def cast_problem(prob: PoissonProblem, dtype: Any) -> PoissonProblem:
 def poisson_assembled(
     prob: PoissonProblem,
     local_op: Callable[..., jax.Array] | None = None,
+    *,
+    fused: bool | None = None,
+    fused_kwargs: dict | None = None,
 ) -> Callable[[jax.Array], jax.Array]:
     """hipBone operator: x_G (N_G,) -> A x_G (N_G,).
 
-    y_L = (S_L + λW) Z x_G in one fused step, then the gather Z^T y_L.
-    ``local_op`` lets callers swap in the Pallas kernel; default is the
-    pure-jnp reference.
+    Split form (default off-TPU): y_L = (S_L + λW) Z x_G, then the gather
+    Z^T y_L — three XLA ops.  ``local_op`` lets callers swap in the Pallas
+    element kernel for the middle stage; default is the pure-jnp reference.
+
+    ``fused`` selects the single-kernel form instead
+    (``kernels.ops.poisson_assembled_fused``): gather, local operator and
+    scatter-add in one Pallas pass, no x_L/y_L HBM round-trips.  ``None``
+    defers to ``kernels.ops.should_fuse_operator`` (native-Pallas backend +
+    VMEM fit; ``HIPBONE_FUSED=0/1`` forces it off/on) — except when a
+    custom ``local_op`` is given, which pins the split pipeline that uses
+    it.  ``fused_kwargs`` passes ``block_e`` / ``interpret`` /
+    ``gather_mode`` through to the fused wrapper.
     """
+    if fused is None:
+        if local_op is not None:
+            fused = False
+        else:
+            from ..kernels import ops as _kops  # lazy: kernels import core
+
+            fused = _kops.should_fuse_operator(
+                prob.dtype,
+                n_degree=prob.mesh.n_degree,
+                n_global=prob.n_global,
+            )
+    if fused:
+        if local_op is not None:
+            raise ValueError(
+                "poisson_assembled: fused=True replaces the whole "
+                "scatter/local_op/gather pipeline; drop local_op"
+            )
+        from ..kernels import ops as _kops  # lazy: kernels import core
+
+        return _kops.make_poisson_assembled_fused(prob, **(fused_kwargs or {}))
+
     op = local_op or local_poisson
 
     def apply(x_g: jax.Array) -> jax.Array:
@@ -246,6 +278,7 @@ def poisson_assembled(
         y_l = op(x_l, prob.g, prob.d, prob.lam, prob.w_local)
         return gather(y_l, prob.l2g, prob.n_global)
 
+    apply.fused = False
     return apply
 
 

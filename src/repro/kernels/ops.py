@@ -9,7 +9,7 @@ on a real TPU backend it compiles via Mosaic.
 """
 from __future__ import annotations
 
-import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -17,6 +17,11 @@ import jax.numpy as jnp
 from . import ref
 from .blocks import block_matvec_pallas, pick_block_matvec_e
 from .poisson import pick_block_e, poisson_local_pallas
+from .poisson_fused import (
+    fused_fits_vmem,
+    pick_fused_block_e,
+    poisson_assembled_fused_pallas,
+)
 from .streams import (
     LANES,
     fused_axpy_dot_pallas,
@@ -28,8 +33,12 @@ from .streams import (
 
 __all__ = [
     "default_interpret",
+    "fused_override",
     "should_fuse_streams",
+    "should_fuse_operator",
     "poisson_local",
+    "poisson_assembled_fused",
+    "make_poisson_assembled_fused",
     "block_matvec",
     "make_block_matvec",
     "fused_axpy_dot",
@@ -48,6 +57,20 @@ def default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def fused_override() -> bool | None:
+    """The HIPBONE_FUSED env override shared by every auto-enable policy.
+
+    "0" forces the fused paths off, "1" forces them on even off-TPU (the
+    CI pallas-interpret job routes the whole test suite through the
+    interpret-mode kernels this way); anything else defers to the
+    per-policy auto rule.
+    """
+    env = os.environ.get("HIPBONE_FUSED", "")
+    if env in ("0", "1"):
+        return env == "1"
+    return None
+
+
 def should_fuse_streams(dtype) -> bool:
     """Auto-enable policy for the fused streaming stages in solver hot paths.
 
@@ -57,9 +80,36 @@ def should_fuse_streams(dtype) -> bool:
     accumulate in fp32, which is exact enough for fp32 solves and for the
     fp32 interior of a mixed-precision preconditioner, but would throw away
     bits an fp64 tol=1e-8 recurrence needs (and TPUs have no native fp64
-    regardless).  Callers keep an explicit opt-out knob on top of this.
+    regardless).  ``HIPBONE_FUSED`` (``fused_override``) wins over the auto
+    rule; callers keep an explicit opt-out knob on top of this.
     """
+    ov = fused_override()
+    if ov is not None:
+        return ov
     return (not default_interpret()) and jnp.dtype(dtype) == jnp.float32
+
+
+def should_fuse_operator(
+    dtype, *, n_degree: int | None = None, n_global: int | None = None
+) -> bool:
+    """Auto-enable policy for the single-kernel fused assembled operator.
+
+    True when Pallas compiles natively AND the resident x_G/y_G blocks fit
+    the fused kernel's VMEM budget (``fused_fits_vmem``); the split
+    scatter→local-op→gather path remains the fallback.  Unlike the stream
+    stages there is no dtype restriction — the kernel accumulates in
+    ``promote_types(dtype, f32)``, preserving fp64 semantics bit-for-bit at
+    the summation-order level.  ``HIPBONE_FUSED`` (``fused_override``)
+    forces the choice either way, including through interpret mode.
+    """
+    ov = fused_override()
+    if ov is not None:
+        return ov
+    if default_interpret():
+        return False  # interpret-mode gather/scatter is slower than XLA's
+    if n_degree is not None and n_global is not None:
+        return fused_fits_vmem(n_degree, n_global, dtype)
+    return True
 
 
 def _pad_rows(x: jax.Array, multiple: int) -> tuple[jax.Array, int]:
@@ -95,6 +145,82 @@ def poisson_local(
         u_p, g_p, w_p, d, lam=lam, block_e=eb, interpret=interp
     )
     return out[:e]
+
+
+def poisson_assembled_fused(
+    x_g: jax.Array,
+    l2g: jax.Array,
+    g: jax.Array,
+    w: jax.Array,
+    d: jax.Array,
+    *,
+    lam: float,
+    block_e: int | None = None,
+    interpret: bool | None = None,
+    gather_mode: str = "take",
+) -> jax.Array:
+    """Single-pass y_G = Z^T (S_L + λW) Z x_G with padding handled.
+
+    The array-level fused assembled apply (kernels/poisson_fused.py): pads
+    x_G to the 128-lane tile and the element streams to ``block_e``, points
+    padded elements at slot 0 (their zero G/W contributes exactly 0.0), and
+    slices the result back to (n_global,).  Matches
+    ``core.operator.poisson_assembled`` to summation-order round-off.
+    """
+    interp = default_interpret() if interpret is None else interpret
+    n_g = x_g.shape[0]
+    e = l2g.shape[0]
+    n1 = d.shape[0]
+    eb = block_e or pick_fused_block_e(n1 - 1, n_g, x_g.dtype)
+    eb = max(1, min(eb, max(e, 1)))
+    x_p, _ = _pad_vec(x_g, LANES)
+    x2 = x_p.reshape(-1, LANES)
+    l2g_p, _ = _pad_rows(l2g.astype(jnp.int32), eb)
+    g_p, _ = _pad_rows(g, eb)
+    w_p, _ = _pad_rows(w, eb)
+    y2 = poisson_assembled_fused_pallas(
+        x2,
+        l2g_p,
+        g_p,
+        w_p,
+        d,
+        lam=float(lam),
+        block_e=eb,
+        interpret=interp,
+        gather_mode=gather_mode,
+    )
+    return y2.reshape(-1)[:n_g]
+
+
+def make_poisson_assembled_fused(
+    prob,
+    *,
+    block_e: int | None = None,
+    interpret: bool | None = None,
+    gather_mode: str = "take",
+):
+    """Fused-operator apply closure for a ``core.operator.PoissonProblem``.
+
+    Same call signature as the split ``poisson_assembled(prob)`` result —
+    x_G -> A x_G — so the two are drop-in interchangeable; the returned
+    closure carries ``apply.fused = True`` for introspection.
+    """
+
+    def apply(x_g: jax.Array) -> jax.Array:
+        return poisson_assembled_fused(
+            x_g,
+            prob.l2g,
+            prob.g,
+            prob.w_local,
+            prob.d,
+            lam=prob.lam,
+            block_e=block_e,
+            interpret=interpret,
+            gather_mode=gather_mode,
+        )
+
+    apply.fused = True
+    return apply
 
 
 def block_matvec(

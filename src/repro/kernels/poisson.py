@@ -28,17 +28,23 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["poisson_local_pallas", "vmem_bytes_per_block", "pick_block_e"]
+__all__ = [
+    "poisson_local_pallas",
+    "local_body",
+    "vmem_bytes_per_block",
+    "pick_block_e",
+]
 
 
-def _kernel(u_ref, g_ref, w_ref, d_ref, out_ref, *, lam: float, n1: int):
-    """One grid step: apply (S_L + λW) to block_e elements resident in VMEM."""
-    u = u_ref[...]          # (Eb, p)
-    g = g_ref[...]          # (Eb, 6, p)
-    w = w_ref[...]          # (Eb, p)
-    d = d_ref[...]          # (n1, n1)
+def local_body(u, g, w, d, *, lam: float, n1: int):
+    """The three-contraction MXU body: (S_L + λW) u for one element block.
+
+    Shared between the element-local kernel below and the single-pass fused
+    assembled kernel (kernels/poisson_fused.py). Pure function of VMEM-
+    resident values; returns the (Eb, p) result in the accumulation dtype
+    (``promote_types(u.dtype, f32)`` — fp64 inputs accumulate in fp64).
+    """
     eb, p = u.shape
     f32 = jnp.float32
     acc = jnp.promote_types(u.dtype, f32)
@@ -75,7 +81,14 @@ def _kernel(u_ref, g_ref, w_ref, d_ref, out_ref, *, lam: float, n1: int):
     out = out + jnp.einsum("kc,eksr->ecsr", dd, wt, preferred_element_type=acc)
 
     # --- fused screen λW --------------------------------------------------
-    out = out.reshape(eb, p) + lam * (w.astype(acc) * u.astype(acc))
+    return out.reshape(eb, p) + lam * (w.astype(acc) * u.astype(acc))
+
+
+def _kernel(u_ref, g_ref, w_ref, d_ref, out_ref, *, lam: float, n1: int):
+    """One grid step: apply (S_L + λW) to block_e elements resident in VMEM."""
+    out = local_body(
+        u_ref[...], g_ref[...], w_ref[...], d_ref[...], lam=lam, n1=n1
+    )
     out_ref[...] = out.astype(out_ref.dtype)
 
 

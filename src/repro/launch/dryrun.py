@@ -34,7 +34,6 @@ from repro.models.blocks import MeshContext
 from repro.models.config import ModelConfig
 from repro.models.model import decode_step, init_caches, init_model, prefill
 from repro.models.params import RULES_TP_DP, RULES_TP_FSDP, tree_shardings_for
-from repro.roofline.analysis import parse_collectives, roofline_report
 from repro.training.optimizer import adafactor
 from repro.training.train_step import make_train_step, warmup_cosine
 
@@ -362,6 +361,7 @@ def run_poisson_cell(name: str, mesh_kind: str) -> dict:
         schwarz_inner_degree=pc.schwarz_inner_degree,
         precond_dtype=pc.precond_dtype,
         cg_variant=pc.cg_variant,
+        fused_operator=pc.fused_operator,
     )
     lowered = jax.jit(run.func).lower(*run.args)
     t_lower = time.time() - t0

@@ -15,7 +15,6 @@ on one plane — the layout a real deployment would choose).
 from __future__ import annotations
 
 import jax
-import numpy as np
 
 from ..compat import make_mesh
 

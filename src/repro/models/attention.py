@@ -16,14 +16,13 @@ C4 philosophy (local compute ‖ small exchange) applied to serving.
 from __future__ import annotations
 
 import functools
-import math
 from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
-from ..compat import axis_size, pcast_varying
+from ..compat import pcast_varying
 from .common import rms_norm, rope
 from .config import ModelConfig
 from .params import ParamBuilder
@@ -396,10 +395,9 @@ def attn_decode(
     pos = jnp.full((b, 1), t, jnp.int32)
 
     if seq_axes:
-        n_shards = axis_size(seq_axes)
         shard_id = lax.axis_index(seq_axes)
     else:
-        n_shards, shard_id = 1, 0
+        shard_id = 0
 
     if cfg.attn_kind == "mla":
         q = _mla_q(p, x, pos, cfg)

@@ -1,7 +1,6 @@
 """Shared model components: norms, RoPE, embeddings, activations."""
 from __future__ import annotations
 
-from typing import Any
 
 import jax
 import jax.numpy as jnp

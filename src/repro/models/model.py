@@ -12,7 +12,6 @@ arXiv:2412.19437); enabled via ``cfg.mtp_depth``.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

@@ -13,8 +13,7 @@ Z / Z^T algebra at the parameter level (DESIGN.md §4).
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp

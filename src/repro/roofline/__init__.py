@@ -1,5 +1,13 @@
 """repro.roofline — compiled-artifact analysis: loop-aware HLO accounting."""
 from .analysis import CollectiveStats, parse_collectives, roofline_report
+from .bench import dryrun_roofline
 from .hlo_model import HloStats, analyze_hlo
 
-__all__ = ["CollectiveStats", "HloStats", "analyze_hlo", "parse_collectives", "roofline_report"]
+__all__ = [
+    "CollectiveStats",
+    "HloStats",
+    "analyze_hlo",
+    "dryrun_roofline",
+    "parse_collectives",
+    "roofline_report",
+]

@@ -24,7 +24,6 @@ import dataclasses
 import re
 from typing import Any
 
-import numpy as np
 
 from ..core.fom import TPU_V5E, TpuSpec
 

@@ -1,0 +1,101 @@
+"""Per-row roofline-%-of-peak from an AOT-compiled program (dry run, no TPU).
+
+``dryrun_roofline`` joins the two halves of the §Roofline methodology into
+one record that benchmark rows can carry:
+
+  * the *achievable* time: the loop-aware HLO cost model
+    (:func:`repro.roofline.hlo_model.analyze_hlo` on
+    ``compiled.as_text()``) — dot FLOPs, the ×2 materialized-buffer HBM
+    proxy and ring-model collective link bytes, each multiplied by the
+    while-loop trip counts — pushed through the three-term roofline at the
+    :data:`repro.core.fom.TPU_V5E` constants;
+  * the *ideal* time: the paper's analytic traffic bound (Eqs. 4–6 via
+    ``core.fom`` — ``assembled_apply_bytes`` for one A-apply,
+    ``cg_iter_bytes`` × trip count for a whole solve) over the same HBM
+    bandwidth.
+
+``pct_roofline = 100 · ideal / achievable`` is therefore machine-
+independent — both sides come from compiler output and model constants,
+never a clock — which is what lets ``scripts/compare_bench.py`` gate it
+across PRs: a drop means the *compiled program* moved away from the
+streaming bound (new materializations, lost fusions), not that the host
+got slower.
+
+For while-loop solves pass ``model_bytes_per_iter``: it is multiplied by
+the HLO trip count (the ``n_iter`` cap, e.g. 500), the same multiplier the
+achievable side charges, so the early-exit actually taken at runtime
+cancels out of the ratio.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+from ..core.fom import TPU_V5E, TpuSpec
+from .hlo_model import HloStats, analyze_hlo
+
+__all__ = ["dryrun_roofline"]
+
+
+def dryrun_roofline(
+    compiled_or_hlo: Any,
+    *,
+    model_bytes: float | None = None,
+    model_bytes_per_iter: float | None = None,
+    trip_cap: int | None = None,
+    spec: TpuSpec = TPU_V5E,
+) -> dict[str, Any]:
+    """Roofline record for one compiled program.
+
+    Args:
+      compiled_or_hlo: a ``jax.jit(f).lower(...).compile()`` result (its
+        ``as_text()`` is analyzed) or a post-optimization HLO string.
+      model_bytes: the analytic Eq. 4–6 traffic bound for the whole program.
+      model_bytes_per_iter: per-iteration bound instead; multiplied by the
+        solver loop's HLO trip count (1 when the program has no loop).
+        Exactly one of the two must be given.
+      trip_cap: identifies the solver loop among the program's whiles: the
+        largest trip count ≤ ``trip_cap`` is used (callers know the static
+        ``n_iter`` bound they compiled with — scatter/gather lowering
+        loops trip once per local node, far above it). Default: the first
+        while in DFS-from-entry order.
+      spec: roofline hardware constants (default TPU_V5E).
+
+    Returns:
+      dict with ``model_bytes``, ``achievable_s``, ``pct_roofline`` (the
+      gated triple) plus the HLO-side diagnostics ``hlo_flops``,
+      ``hlo_bytes``, ``link_bytes``, ``trip_count`` and ``dominant``.
+    """
+    if (model_bytes is None) == (model_bytes_per_iter is None):
+        raise ValueError("pass exactly one of model_bytes / model_bytes_per_iter")
+    hlo = (
+        compiled_or_hlo
+        if isinstance(compiled_or_hlo, str)
+        else compiled_or_hlo.as_text()
+    )
+    stats: HloStats = analyze_hlo(hlo)
+    if trip_cap is not None:
+        trip = max((t for t in stats.trip_counts if t <= trip_cap), default=1)
+    else:
+        trip = stats.trip_counts[0] if stats.trip_counts else 1
+    if model_bytes is None:
+        model_bytes = float(model_bytes_per_iter) * trip
+
+    terms = {
+        "compute": stats.flops / spec.peak_flops,
+        "memory": stats.hbm_bytes / spec.hbm_bandwidth,
+        "collective": stats.total_link_bytes / spec.ici_bandwidth,
+    }
+    achievable_s = max(terms.values())
+    dominant = max(terms, key=terms.get)  # type: ignore[arg-type]
+    ideal_s = model_bytes / spec.hbm_bandwidth
+    pct = 100.0 * ideal_s / achievable_s if achievable_s > 0 else 0.0
+    return {
+        "model_bytes": float(model_bytes),
+        "achievable_s": achievable_s,
+        "pct_roofline": pct,
+        "hlo_flops": stats.flops,
+        "hlo_bytes": stats.hbm_bytes,
+        "link_bytes": stats.total_link_bytes,
+        "trip_count": trip,
+        "dominant": dominant,
+    }

@@ -22,7 +22,6 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Any
 
 __all__ = ["analyze_hlo", "HloStats"]
 
@@ -82,7 +81,7 @@ class _Comp:
     buffer_bytes: float = 0.0
     coll_link_bytes: dict = dataclasses.field(default_factory=dict)
     coll_counts: dict = dataclasses.field(default_factory=dict)
-    whiles: list = dataclasses.field(default_factory=list)   # (cond, body)
+    whiles: list = dataclasses.field(default_factory=list)   # (cond, body, hint)
     calls: list = dataclasses.field(default_factory=list)
     max_const: int = 1
 
@@ -94,7 +93,7 @@ class HloStats:
     coll_link_bytes: dict[str, float]
     coll_counts: dict[str, float]
     n_whiles: int
-    trip_counts: list[int]
+    trip_counts: list[int]   # visit order: outermost loop first
 
     @property
     def total_link_bytes(self) -> float:
@@ -126,6 +125,10 @@ def _parse_computations(hlo: str) -> dict[str, _Comp]:
     comps: dict[str, _Comp] = {}
     cur: _Comp | None = None
     shapes: dict[str, list[int] | None] = {}
+    # scalar integer constants flowing through tuple/copy chains: loop bounds
+    # hoisted out of the cond land in the while's init tuple (LICM / the
+    # "wide." transform), so the cond alone no longer names the trip count
+    const_vals: dict[str, int] = {}
     for line in _join_wrapped_lines(hlo):
         if line and not line[0].isspace():
             m = _COMP_HDR.match(line)
@@ -133,6 +136,7 @@ def _parse_computations(hlo: str) -> dict[str, _Comp]:
                 cur = _Comp(m.group(1))
                 comps[cur.name] = cur
                 shapes = {}
+                const_vals = {}
                 # parameter shapes from the header signature
                 for pm in re.finditer(r"([\w.\-]+):\s*((?:\([^)]*\))|[\w\[\],]+)", line):
                     _, dims, _ = _shape_info(pm.group(2))
@@ -149,26 +153,50 @@ def _parse_computations(hlo: str) -> dict[str, _Comp]:
             if " while(" in line:
                 wm = _COND_BODY.search(line)
                 if wm:
-                    cur.whiles.append((wm.group(1), wm.group(2)))
+                    cur.whiles.append((wm.group(1), wm.group(2), 1))
             continue
         name, type_str, op = mi.group(1), mi.group(2), mi.group(3)
         size, dims, _ = _shape_info(type_str)
         shapes[name] = dims
+        if op == "dynamic-update-slice" or "dynamic-update-slice" in name:
+            # In-place update of an aliased buffer (XLA lowers scatter to a
+            # while of these on CPU): the honest HBM charge is the updated
+            # slice, not the full result re-written every trip. The slice
+            # shape isn't in the result type, so charge one element — the
+            # surrounding dynamic-slice reads carry the rest of the traffic.
+            _, _, dt = _shape_info(type_str)
+            size = _DTYPE_BYTES.get(dt, 4)
 
         for c in _CONST.finditer(line):
             cur.max_const = max(cur.max_const, int(c.group(1)))
 
+        if op == "constant" and not dims:
+            cm = _CONST.search(line)
+            if cm:
+                const_vals[name] = int(cm.group(1))
+        elif op in ("copy", "bitcast", "convert", "tuple"):
+            ops_in = re.findall(r"%([\w.\-]+)", line.split("=", 1)[1])
+            vals = [const_vals[o] for o in ops_in if o in const_vals]
+            if vals:
+                const_vals[name] = max(vals)
+
         wm = _COND_BODY.search(line)
         if op == "while" and wm:
-            cur.whiles.append((wm.group(1), wm.group(2)))
+            # trip hint: the largest scalar int constant feeding the init
+            # tuple — catches bounds hoisted out of the cond computation
+            im = re.search(r"while\((?:\([^()]*\)\s*)?%([\w.\-]+)\)", line)
+            hint = const_vals.get(im.group(1), 1) if im else 1
+            cur.whiles.append((wm.group(1), wm.group(2), hint))
             continue
         cm = _CALLS.search(line)
         if cm:
             cur.calls.append(cm.group(1))
 
         if op == "dot":
-            # operands: dot(%a, %b) — lhs shape from symbol table
-            om = re.search(r"\bdot\(\s*%?([\w.\-]+)", line)
+            # operands: dot(f32[..] %a, f32[..] %b) — lhs shape from symbol
+            # table; an optional type token (never %-prefixed) precedes the
+            # operand name in post-optimization HLO
+            om = re.search(r"\bdot\(\s*(?:[^%\s]\S*\s+)?%([\w.\-]+)", line)
             k = 1
             if om:
                 lhs = shapes.get(om.group(1))
@@ -212,6 +240,17 @@ def _parse_computations(hlo: str) -> dict[str, _Comp]:
     return comps
 
 
+def _comp_max_const(comps: dict[str, _Comp], name: str, depth: int = 0) -> int:
+    """Largest int constant in a computation or anything it calls."""
+    if depth > 8 or name not in comps:
+        return 1
+    c = comps[name]
+    m = c.max_const
+    for cal in c.calls:
+        m = max(m, _comp_max_const(comps, cal, depth + 1))
+    return m
+
+
 def analyze_hlo(hlo: str, entry: str | None = None) -> HloStats:
     comps = _parse_computations(hlo)
     if not comps:
@@ -247,8 +286,9 @@ def analyze_hlo(hlo: str, entry: str | None = None) -> HloStats:
             coll_c[k] = coll_c.get(k, 0.0) + v * mult
         for cal in c.calls:
             visit(cal, mult, depth + 1)
-        for cond, body in c.whiles:
-            trip = comps[cond].max_const if cond in comps else 1
+        for cond, body, hint in c.whiles:
+            # the bound constant may sit in a fusion the cond calls
+            trip = max(_comp_max_const(comps, cond), hint)
             n_whiles += 1
             trips.append(trip)
             visit(body, mult * max(trip, 1), depth + 1)
@@ -269,5 +309,5 @@ def analyze_hlo(hlo: str, entry: str | None = None) -> HloStats:
         coll_link_bytes=coll_b,
         coll_counts=coll_c,
         n_whiles=n_whiles,
-        trip_counts=sorted(trips, reverse=True)[:12],
-    )
+        trip_counts=trips[:12],   # DFS order: the outermost (solver) loop
+    )                             # is trips[0]; nested lowering loops follow

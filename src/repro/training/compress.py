@@ -12,7 +12,6 @@ and unit-tested for the error-feedback contraction property.
 """
 from __future__ import annotations
 
-from typing import Any
 
 import jax
 import jax.numpy as jnp

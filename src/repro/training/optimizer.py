@@ -10,8 +10,7 @@ storage — paper C1) automatically under pjit.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable, NamedTuple
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp

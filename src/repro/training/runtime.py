@@ -18,7 +18,7 @@ import dataclasses
 import signal
 import statistics
 import time
-from typing import Any, Callable, Iterator
+from typing import Any, Callable
 
 import jax
 

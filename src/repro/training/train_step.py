@@ -9,9 +9,7 @@ of Fig. 2 map onto microbatch halves).
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -1,5 +1,4 @@
 """Multi-device communication tests (8 fake CPU devices via subprocess)."""
-import pytest
 
 from conftest import run_subprocess
 

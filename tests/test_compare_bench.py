@@ -1,0 +1,177 @@
+"""scripts/compare_bench.py gating semantics: sections, iters, roofline."""
+import importlib.util
+import json
+import pathlib
+
+import pytest
+
+def _load():
+    spec = importlib.util.spec_from_file_location(
+        "compare_bench",
+        pathlib.Path(__file__).resolve().parents[1]
+        / "scripts"
+        / "compare_bench.py",
+    )
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+cb = _load()
+
+
+def _prec(n, kind, iters, *, lam=1.0, dtype="fp64", pct=None):
+    r = {
+        "n": n,
+        "lam": lam,
+        "kind": kind,
+        "dtype": dtype,
+        "iters_to_tol": iters,
+    }
+    if pct is not None:
+        r["pct_roofline"] = pct
+    return r
+
+
+def _fig3(n, pct):
+    return {"n": n, "pct_roofline": pct}
+
+
+def _write(tmp_path, name, summary):
+    p = tmp_path / name
+    p.write_text(json.dumps(summary))
+    return str(p)
+
+
+def test_identical_passes(tmp_path):
+    s = {"precond_records": [_prec(3, "jacobi", 20, pct=10.0)]}
+    b = _write(tmp_path, "a.json", s)
+    c = _write(tmp_path, "b.json", s)
+    assert cb.main([b, c]) == 0
+
+
+def test_iters_regression_fails(tmp_path):
+    b = _write(
+        tmp_path, "a.json", {"precond_records": [_prec(3, "jacobi", 20)]}
+    )
+    c = _write(
+        tmp_path, "b.json", {"precond_records": [_prec(3, "jacobi", 25)]}
+    )
+    assert cb.main([b, c]) == 1
+    assert cb.main([b, c, "--slack", "5"]) == 0
+
+
+def test_roofline_regression_fails(tmp_path):
+    b = _write(
+        tmp_path,
+        "a.json",
+        {"precond_records": [_prec(3, "jacobi", 20, pct=30.0)]},
+    )
+    c = _write(
+        tmp_path,
+        "b.json",
+        {"precond_records": [_prec(3, "jacobi", 20, pct=10.0)]},
+    )
+    assert cb.main([b, c]) == 1
+    assert cb.main([b, c, "--roofline-slack", "25"]) == 0
+
+
+def test_fig3_roofline_gated(tmp_path):
+    base = {
+        "precond_records": [_prec(3, "jacobi", 20)],
+        "fig3_records": [_fig3(3, 40.0), _fig3(7, 35.0)],
+    }
+    cand = {
+        "precond_records": [_prec(3, "jacobi", 20)],
+        "fig3_records": [_fig3(3, 12.0), _fig3(7, 35.0)],
+    }
+    b = _write(tmp_path, "a.json", base)
+    c = _write(tmp_path, "b.json", cand)
+    assert cb.main([b, c]) == 1
+    assert cb.main([b, c, "--roofline-slack", "30"]) == 0
+
+
+def test_missing_pct_field_not_gated(tmp_path):
+    """Baselines predating the roofline fields compare on iterations only."""
+    b = _write(
+        tmp_path, "a.json", {"precond_records": [_prec(3, "jacobi", 20)]}
+    )
+    c = _write(
+        tmp_path,
+        "b.json",
+        {"precond_records": [_prec(3, "jacobi", 20, pct=1.0)]},
+    )
+    assert cb.main([b, c]) == 0
+
+
+def test_baseline_missing_section_fails(tmp_path, capsys):
+    """Satellite: candidate grew a gated section the baseline lacks."""
+    b = _write(
+        tmp_path, "a.json", {"precond_records": [_prec(3, "jacobi", 20)]}
+    )
+    c = _write(
+        tmp_path,
+        "b.json",
+        {
+            "precond_records": [_prec(3, "jacobi", 20)],
+            "fig3_records": [_fig3(3, 40.0)],
+        },
+    )
+    assert cb.main([b, c]) == 1
+    out = capsys.readouterr().out
+    assert "fig3_records" in out and "--allow-new-sections" in out
+    assert cb.main([b, c, "--allow-new-sections"]) == 0
+
+
+def test_candidate_dropping_section_fails(tmp_path, capsys):
+    b = _write(
+        tmp_path,
+        "a.json",
+        {
+            "precond_records": [_prec(3, "jacobi", 20)],
+            "fig3_records": [_fig3(3, 40.0)],
+        },
+    )
+    c = _write(
+        tmp_path, "b.json", {"precond_records": [_prec(3, "jacobi", 20)]}
+    )
+    assert cb.main([b, c]) == 1
+    assert "dropped" in capsys.readouterr().out
+    # --allow-new-sections does NOT excuse shrinking coverage
+    assert cb.main([b, c, "--allow-new-sections"]) == 1
+
+
+def test_no_gated_sections_fails(tmp_path):
+    b = _write(tmp_path, "a.json", {"sections": {}})
+    c = _write(tmp_path, "b.json", {"sections": {}})
+    assert cb.main([b, c]) == 1
+
+
+def test_new_and_removed_cases_report_only(tmp_path):
+    b = _write(
+        tmp_path,
+        "a.json",
+        {
+            "precond_records": [
+                _prec(3, "jacobi", 20),
+                _prec(3, "chebyshev", 15),
+            ]
+        },
+    )
+    c = _write(
+        tmp_path,
+        "b.json",
+        {
+            "precond_records": [
+                _prec(3, "jacobi", 20),
+                _prec(3, "schwarz", 12),
+            ]
+        },
+    )
+    assert cb.main([b, c]) == 0
+
+
+def test_legacy_load_records_missing_section(tmp_path):
+    p = _write(tmp_path, "a.json", {"sections": {}})
+    with pytest.raises(SystemExit):
+        cb.load_records(p)

@@ -5,7 +5,6 @@ import re
 import subprocess
 import sys
 
-import pytest
 
 from conftest import REPO, run_subprocess
 

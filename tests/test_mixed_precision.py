@@ -236,14 +236,22 @@ def test_fused_jacobi_dot_mixed_boundary(rng):
     assert abs(float(rz) - rz_ref) <= 1e-4 * abs(rz_ref)
 
 
-def test_should_fuse_streams_policy():
+def test_should_fuse_streams_policy(monkeypatch):
     """Auto-enable only off interpret mode and only for fp32 streams."""
     import jax as _jax
 
+    # pin the env: the auto rule is what's under test (the CI
+    # pallas-interpret job runs this suite with HIPBONE_FUSED=1)
+    monkeypatch.delenv("HIPBONE_FUSED", raising=False)
     on_tpu = _jax.default_backend() == "tpu"
     assert ops.should_fuse_streams(jnp.float32) == on_tpu
     # fp64 streams never auto-fuse: the kernels' reductions are fp32
     assert ops.should_fuse_streams(jnp.float64) is False
+    # the override wins in both directions
+    monkeypatch.setenv("HIPBONE_FUSED", "1")
+    assert ops.should_fuse_streams(jnp.float64) is True
+    monkeypatch.setenv("HIPBONE_FUSED", "0")
+    assert ops.should_fuse_streams(jnp.float32) is False
 
 
 def test_mixed_pcg_with_fused_stages(prob64):

@@ -4,8 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import ARCHS, REDUCED, SHAPES, get_config
-from repro.models.config import ModelConfig
+from repro.configs import ARCHS, REDUCED, SHAPES
 from repro.models.model import decode_step, forward, init_caches, init_model, prefill
 from repro.training import adamw, make_train_step, warmup_cosine
 

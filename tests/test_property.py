@@ -1,5 +1,4 @@
 """Hypothesis property tests on the system's invariants."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -11,7 +10,7 @@ from hypothesis import strategies as st
 from repro.core import build_problem, poisson_assembled
 from repro.core.gather_scatter import gather, scatter
 from repro.core.mesh import build_box_mesh, partition_elements
-from repro.comms.topology import ProcessGrid, factor3
+from repro.comms.topology import factor3
 from repro.models.moe import router_topk
 from repro.models.config import ModelConfig
 from repro.training.compress import dequantize_int8, quantize_int8

@@ -1,0 +1,167 @@
+"""roofline modules: collective parsing, loop trip counts, dry-run e2e."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.fom import TPU_V5E, assembled_apply_bytes, cg_iter_bytes
+from repro.roofline import analyze_hlo, dryrun_roofline, parse_collectives
+
+# A hand-written post-optimization-style module: an explicit-group
+# all-reduce, an iota-group all-gather, and a permute.
+HLO_COLLECTIVES = """
+HloModule m
+
+ENTRY %main (p0: f32[1024]) -> f32[1024] {
+  %p0 = f32[1024]{0} parameter(0)
+  %ar = f32[1024]{0} all-reduce(f32[1024]{0} %p0), replica_groups={{0,1,2,3}}, to_apply=%sum
+  %ag = f32[4096]{0} all-gather(f32[1024]{0} %ar), replica_groups=[2,4]<=[8], dimensions={0}
+  %cp = f32[1024]{0} collective-permute(f32[1024]{0} %ar), source_target_pairs={{0,1},{1,0}}
+  ROOT %out = f32[1024]{0} add(f32[1024]{0} %ar, f32[1024]{0} %cp)
+}
+"""
+
+# A while loop whose trip bound lives in the cond, containing a dot.
+HLO_WHILE = """
+HloModule m
+
+%cond (arg: (s32[], f32[8,8])) -> pred[] {
+  %arg = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element((s32[], f32[8,8]) %arg), index=0
+  %n = s32[] constant(50)
+  ROOT %lt = pred[] compare(s32[] %i, s32[] %n), direction=LT
+}
+
+%body (arg: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %arg = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element((s32[], f32[8,8]) %arg), index=0
+  %x = f32[8,8]{1,0} get-tuple-element((s32[], f32[8,8]) %arg), index=1
+  %d = f32[8,8]{1,0} dot(f32[8,8]{1,0} %x, f32[8,8]{1,0} %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %one = s32[] constant(1)
+  %j = s32[] add(s32[] %i, s32[] %one)
+  ROOT %t = (s32[], f32[8,8]) tuple(s32[] %j, f32[8,8]{1,0} %d)
+}
+
+ENTRY %main (p0: f32[8,8]) -> f32[8,8] {
+  %p0 = f32[8,8]{1,0} parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[8,8]) tuple(s32[] %zero, f32[8,8]{1,0} %p0)
+  %w = (s32[], f32[8,8]) while((s32[], f32[8,8]) %init), condition=%cond, body=%body
+  ROOT %r = f32[8,8]{1,0} get-tuple-element((s32[], f32[8,8]) %w), index=1
+}
+"""
+
+
+class TestParseCollectives:
+    def test_explicit_groups_all_reduce(self):
+        stats = parse_collectives(HLO_COLLECTIVES)
+        assert stats.counts["all-reduce"] == 1
+        # ring all-reduce over g=4: 2(g-1)/g * 4096 bytes
+        assert stats.link_bytes["all-reduce"] == pytest.approx(
+            2 * 3 / 4 * 4096
+        )
+
+    def test_iota_groups_all_gather(self):
+        stats = parse_collectives(HLO_COLLECTIVES)
+        # [2,4]<=[8]: group size is the second iota dim (4); result 16 KiB
+        assert stats.counts["all-gather"] == 1
+        assert stats.link_bytes["all-gather"] == pytest.approx(
+            3 / 4 * 4096 * 4
+        )
+
+    def test_collective_permute(self):
+        stats = parse_collectives(HLO_COLLECTIVES)
+        assert stats.link_bytes["collective-permute"] == pytest.approx(4096)
+
+
+class TestAnalyzeHlo:
+    def test_while_trip_multiplies_flops(self):
+        stats = analyze_hlo(HLO_WHILE)
+        assert stats.n_whiles == 1
+        assert stats.trip_counts == [50]
+        # 8x8x8 dot = 2*64*8 = 1024 flops, x50 trips
+        assert stats.flops == pytest.approx(50 * 1024)
+
+    def test_body_bytes_multiplied(self):
+        stats = analyze_hlo(HLO_WHILE)
+        once = analyze_hlo(HLO_WHILE.replace("constant(50)", "constant(1)"))
+        assert stats.hbm_bytes > 10 * once.hbm_bytes
+
+    def test_hoisted_bound_via_called_fusion(self):
+        # bound constant inside a computation the cond calls (LICM shape)
+        hlo = HLO_WHILE.replace(
+            "%n = s32[] constant(50)\n  ROOT %lt = pred[] compare(s32[] %i, s32[] %n), direction=LT",
+            "ROOT %lt = pred[] fusion(s32[] %i), kind=kLoop, calls=%cmp",
+        ).replace(
+            "%cond (arg",
+            "%cmp (ci: s32[]) -> pred[] {\n"
+            "  %ci = s32[] parameter(0)\n"
+            "  %cn = s32[] constant(50)\n"
+            "  ROOT %clt = pred[] compare(s32[] %ci, s32[] %cn), direction=LT\n"
+            "}\n\n%cond (arg",
+        )
+        assert analyze_hlo(hlo).trip_counts == [50]
+
+
+class TestDryrunRoofline:
+    def test_requires_exactly_one_model(self):
+        with pytest.raises(ValueError):
+            dryrun_roofline(HLO_WHILE)
+        with pytest.raises(ValueError):
+            dryrun_roofline(
+                HLO_WHILE, model_bytes=1.0, model_bytes_per_iter=1.0
+            )
+
+    def test_per_iter_times_trip(self):
+        r = dryrun_roofline(HLO_WHILE, model_bytes_per_iter=100.0)
+        assert r["trip_count"] == 50
+        assert r["model_bytes"] == pytest.approx(5000.0)
+
+    def test_trip_cap_skips_lowering_loops(self):
+        # fake a second loop with a huge trip count ahead of the solver loop
+        r = dryrun_roofline(
+            HLO_WHILE, model_bytes_per_iter=1.0, trip_cap=10_000
+        )
+        assert r["trip_count"] == 50
+
+    def test_e2e_quickstart_solve(self):
+        """Dry-run roofline of a real compiled CG solve on the tiny config."""
+        from repro.configs.hipbone import REDUCED
+        from repro.core import build_problem, cg_assembled, poisson_assembled
+
+        cfg = REDUCED
+        prob = build_problem(
+            cfg.n_degree, cfg.local_elems, lam=cfg.lam, dtype=jnp.float32
+        )
+        a = poisson_assembled(prob, fused=False)
+        rng = np.random.default_rng(0)
+        b = jnp.asarray(rng.standard_normal(prob.n_global), jnp.float32)
+        compiled = (
+            jax.jit(lambda bb: cg_assembled(a, bb, n_iter=100, tol=1e-5))
+            .lower(b)
+            .compile()
+        )
+        e = prob.mesh.n_elements
+        r = dryrun_roofline(
+            compiled,
+            model_bytes_per_iter=cg_iter_bytes(e, cfg.n_degree, word=4),
+            trip_cap=100,
+        )
+        assert r["trip_count"] == 100
+        assert 0.0 < r["pct_roofline"] <= 100.0
+        assert r["achievable_s"] >= r["model_bytes"] / TPU_V5E.hbm_bandwidth
+
+    def test_e2e_single_apply(self):
+        from repro.core import build_problem, poisson_assembled
+
+        prob = build_problem(3, (3, 3, 3), lam=1.0, dtype=jnp.float32)
+        a = poisson_assembled(prob, fused=False)
+        x = jnp.ones((prob.n_global,), jnp.float32)
+        compiled = jax.jit(a).lower(x).compile()
+        r = dryrun_roofline(
+            compiled,
+            model_bytes=assembled_apply_bytes(
+                prob.mesh.n_elements, 3, word=4
+            ),
+        )
+        assert 0.0 < r["pct_roofline"] <= 100.0
