@@ -86,7 +86,12 @@ def _solve_case(n: int, shape, lam: float, tol: float, use_fused=None):
     import jax.numpy as jnp
     import numpy as np
 
-    from repro.core import build_problem, cg_assembled, poisson_assembled
+    from repro.core import (
+        build_problem,
+        cg_assembled,
+        poisson_assembled,
+        status_name,
+    )
     from repro.core.fom import cg_iter_bytes, nekbone_flops_per_iter
     from repro.core.operator import cast_problem
     from repro.core.precond import (
@@ -193,6 +198,9 @@ def _solve_case(n: int, shape, lam: float, tol: float, use_fused=None):
                     "kind": name,
                     "dtype": dtype_mode,
                     "iters_to_tol": iters,
+                    # SolveStatus wire name; compare_bench.py fails any
+                    # gated row whose status is not "converged"
+                    "status": status_name(res.status),
                     "time_s": dt,
                     "fom_gflops": fom,
                     "model_bytes": roof["model_bytes"],
@@ -223,8 +231,9 @@ def records(quick: bool = True, use_fused=None) -> list[dict]:
 def rows_from(recs: list[dict]) -> list[str]:
     """CSV rows for a list of :func:`records` results."""
     rows = [
-        "precond,N,dofs,lam,kind,dtype,iters_to_tol,time_s,fom_gflops,"
-        "pct_roofline,precond_apply_s,cheb_lmax,cheb_lmin,pmg_levels"
+        "precond,N,dofs,lam,kind,dtype,status,iters_to_tol,time_s,"
+        "fom_gflops,pct_roofline,precond_apply_s,cheb_lmax,cheb_lmin,"
+        "pmg_levels"
     ]
     for r in recs:
         lmax = "" if r["lmax"] is None else f"{r['lmax']:.3f}"
@@ -242,7 +251,8 @@ def rows_from(recs: list[dict]) -> list[str]:
         )
         rows.append(
             f"precond,{r['n']},{r['dofs']},{r['lam']},{r['kind']},"
-            f"{r['dtype']},{r['iters_to_tol']},{r['time_s']:.4f},"
+            f"{r['dtype']},{r.get('status', 'converged')},"
+            f"{r['iters_to_tol']},{r['time_s']:.4f},"
             f"{r['fom_gflops']:.2f},{pct},{papply},{lmax},{lmin},{levels}"
         )
     return rows

@@ -32,6 +32,7 @@ import numpy as np
 
 from repro.compat import make_mesh
 from repro.comms.topology import ProcessGrid, factor3
+from repro.core.cg import status_name
 from repro.core.distributed import build_dist_problem, dist_cg, dist_spectrum
 from repro.core.fom import nekbone_flops_per_iter
 
@@ -115,14 +116,15 @@ def main() -> None:
                           precond_dtype=pdtype, cg_variant=variant,
                           two_phase=args.two_phase, record_history=True,
                           fused_operator=args.fused_operator or None))
-    x, rdotr, iters, hist = run()
+    x, rdotr, iters, status, hist = run()
     jax.block_until_ready(x)
     t0 = time.perf_counter()
-    x, rdotr, iters, hist = run()
+    x, rdotr, iters, status, hist = run()
     jax.block_until_ready(x)
     dt = time.perf_counter() - t0
 
     n_done = int(iters)
+    print(f"status: {status_name(status)}")
     e_tot = ranks * prob.e_local
     fom = nekbone_flops_per_iter(e_tot, args.n) * n_done / dt / 1e9
     print(f"{n_done} CG iters in {dt:.3f}s -> FOM {fom:.2f} GFLOPS "

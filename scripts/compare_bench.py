@@ -14,6 +14,14 @@ Two gated record sections, compared on the cases both jsons share:
   * ``fig3_records`` (key: N) — fails on ``pct_roofline`` drops beyond
     the slack.
 
+Independently of the pairwise comparison, every *candidate* row in a
+gated section must report ``status: "converged"`` (the
+``core.cg.SolveStatus`` wire name) — a benchmark row that ended in
+MAX_ITER or a breakdown status is not a performance number and fails the
+gate outright, whatever its iteration count.  Rows without a ``status``
+field are treated as legacy-converged (jsons predating the field; also
+fig3's operator-only rows, which never run a solve).
+
 ``pct_roofline`` is machine-independent by construction (analytic traffic
 bound over the dry-run HLO roofline time, both at the TPU_V5E constants —
 see roofline/bench.py), which is what makes it gateable; wall-clock and
@@ -79,6 +87,15 @@ def compare_section(
     cmap = {_key(section, r): r for r in cand}
     shared = sorted(set(bmap) & set(cmap))
     failures: list[str] = []
+    # candidate-side status gate: every row, shared or new — a
+    # non-converged solve is invalid as a benchmark number regardless of
+    # what the baseline says.  Missing status = legacy-converged.
+    for key in sorted(cmap):
+        status = cmap[key].get("status", "converged")
+        if status != "converged":
+            label = _fmt_key(section, key)
+            print(f"{'REGRESSION':>10}  {section[:-8]} {label}: status={status}")
+            failures.append(f"{section} {label}: status={status}")
     for key in shared:
         b, c = bmap[key], cmap[key]
         label = _fmt_key(section, key)

@@ -32,7 +32,8 @@ consistency contract of the padded box survives the narrow wire).
 """
 from __future__ import annotations
 
-from typing import Any
+import contextlib
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -46,13 +47,36 @@ __all__ = [
     "expand_exchange",
     "contract_exchange",
     "rank_coords",
+    "wire_transform",
 ]
+
+# Fault-injection seam: when set, every outgoing payload slab of every
+# exchange primitive passes through the hook as ``fn(slab, axis_name)``
+# just before its ppermute.  The hook is read at *trace* time, so it must
+# be installed before the solve is first compiled (repro.testing.faults
+# builds rank-targeted corruptors on top via lax.axis_index).  Production
+# code never sets this; the default is a straight pass-through.
+_WIRE_HOOK: Callable[[jax.Array, str], jax.Array] | None = None
+
+
+@contextlib.contextmanager
+def wire_transform(fn: Callable[[jax.Array, str], jax.Array]):
+    """Temporarily install a wire-payload hook (fault-injection seam)."""
+    global _WIRE_HOOK
+    prev = _WIRE_HOOK
+    _WIRE_HOOK = fn
+    try:
+        yield
+    finally:
+        _WIRE_HOOK = prev
 
 
 def _wire_permute(
     val: jax.Array, axis_name: str, perm, wire_dtype: Any | None
 ) -> jax.Array:
     """ppermute with an optional cast-on-the-wire of the payload slab."""
+    if _WIRE_HOOK is not None:
+        val = _WIRE_HOOK(val, axis_name)
     if wire_dtype is None or jnp.dtype(wire_dtype) == val.dtype:
         return lax.ppermute(val, axis_name, perm)
     return lax.ppermute(

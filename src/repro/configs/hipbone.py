@@ -4,10 +4,32 @@ Shapes follow the paper's scaling studies: degree N=7 (3-D-threadblock
 regime) and N=15 (2-D regime / peak-FOM degree), with per-rank element
 boxes sized so the per-rank DOF counts bracket the paper's sweep. These
 cells are EXTRA, beyond the 40 assigned LM cells.
+
+Knob validation lives in ``PoissonConfig.__post_init__``: invalid values
+and invalid *combinations* raise immediately with the offending knob named
+(rather than surfacing as a deep-stack solver failure), and legal-but-
+suspect combinations emit a `ConfigWarning` (see its docstring for the
+list).
 """
 import dataclasses
+import warnings
 
-__all__ = ["PoissonConfig", "CONFIGS"]
+__all__ = ["PoissonConfig", "ConfigWarning", "CONFIGS"]
+
+
+class ConfigWarning(UserWarning):
+    """A legal but suspect knob combination.
+
+    Emitted (never raised) by ``PoissonConfig.__post_init__`` for:
+
+    * ``precond_dtype`` narrower than ``dtype`` with
+      ``cg_variant="standard"`` — a narrowed M⁻¹ is only approximately
+      symmetric in the solve dtype, which the Fletcher–Reeves β assumes
+      exactly; pair narrowed chains with ``cg_variant="flexible"`` (the
+      Polak–Ribière β) or expect extra iterations /
+      BREAKDOWN_INDEFINITE statuses near the tolerance
+      (docs/SOLVERS.md, Mixed precision).
+    """
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,22 +82,105 @@ class PoissonConfig:
     # scatter/local/gather pipeline, None defers to the backend policy
     # (kernels.ops.should_fuse_operator; HIPBONE_FUSED=0/1 overrides).
     fused_operator: bool | None = None
+    # solver guardrails (core.cg.SolveStatus): DIVERGED above
+    # divergence_factor·rdotr₀ (squared-norm semantics), STAGNATED after
+    # stagnation_window iterations without a stagnation_rtol relative
+    # reduction of the best-seen rdotr.  None disables that detector.
+    # Defaults mirror core.cg's module constants (tests pin the equality).
+    divergence_factor: float | None = 1e6
+    stagnation_window: int | None = 50
+    stagnation_rtol: float = 0.99
 
     def __post_init__(self):
+        def bad(msg):
+            raise ValueError(f"PoissonConfig {self.name!r}: {msg}")
+
+        if self.n_degree < 1:
+            bad(f"n_degree must be >= 1, got {self.n_degree}")
+        if len(self.local_elems) != 3 or any(
+            e < 1 for e in self.local_elems
+        ):
+            bad(
+                f"local_elems must be three positive counts, "
+                f"got {self.local_elems!r}"
+            )
+        if not self.lam > 0:
+            bad(f"lam must be > 0 (screened operator is SPD), got {self.lam}")
+        if self.n_iter < 1:
+            bad(f"n_iter must be >= 1, got {self.n_iter}")
+        if self.tol is not None and not self.tol > 0:
+            bad(f"tol must be > 0 (or None for fixed-count), got {self.tol}")
+        if self.dtype not in ("float32", "float64"):
+            bad(f"unknown dtype {self.dtype!r}; use 'float32' or 'float64'")
         if self.precond not in ("none", "jacobi", "chebyshev", "schwarz", "pmg"):
-            raise ValueError(f"unknown precond {self.precond!r}")
+            bad(f"unknown precond {self.precond!r}")
+        if self.cheb_degree < 1:
+            bad(f"cheb_degree must be >= 1, got {self.cheb_degree}")
         if self.pmg_smoother not in ("chebyshev", "schwarz"):
-            raise ValueError(f"unknown pmg_smoother {self.pmg_smoother!r}")
+            bad(f"unknown pmg_smoother {self.pmg_smoother!r}")
         if self.pmg_coarse_op not in ("redisc", "galerkin", "galerkin_mat"):
-            raise ValueError(f"unknown pmg_coarse_op {self.pmg_coarse_op!r}")
+            bad(f"unknown pmg_coarse_op {self.pmg_coarse_op!r}")
+        if self.pmg_coarse_iters < 1:
+            bad(f"pmg_coarse_iters must be >= 1, got {self.pmg_coarse_iters}")
+        if self.precond == "pmg" and self.n_degree < 2:
+            bad(
+                "precond='pmg' needs n_degree >= 2 — the degree ladder "
+                f"N → ⌈N/2⌉ → … → 1 has a single level at N={self.n_degree}"
+            )
+        if not 0 <= self.schwarz_overlap <= max(self.n_degree - 1, 0):
+            bad(
+                f"schwarz_overlap must be in [0, n_degree-1] = "
+                f"[0, {self.n_degree - 1}], got {self.schwarz_overlap} "
+                "(the overlap shell cannot exceed one element's interior)"
+            )
+        if self.schwarz_inner_degree < 1:
+            bad(
+                f"schwarz_inner_degree must be >= 1, "
+                f"got {self.schwarz_inner_degree}"
+            )
         if self.precond_dtype not in (None, "float32", "float64"):
-            raise ValueError(f"unknown precond_dtype {self.precond_dtype!r}")
+            bad(f"unknown precond_dtype {self.precond_dtype!r}")
+        if self.precond_dtype is not None and self.precond == "none":
+            bad(
+                "precond_dtype set with precond='none' — there is no "
+                "preconditioner chain to cast; drop precond_dtype or pick "
+                "a rung"
+            )
         if self.cg_variant not in ("standard", "flexible"):
-            raise ValueError(f"unknown cg_variant {self.cg_variant!r}")
-        if self.fused_operator not in (None, True, False):
-            raise ValueError(
+            bad(f"unknown cg_variant {self.cg_variant!r}")
+        if not isinstance(self.fused_operator, (bool, type(None))):
+            bad(
                 f"fused_operator must be None/True/False, "
                 f"got {self.fused_operator!r}"
+            )
+        if self.divergence_factor is not None and not self.divergence_factor > 1:
+            bad(
+                f"divergence_factor must be > 1 (or None to disable), "
+                f"got {self.divergence_factor}"
+            )
+        if self.stagnation_window is not None and self.stagnation_window < 1:
+            bad(
+                f"stagnation_window must be >= 1 (or None to disable), "
+                f"got {self.stagnation_window}"
+            )
+        if not 0 < self.stagnation_rtol <= 1:
+            bad(
+                f"stagnation_rtol must be in (0, 1], "
+                f"got {self.stagnation_rtol}"
+            )
+        if (
+            self.precond_dtype is not None
+            and self.precond_dtype != self.dtype
+            and self.cg_variant == "standard"
+        ):
+            warnings.warn(
+                f"PoissonConfig {self.name!r}: precond_dtype="
+                f"{self.precond_dtype!r} with cg_variant='standard' — the "
+                "narrowed M⁻¹ is only approximately symmetric in the solve "
+                "dtype, which the Fletcher–Reeves β assumes exactly; use "
+                "cg_variant='flexible' (see ConfigWarning)",
+                ConfigWarning,
+                stacklevel=3,
             )
 
     def dofs_per_rank(self) -> int:

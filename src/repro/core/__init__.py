@@ -7,9 +7,18 @@ paper's FOM/roofline models.
 from .cg import (
     CG_VARIANTS,
     CGResult,
+    SolveStatus,
     cg_assembled,
     cg_scattered,
     fused_residual_update,
+    status_name,
+)
+from .resilience import (
+    PRECOND_DOWNGRADE,
+    FallbackResult,
+    SolveAttempt,
+    run_fallback_chain,
+    solve_with_fallback,
 )
 from .fom import (
     TPU_V5E,

@@ -25,6 +25,20 @@ so a single compiled program covers the whole benchmark; passing ``tol``
 switches to ``lax.while_loop`` stopping at ‖r‖ ≤ tol·‖r₀‖ (capped at
 ``n_iter``), with ``CGResult.iterations`` reporting the count actually run.
 
+Solver guardrails: every iteration the loop inspects the scalars it already
+reduces (p·Ap, r·z, r·r) for breakdown — NaN/Inf residual, indefinite
+curvature (p·Ap ≤ 0) or indefinite preconditioner (r·z < 0), divergence
+(rdotr > ``divergence_factor`` · rdotr₀) and stagnation (no relative
+reduction of the best-seen rdotr by ``stagnation_rtol`` within
+``stagnation_window`` iterations).  In tolerance mode a tripped detector
+exits the while-loop on that iteration; in fixed-count mode (no early exit
+under ``lax.scan``) the first failure is recorded and reported.  Every
+detector input is an already-allreduced scalar, so under ``shard_map`` all
+replicas see the same flag and exit on the same iteration — no extra
+collective is added, and a healthy solve runs the exact same iterations as
+before.  The outcome is ``CGResult.status``, a jit-safe ``SolveStatus``
+code (see its docstring for the enum contract).
+
 CG variants: the default ``cg_variant="standard"`` uses the Fletcher–Reeves
 β = (r·z)_new/(r·z)_old, which assumes M⁻¹ is a *fixed symmetric* linear
 map.  ``cg_variant="flexible"`` switches β to the Polak–Ribière form
@@ -37,6 +51,7 @@ length-2 payload.
 """
 from __future__ import annotations
 
+import enum
 from typing import Callable, NamedTuple
 
 import jax
@@ -45,18 +60,78 @@ import jax.numpy as jnp
 __all__ = [
     "CGResult",
     "CG_VARIANTS",
+    "DIVERGENCE_FACTOR",
+    "STAGNATION_RTOL",
+    "STAGNATION_WINDOW",
+    "SolveStatus",
     "cg_assembled",
     "cg_scattered",
     "fused_residual_update",
+    "status_name",
 ]
 
 CG_VARIANTS = ("standard", "flexible")
+
+# Detector defaults (override per solve; None disables that detector).
+# divergence: rdotr is the *squared* residual norm, so 1e6 means the
+# residual grew 1000× over r₀ — far outside healthy CG oscillation (which
+# stays within ~√cond(A) of r₀) and small enough to outrace the stagnation
+# window on an exponentially blowing-up solve.
+# stagnation: a healthy tol-mode solve reduces its best-seen rdotr by ≫1 %
+# well within any 50-iteration window; a solve pinned at a noise floor
+# (corrupted operator bits, rank-deficient M⁻¹) does not.
+DIVERGENCE_FACTOR = 1e6
+STAGNATION_WINDOW = 50
+STAGNATION_RTOL = 0.99
+
+# in-loop sentinel; never escapes into CGResult.status
+_RUNNING = -1
+
+
+class SolveStatus(enum.IntEnum):
+    """Terminal state of a (P)CG solve — `CGResult.status`.
+
+    * ``CONVERGED`` — ‖r‖ ≤ tol·‖r₀‖ (tolerance mode), including the
+      rdotr₀ = 0 edge case (zero RHS / exact x₀: 0 iterations).
+    * ``MAX_ITER`` — the iteration budget ran out before the tolerance was
+      met.  In fixed-count mode (``tol=None``) there is no tolerance to
+      certify, so MAX_ITER is the *normal* completion status there (unless
+      rdotr₀ = 0, which still reports CONVERGED at 0 iterations).
+    * ``BREAKDOWN_NAN`` — a non-finite reduction scalar (NaN/Inf residual
+      or p·Ap): bit corruption, overflow, or a NaN in the operator chain.
+    * ``BREAKDOWN_INDEFINITE`` — p·Ap ≤ 0 (operator not positive-definite
+      on the Krylov space) or r·z < 0 (preconditioner not positive-
+      definite, e.g. a sign-flipped M⁻¹).
+    * ``STAGNATED`` — best-seen rdotr not reduced by ``stagnation_rtol``
+      for ``stagnation_window`` consecutive iterations (tolerance mode
+      only).
+    * ``DIVERGED`` — rdotr > ``divergence_factor`` · rdotr₀ (tolerance
+      mode only).  ``divergence_factor`` applies to rdotr, the *squared*
+      residual norm.
+
+    Codes are small non-negative ints carried through jit as int32;
+    ``status_name`` maps a code to its lowercase wire name (the form
+    benchmark records and logs use).
+    """
+
+    CONVERGED = 0
+    MAX_ITER = 1
+    BREAKDOWN_NAN = 2
+    BREAKDOWN_INDEFINITE = 3
+    STAGNATED = 4
+    DIVERGED = 5
+
+
+def status_name(code: int | jax.Array) -> str:
+    """Lowercase wire name of a `SolveStatus` code (e.g. ``"converged"``)."""
+    return SolveStatus(int(code)).name.lower()
 
 
 class CGResult(NamedTuple):
     x: jax.Array
     rdotr: jax.Array
     iterations: jax.Array
+    status: jax.Array
     rdotr_history: jax.Array | None
 
 
@@ -94,6 +169,9 @@ def _pcg(
     fused_precond_dot: Callable[..., tuple[jax.Array, jax.Array]] | None,
     record_history: bool,
     variant: str = "standard",
+    divergence_factor: float | None = DIVERGENCE_FACTOR,
+    stagnation_window: int | None = STAGNATION_WINDOW,
+    stagnation_rtol: float = STAGNATION_RTOL,
 ) -> CGResult:
     if variant not in CG_VARIANTS:
         raise ValueError(
@@ -136,6 +214,35 @@ def _pcg(
         rz = allsum(rz_local)
     p = z
 
+    # Guardrails: status codes as int32 scalars so they live in the loop
+    # carry.  Detector inputs (pap, rz, rdotr) are already allreduced, so
+    # under shard_map every replica computes the same flag — replicas stay
+    # in lockstep with zero added collectives.
+    run = jnp.asarray(_RUNNING, jnp.int32)
+    converged = jnp.asarray(SolveStatus.CONVERGED, jnp.int32)
+    max_iter_ = jnp.asarray(SolveStatus.MAX_ITER, jnp.int32)
+    nan_code = jnp.asarray(SolveStatus.BREAKDOWN_NAN, jnp.int32)
+    indef_code = jnp.asarray(SolveStatus.BREAKDOWN_INDEFINITE, jnp.int32)
+
+    def detect(pap, rz_new, rdotr_pre, rdotr_new):
+        """NaN/indefinite breakdown code for one iteration, else _RUNNING.
+
+        ``rdotr_pre > 0`` guards the indefinite test: a fixed-count solve
+        keeps stepping after convergence with p ≈ 0, where p·Ap = 0 is not
+        a breakdown.
+        """
+        bad = ~jnp.isfinite(rdotr_new) | ~jnp.isfinite(pap)
+        indef = ((pap <= 0) | (rz_new < 0)) & (rdotr_pre > 0)
+        return jnp.where(bad, nan_code, jnp.where(indef, indef_code, run))
+
+    # pre-loop breakdowns: non-finite b/x0/operator, or an indefinite M⁻¹
+    # visible in r·M⁻¹r before the first step
+    status0 = jnp.where(
+        ~jnp.isfinite(rdotr0),
+        nan_code,
+        jnp.where(rz < 0, indef_code, run),
+    )
+
     def step(x, r, p, rz, rdotr):
         ap = operator(p)
         pap = allsum(_dot(p, ap, weight))
@@ -164,21 +271,33 @@ def _pcg(
             rz_new = allsum(rz_local)
             beta = _safe_div(rz_new, rz)
         p_new = z_new + beta * p
-        return x_new, r_new, p_new, rz_new, rdotr_new
+        fail = detect(pap, rz_new, rdotr, rdotr_new)
+        return x_new, r_new, p_new, rz_new, rdotr_new, fail
+
+    zero_rhs = rdotr0 == 0
 
     if tol is None:
+        # lax.scan cannot exit early (and the sharded fixed-count path
+        # relies on scan for shard_map's check_rep) — record the *first*
+        # breakdown and keep stepping; _safe_div keeps the post-breakdown
+        # arithmetic inert where it can.
         def body(carry, _):
-            x, r, p, rz, rdotr = carry
-            carry = step(x, r, p, rz, rdotr)
-            return carry, carry[-1]
+            x, r, p, rz, rdotr, status = carry
+            x, r, p, rz, rdotr, fail = step(x, r, p, rz, rdotr)
+            status = jnp.where(status == run, fail, status)
+            return (x, r, p, rz, rdotr, status), rdotr
 
-        (x, r, p, rz, rdotr), hist = jax.lax.scan(
-            body, (x, r, p, rz, rdotr0), None, length=n_iter
+        (x, r, p, rz, rdotr, status), hist = jax.lax.scan(
+            body, (x, r, p, rz, rdotr0, status0), None, length=n_iter
+        )
+        status = jnp.where(
+            status == run, jnp.where(zero_rhs, converged, max_iter_), status
         )
         return CGResult(
             x=x,
             rdotr=rdotr,
-            iterations=jnp.asarray(n_iter),
+            iterations=jnp.where(zero_rhs, 0, n_iter),
+            status=status,
             rdotr_history=hist if record_history else None,
         )
 
@@ -186,25 +305,54 @@ def _pcg(
     # (and its per-iteration scatter) only enters the carry when asked for
     target = jnp.asarray(tol, rdotr0.dtype) ** 2 * rdotr0
     hist0 = (jnp.zeros((n_iter,), rdotr0.dtype),) if record_history else ()
+    diverged_code = jnp.asarray(SolveStatus.DIVERGED, jnp.int32)
+    stagnated_code = jnp.asarray(SolveStatus.STAGNATED, jnp.int32)
 
     def cond(carry):
-        rdotr, k = carry[4], carry[5]
-        return (k < n_iter) & (rdotr > target)
+        rdotr, k, status = carry[4], carry[5], carry[6]
+        return (k < n_iter) & (rdotr > target) & (status == run)
 
     def wbody(carry):
-        x, r, p, rz, rdotr, k = carry[:6]
-        x, r, p, rz, rdotr = step(x, r, p, rz, rdotr)
-        hist = (carry[6].at[k].set(rdotr),) if record_history else ()
-        return (x, r, p, rz, rdotr, k + 1) + hist
+        x, r, p, rz, rdotr, k, status, best, since = carry[:9]
+        x, r, p, rz, rdotr_new, fail = step(x, r, p, rz, rdotr)
+        if divergence_factor is not None:
+            div = rdotr_new > jnp.asarray(
+                divergence_factor, rdotr0.dtype
+            ) * rdotr0
+            fail = jnp.where((fail == run) & div, diverged_code, fail)
+        if stagnation_window is not None:
+            improved = rdotr_new < jnp.asarray(
+                stagnation_rtol, rdotr0.dtype
+            ) * best
+            since = jnp.where(improved, 0, since + 1)
+            best = jnp.minimum(best, rdotr_new)
+            fail = jnp.where(
+                (fail == run) & (since >= stagnation_window),
+                stagnated_code,
+                fail,
+            )
+        # cond guarantees status == run on entry, so fail IS the new status
+        hist = (carry[9].at[k].set(rdotr_new),) if record_history else ()
+        return (x, r, p, rz, rdotr_new, k + 1, fail, best, since) + hist
 
     out = jax.lax.while_loop(
-        cond, wbody, (x, r, p, rz, rdotr0, jnp.asarray(0)) + hist0
+        cond,
+        wbody,
+        (x, r, p, rz, rdotr0, jnp.asarray(0), status0, rdotr0,
+         jnp.asarray(0)) + hist0,
+    )
+    rdotr, k, status = out[4], out[5], out[6]
+    status = jnp.where(
+        status == run,
+        jnp.where(rdotr <= target, converged, max_iter_),
+        status,
     )
     return CGResult(
         x=out[0],
-        rdotr=out[4],
-        iterations=out[5],
-        rdotr_history=out[6] if record_history else None,
+        rdotr=rdotr,
+        iterations=k,
+        status=status,
+        rdotr_history=out[9] if record_history else None,
     )
 
 
@@ -221,6 +369,9 @@ def cg_assembled(
     fused_precond_dot: Callable[..., tuple[jax.Array, jax.Array]] | None = None,
     record_history: bool = False,
     cg_variant: str = "standard",
+    divergence_factor: float | None = DIVERGENCE_FACTOR,
+    stagnation_window: int | None = STAGNATION_WINDOW,
+    stagnation_rtol: float = STAGNATION_RTOL,
 ) -> CGResult:
     """hipBone (P)CG on assembled (length N_G) vectors; unweighted dots.
 
@@ -231,6 +382,13 @@ def cg_assembled(
     ``cg_variant``: "standard" (Fletcher–Reeves β, exact-symmetric M⁻¹) or
     "flexible" (Polak–Ribière β, robust to inexactly-symmetric appliers
     such as mixed-precision preconditioners — see module docstring).
+
+    Guardrail knobs (see `SolveStatus` and the module docstring):
+    ``divergence_factor`` trips DIVERGED at rdotr > factor·rdotr₀ and
+    ``stagnation_window``/``stagnation_rtol`` trip STAGNATED after a
+    window without relative progress — both tolerance-mode only; pass
+    None to disable either detector.  NaN and indefinite breakdown
+    detection is always on.  The outcome lands in ``CGResult.status``.
     """
     return _pcg(
         operator,
@@ -245,6 +403,9 @@ def cg_assembled(
         fused_precond_dot=fused_precond_dot,
         record_history=record_history,
         variant=cg_variant,
+        divergence_factor=divergence_factor,
+        stagnation_window=stagnation_window,
+        stagnation_rtol=stagnation_rtol,
     )
 
 
@@ -260,6 +421,9 @@ def cg_scattered(
     precond: Callable[[jax.Array], jax.Array] | None = None,
     record_history: bool = False,
     cg_variant: str = "standard",
+    divergence_factor: float | None = DIVERGENCE_FACTOR,
+    stagnation_window: int | None = STAGNATION_WINDOW,
+    stagnation_rtol: float = STAGNATION_RTOL,
 ) -> CGResult:
     """NekBone baseline (P)CG on scattered (length N_L) vectors; weighted dots."""
     return _pcg(
@@ -275,4 +439,7 @@ def cg_scattered(
         fused_precond_dot=None,
         record_history=record_history,
         variant=cg_variant,
+        divergence_factor=divergence_factor,
+        stagnation_window=stagnation_window,
+        stagnation_rtol=stagnation_rtol,
     )

@@ -48,7 +48,13 @@ from ..comms.halo import (
 from ..comms.topology import ProcessGrid
 from ..compat import shard_map
 from . import sem
-from .cg import CG_VARIANTS, _pcg
+from .cg import (
+    CG_VARIANTS,
+    DIVERGENCE_FACTOR,
+    STAGNATION_RTOL,
+    STAGNATION_WINDOW,
+    _pcg,
+)
 from .galerkin import block_matvec_einsum, galerkin_ladder_blocks
 from .geometry import geometric_factors_from_coords
 from .operator import local_poisson
@@ -902,6 +908,10 @@ def dist_cg(
     fused_operator: bool | None = None,
     two_phase: bool = False,
     record_history: bool = False,
+    divergence_factor: float | None = DIVERGENCE_FACTOR,
+    stagnation_window: int | None = STAGNATION_WINDOW,
+    stagnation_rtol: float = STAGNATION_RTOL,
+    per_rank_stats: bool = False,
 ):
     """Distributed hipBone (P)CG over the device mesh.
 
@@ -964,6 +974,16 @@ def dist_cg(
         their traffic is not the Eq. 4 bound this kernel targets.
       two_phase: paper-faithful two-phase exchange instead of the fused one.
       record_history: carry the per-iteration ‖r‖² history buffer.
+      divergence_factor / stagnation_window / stagnation_rtol: in-loop
+        breakdown-detector knobs (see ``core.cg.SolveStatus``); every
+        detector input is one of the already-psum'd recurrence scalars, so
+        the failure flag is replica-consistent by construction and all
+        ranks exit the tolerance-mode loop on the same iteration with the
+        same status — no extra collective rides the loop.
+      per_rank_stats: return ``iterations`` and ``status`` as per-rank
+        (R,)-sharded arrays instead of replicated scalars — observability
+        hook for asserting the lockstep-exit property (the slow halo-
+        corruption test uses it); the values are identical across ranks.
 
     The Jacobi diagonal is assembled in padded-box storage — local element
     diagonals gathered with Z_loc^T then made consistent by one
@@ -988,8 +1008,10 @@ def dist_cg(
     full-interval degree-``pmg_coarse_iters`` Chebyshev.
 
     Returns:
-      A jitted-callable partial () -> (x, rdotr, iterations, history), also
-      usable for dry-run lowering via ``jax.jit(run.func).lower(*run.args)``.
+      A jitted-callable partial () -> (x, rdotr, iterations, status,
+      history) — ``status`` is the jit-safe ``core.cg.SolveStatus`` code —
+      also usable for dry-run lowering via
+      ``jax.jit(run.func).lower(*run.args)``.
     """
     if precond not in PRECOND_KINDS:
         raise ValueError(f"unknown precond {precond!r}; choose from {PRECOND_KINDS}")
@@ -1239,15 +1261,24 @@ def dist_cg(
             fused_precond_dot=None,
             record_history=record_history,
             variant=cg_variant,
+            divergence_factor=divergence_factor,
+            stagnation_window=stagnation_window,
+            stagnation_rtol=stagnation_rtol,
         )
         hist = res.rdotr_history
+        iters = jnp.asarray(res.iterations)
+        status = jnp.asarray(res.status)
+        if per_rank_stats:
+            iters, status = iters[None], status[None]
         return (
             res.x[None],
             res.rdotr,
-            jnp.asarray(res.iterations),
+            iters,
+            status,
             hist if hist is not None else jnp.zeros((hist_len,), b1.dtype),
         )
 
+    stat_spec = spec if per_rank_stats else P()
     fn = shard_map(
         shard_fn,
         mesh=mesh,
@@ -1256,7 +1287,7 @@ def dist_cg(
             tuple(tuple(spec for _ in entry) for entry in pmg_data),
             tuple(tuple(spec for _ in lvl) for lvl in schwarz_data),
         ),
-        out_specs=(spec, P(), P(), P()),
+        out_specs=(spec, P(), stat_spec, stat_spec, P()),
         # old jax's check_rep has no rule for while_loop (tol mode) and
         # cannot type the Lanczos/power-iteration carries (in-graph spectrum
         # estimation); keep the guard wherever it can actually run — its
@@ -1284,6 +1315,9 @@ def dist_cg_scattered(
     precond_dtype: Any = None,
     cg_variant: str = "standard",
     local_op: Callable[..., jax.Array] | None = None,
+    divergence_factor: float | None = DIVERGENCE_FACTOR,
+    stagnation_window: int | None = STAGNATION_WINDOW,
+    stagnation_rtol: float = STAGNATION_RTOL,
 ):
     """Distributed NekBone baseline: scattered (R, E_loc, p) vectors.
 
@@ -1314,8 +1348,11 @@ def dist_cg_scattered(
     weighted-dot PCG remains valid.
 
     Returns:
-      A jitted-callable partial () -> (x, rdotr, iterations) — note the
-      3-tuple, unlike :func:`dist_cg`'s 4-tuple with history.
+      A jitted-callable partial () -> (x, rdotr, iterations, status) — note
+      the 4-tuple, unlike :func:`dist_cg`'s 5-tuple with history.
+      ``status`` is the ``core.cg.SolveStatus`` code; the detector knobs
+      (``divergence_factor`` / ``stagnation_window`` / ``stagnation_rtol``)
+      behave as in :func:`dist_cg`.
     """
     if precond not in ("none", "jacobi", "chebyshev"):
         raise ValueError(
@@ -1416,14 +1453,22 @@ def dist_cg_scattered(
             fused_precond_dot=None,
             record_history=False,
             variant=cg_variant,
+            divergence_factor=divergence_factor,
+            stagnation_window=stagnation_window,
+            stagnation_rtol=stagnation_rtol,
         )
-        return res.x[None], res.rdotr, jnp.asarray(res.iterations)
+        return (
+            res.x[None],
+            res.rdotr,
+            jnp.asarray(res.iterations),
+            jnp.asarray(res.status),
+        )
 
     fn = shard_map(
         shard_fn,
         mesh=mesh,
         in_specs=(spec, spec, spec, spec),
-        out_specs=(spec, P(), P()),
+        out_specs=(spec, P(), P(), P()),
         # same check_rep caveats as dist_cg: while_loop (tol mode) and the
         # Lanczos carry have no replication rule on old jax
         check_rep=tol is None and not need_lanczos,

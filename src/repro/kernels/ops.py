@@ -10,6 +10,7 @@ on a real TPU backend it compiles via Mosaic.
 from __future__ import annotations
 
 import os
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -36,6 +37,7 @@ __all__ = [
     "fused_override",
     "should_fuse_streams",
     "should_fuse_operator",
+    "probe_fused_operator",
     "poisson_local",
     "poisson_assembled_fused",
     "make_poisson_assembled_fused",
@@ -89,6 +91,72 @@ def should_fuse_streams(dtype) -> bool:
     return (not default_interpret()) and jnp.dtype(dtype) == jnp.float32
 
 
+# probe_fused_operator state: verdict per (n_degree, n_global, dtype,
+# gather_mode) so the lowering attempt and its warning happen once per
+# shape.  _FUSED_PROBE_FAIL is the fault-injection hook
+# (repro.testing.faults.force_fused_failure) standing in for a real
+# Mosaic/VMEM failure, which needs TPU hardware to reproduce.
+_FUSED_PROBE_CACHE: dict[tuple, bool] = {}
+_FUSED_PROBE_FAIL = False
+
+
+def probe_fused_operator(
+    n_degree: int, n_global: int, dtype, *, gather_mode: str = "take"
+) -> bool:
+    """Can the fused assembled kernel actually lower for this shape?
+
+    ``should_fuse_operator``'s static policy (backend + VMEM model) can be
+    wrong on shapes the model was never calibrated for; a policy mistake
+    used to surface as a Pallas lowering / Mosaic VMEM-exhaustion crash in
+    the middle of the user's jit.  This probe attempts the lowering once
+    per shape on abstract operands (and, on a native backend, the Mosaic
+    compile — that is where VMEM overflows are raised), caches the
+    verdict, and turns a failure into a one-time warning + ``False`` so
+    callers degrade to the split scatter→local-op→gather pipeline instead
+    of crashing.
+    """
+    key = (int(n_degree), int(n_global), jnp.dtype(dtype).name, gather_mode)
+    cached = _FUSED_PROBE_CACHE.get(key)
+    if cached is not None:
+        return cached
+    n1 = n_degree + 1
+    p = n1**3
+    eb = max(1, pick_fused_block_e(n_degree, n_global, dtype))
+    try:
+        if _FUSED_PROBE_FAIL:
+            raise RuntimeError(
+                "forced fused-operator failure (repro.testing.faults)"
+            )
+        # one grid block's worth of elements exercises the kernel's full
+        # VMEM residency (field block + element streams)
+        args = (
+            jax.ShapeDtypeStruct((int(n_global),), jnp.dtype(dtype)),
+            jax.ShapeDtypeStruct((eb, p), jnp.int32),
+            jax.ShapeDtypeStruct((eb, 6, p), jnp.dtype(dtype)),
+            jax.ShapeDtypeStruct((eb, p), jnp.dtype(dtype)),
+            jax.ShapeDtypeStruct((n1, n1), jnp.dtype(dtype)),
+        )
+        fn = lambda x, l2g, g, w, d: poisson_assembled_fused(
+            x, l2g, g, w, d, lam=1.0, gather_mode=gather_mode
+        )
+        lowered = jax.jit(fn).lower(*args)
+        if not default_interpret():
+            lowered.compile()
+        ok = True
+    except Exception as exc:  # noqa: BLE001 — any lowering failure degrades
+        warnings.warn(
+            f"fused assembled operator failed to lower for N={n_degree}, "
+            f"n_global={n_global}, dtype={jnp.dtype(dtype).name} "
+            f"({type(exc).__name__}: {exc}); falling back to the split "
+            "scatter/local-op/gather pipeline for this shape",
+            RuntimeWarning,
+            stacklevel=2,
+        )
+        ok = False
+    _FUSED_PROBE_CACHE[key] = ok
+    return ok
+
+
 def should_fuse_operator(
     dtype, *, n_degree: int | None = None, n_global: int | None = None
 ) -> bool:
@@ -101,15 +169,25 @@ def should_fuse_operator(
     ``promote_types(dtype, f32)``, preserving fp64 semantics bit-for-bit at
     the summation-order level.  ``HIPBONE_FUSED`` (``fused_override``)
     forces the choice either way, including through interpret mode.
+
+    Graceful degradation: whenever the answer would be True and the shape
+    is known, ``probe_fused_operator`` verifies the kernel actually lowers
+    (cached, once per shape) — a lowering/VMEM failure demotes the answer
+    to False with a warning instead of crashing the solve, including under
+    ``HIPBONE_FUSED=1``.
     """
     ov = fused_override()
     if ov is not None:
-        return ov
-    if default_interpret():
+        enable = ov
+    elif default_interpret():
         return False  # interpret-mode gather/scatter is slower than XLA's
-    if n_degree is not None and n_global is not None:
-        return fused_fits_vmem(n_degree, n_global, dtype)
-    return True
+    elif n_degree is not None and n_global is not None:
+        enable = fused_fits_vmem(n_degree, n_global, dtype)
+    else:
+        enable = True
+    if enable and n_degree is not None and n_global is not None:
+        enable = probe_fused_operator(n_degree, n_global, dtype)
+    return enable
 
 
 def _pad_rows(x: jax.Array, multiple: int) -> tuple[jax.Array, int]:

@@ -1,0 +1,25 @@
+"""repro.testing — fault-injection and test-support utilities.
+
+Not imported by any solver path; tests (and chaos-style soak scripts) use
+these to prove the guardrails in `repro.core.cg` / `repro.core.resilience`
+actually fire and recover.  See `repro.testing.faults`.
+"""
+from .faults import (
+    corrupt_wire,
+    force_fused_failure,
+    mask_precond,
+    nan_at_iteration,
+    negate_precond,
+    on_attempt,
+    skew_operator,
+)
+
+__all__ = [
+    "corrupt_wire",
+    "force_fused_failure",
+    "mask_precond",
+    "nan_at_iteration",
+    "negate_precond",
+    "on_attempt",
+    "skew_operator",
+]

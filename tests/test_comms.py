@@ -129,14 +129,14 @@ def box_from_global(vec):
         out[r] = vec[gidx.transpose(2,1,0).reshape(-1)]
     return out
 b_boxes = jnp.asarray(box_from_global(bg))
-x_boxes, rdotr, iters, hist = jax.jit(dist_cg(prob, mesh, b_boxes, n_iter=150))()
+x_boxes, rdotr, iters, status, hist = jax.jit(dist_cg(prob, mesh, b_boxes, n_iter=150))()
 res = cg_assembled(A, jnp.asarray(bg), n_iter=150)
 err = np.abs(np.array(x_boxes) - box_from_global(np.array(res.x))).max()
 assert err < 1e-9, err
 # scattered baseline
 bL = jnp.take(b_boxes, jnp.asarray(prob.l2g.reshape(-1)), axis=1).reshape(
     grid.size, prob.e_local, -1)
-xl, rd2, _it = jax.jit(dist_cg_scattered(prob, mesh, bL, n_iter=150))()
+xl, rd2, _it, _st = jax.jit(dist_cg_scattered(prob, mesh, bL, n_iter=150))()
 xl_ref = jnp.take(jnp.asarray(box_from_global(np.array(res.x))),
                   jnp.asarray(prob.l2g.reshape(-1)), axis=1).reshape(xl.shape)
 assert np.abs(np.array(xl) - np.array(xl_ref)).max() < 1e-9

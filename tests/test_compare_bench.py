@@ -171,6 +171,61 @@ def test_new_and_removed_cases_report_only(tmp_path):
     assert cb.main([b, c]) == 0
 
 
+def test_candidate_non_converged_status_fails(tmp_path, capsys):
+    """Satellite: a gated row that did not CONVERGE is not a benchmark
+    number — it fails outright even with identical iteration counts."""
+    b = _write(
+        tmp_path, "a.json", {"precond_records": [_prec(3, "jacobi", 20)]}
+    )
+    row = _prec(3, "jacobi", 20)
+    row["status"] = "max_iter"
+    c = _write(tmp_path, "b.json", {"precond_records": [row]})
+    assert cb.main([b, c]) == 1
+    assert "status=max_iter" in capsys.readouterr().out
+    # slack does not excuse a failed solve
+    assert cb.main([b, c, "--slack", "100"]) == 1
+
+
+def test_candidate_converged_status_passes(tmp_path):
+    b = _write(
+        tmp_path, "a.json", {"precond_records": [_prec(3, "jacobi", 20)]}
+    )
+    row = _prec(3, "jacobi", 20)
+    row["status"] = "converged"
+    c = _write(tmp_path, "b.json", {"precond_records": [row]})
+    assert cb.main([b, c]) == 0
+
+
+def test_missing_status_is_legacy_converged(tmp_path):
+    """Rows without a status field (pre-guardrail jsons, fig3's operator
+    rows) are treated as converged — schema growth never breaks old
+    baselines."""
+    s = {
+        "precond_records": [_prec(3, "jacobi", 20)],
+        "fig3_records": [_fig3(3, 40.0)],
+    }
+    b = _write(tmp_path, "a.json", s)
+    c = _write(tmp_path, "b.json", s)
+    assert cb.main([b, c]) == 0
+
+
+def test_non_converged_new_case_also_fails(tmp_path, capsys):
+    """The status gate covers candidate-only (new) rows too, not just the
+    shared comparison set."""
+    b = _write(
+        tmp_path, "a.json", {"precond_records": [_prec(3, "jacobi", 20)]}
+    )
+    new_row = _prec(3, "schwarz", 500)
+    new_row["status"] = "stagnated"
+    c = _write(
+        tmp_path,
+        "b.json",
+        {"precond_records": [_prec(3, "jacobi", 20), new_row]},
+    )
+    assert cb.main([b, c]) == 1
+    assert "status=stagnated" in capsys.readouterr().out
+
+
 def test_legacy_load_records_missing_section(tmp_path):
     p = _write(tmp_path, "a.json", {"sections": {}})
     with pytest.raises(SystemExit):

@@ -184,7 +184,7 @@ runs = {}
 for fused in (False, True):
     run = jax.jit(dist_cg(prob, mesh, b, n_iter=40, tol=1e-6,
                           precond="jacobi", fused_operator=fused))
-    x, rr, iters, hist = run()
+    x, rr, iters, status, hist = run()
     runs[fused] = (np.asarray(x), int(iters))
 assert runs[True][1] == runs[False][1], runs
 np.testing.assert_allclose(runs[True][0], runs[False][0], rtol=1e-6)

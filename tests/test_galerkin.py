@@ -307,7 +307,7 @@ for pdtype, variant in ((None, "standard"), (jnp.float32, "flexible")):
     run = jax.jit(dist_cg(prob, mesh, b_boxes, n_iter=200, tol=1e-10,
                           precond="pmg", pmg_coarse_op="galerkin_mat",
                           precond_dtype=pdtype, cg_variant=variant))
-    x_boxes, rdotr, iters, hist = run()
+    x_boxes, rdotr, iters, status, hist = run()
     assert int(iters) < 200, int(iters)
     pc, info = make_preconditioner("pmg", ref, A,
                                    pmg_coarse_op="galerkin_mat",
@@ -321,7 +321,7 @@ for pdtype, variant in ((None, "standard"), (jnp.float32, "flexible")):
     it_mat[pdtype] = int(iters)
 run = jax.jit(dist_cg(prob, mesh, b_boxes, n_iter=200, tol=1e-10,
                       precond="pmg"))
-_, _, it_redisc, _ = run()
+_, _, it_redisc, _, _ = run()
 assert it_mat[None] < int(it_redisc), (it_mat, int(it_redisc))
 print("OK", it_mat, int(it_redisc))
 """

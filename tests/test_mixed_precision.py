@@ -386,7 +386,8 @@ for kind in ("jacobi", "chebyshev", "pmg"):
     run = jax.jit(dist_cg(prob, mesh, b_boxes, n_iter=200, tol=1e-10,
                           precond=kind, cheb_degree=2,
                           precond_dtype=jnp.float32, cg_variant="flexible"))
-    x_boxes, rdotr, iters, hist = run()
+    x_boxes, rdotr, iters, status, hist = run()
+    assert int(status) == 0, (kind, int(status))  # SolveStatus.CONVERGED
     assert int(iters) < 200, (kind, int(iters))
     pc, info = make_preconditioner(kind, ref, A, degree=2,
                                    precond_dtype=jnp.float32)
@@ -443,7 +444,7 @@ for overlap in (0, 1, 2):
     run = jax.jit(dist_cg(prob, mesh, b_boxes, n_iter=200, tol=1e-10,
                           precond="schwarz", schwarz_overlap=overlap,
                           precond_dtype=jnp.float32, cg_variant="flexible"))
-    x_boxes, rdotr, iters, hist = run()
+    x_boxes, rdotr, iters, status, hist = run()
     assert int(iters) < 200, int(iters)
     pc, _ = make_preconditioner("schwarz", ref, A, schwarz_overlap=overlap,
                                 precond_dtype=jnp.float32)

@@ -190,7 +190,7 @@ def box_from_global(vec):
     return out
 b_boxes = jnp.asarray(box_from_global(bg))
 run = jax.jit(dist_cg(prob, mesh, b_boxes, n_iter=200, tol=1e-10, precond="pmg"))
-x_boxes, rdotr, iters, hist = run()
+x_boxes, rdotr, iters, status, hist = run()
 assert int(iters) < 200, int(iters)
 pc, _ = make_preconditioner("pmg", ref, A)
 res = cg_assembled(A, jnp.asarray(bg), n_iter=200, tol=1e-10, precond=pc)
@@ -233,7 +233,7 @@ b = jnp.asarray(rng.standard_normal((8, prob.m3)))
 it = {}
 for kind in ("none", "chebyshev", "pmg"):
     run = jax.jit(dist_cg(prob, mesh, b, n_iter=300, tol=1e-8, precond=kind))
-    x, rdotr, iters, hist = run()
+    x, rdotr, iters, status, hist = run()
     assert int(iters) < 300, (kind, int(iters))
     it[kind] = int(iters)
 assert it["pmg"] < it["chebyshev"] < it["none"], it

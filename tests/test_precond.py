@@ -235,7 +235,7 @@ b_boxes = jnp.asarray(box_from_global(bg))
 for kind in ("jacobi", "chebyshev"):
     run = jax.jit(dist_cg(prob, mesh, b_boxes, n_iter=200, tol=1e-10,
                           precond=kind, cheb_degree=2))
-    x_boxes, rdotr, iters, hist = run()
+    x_boxes, rdotr, iters, status, hist = run()
     pc, _ = make_preconditioner(kind, ref, A, degree=2)
     res = cg_assembled(A, jnp.asarray(bg), n_iter=200, tol=1e-10, precond=pc)
     err = np.abs(np.array(x_boxes) - box_from_global(np.array(res.x))).max()
@@ -284,7 +284,7 @@ mesh = make_mesh((8,), ("ranks",))
 prob = build_dist_problem(N, grid, local, lam=0.8, dtype=jnp.float64)
 rng = np.random.default_rng(0)
 b = jnp.asarray(rng.standard_normal((8, prob.m3)))
-xa, rdotr, it_a, hist = jax.jit(dist_cg(
+xa, rdotr, it_a, status_a, hist = jax.jit(dist_cg(
     prob, mesh, b, n_iter=300, tol=1e-10, precond="chebyshev"))()
 l2g = jnp.asarray(prob.l2g.reshape(-1))
 # consistent scattered rhs from the (consistent) assembled solve's b
@@ -300,9 +300,10 @@ b_cons = mk(b)
 bL = jnp.take(b_cons, l2g, axis=1).reshape(8, prob.e_local, -1)
 its = {}
 for kind in ("none", "jacobi", "chebyshev"):
-    xl, rd, its_k = jax.jit(dist_cg_scattered(
+    xl, rd, its_k, st_k = jax.jit(dist_cg_scattered(
         prob, mesh, bL, n_iter=300, tol=1e-10, precond=kind))()
     its[kind] = int(its_k)
+    assert int(st_k) == 0, (kind, int(st_k))  # SolveStatus.CONVERGED
     assert int(its_k) < 300, (kind, int(its_k))
     xl_ref = jnp.take(xa, l2g, axis=1).reshape(xl.shape)
     err = np.abs(np.array(xl) - np.array(xl_ref)).max()
@@ -341,7 +342,7 @@ b = jnp.asarray(rng.standard_normal((8, prob.m3)))
 it = {}
 for kind in ("none", "chebyshev"):
     run = jax.jit(dist_cg(prob, mesh, b, n_iter=300, tol=1e-6, precond=kind))
-    x, rdotr, iters, hist = run()
+    x, rdotr, iters, status, hist = run()
     it[kind] = int(iters)
     assert int(iters) < 300, (kind, int(iters))
 assert it["chebyshev"] < it["none"], it
@@ -351,7 +352,7 @@ from repro.core.distributed import dist_lambda_max, dist_spectrum
 lmin, lmax = dist_spectrum(prob, mesh)
 run = jax.jit(dist_cg(prob, mesh, b, n_iter=300, tol=1e-6,
                       precond="chebyshev", lmin=lmin, lmax=lmax))
-x2, rdotr2, iters2, hist2 = run()
+x2, rdotr2, iters2, status2, hist2 = run()
 assert int(iters2) == it["chebyshev"], (int(iters2), it)
 # legacy power-iteration helper still brackets the Lanczos top estimate
 lam_pow = dist_lambda_max(prob, mesh)

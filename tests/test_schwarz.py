@@ -399,7 +399,7 @@ b_boxes = jnp.asarray(box_from_global(bg))
 for overlap in (0, 1, 2):
     run = jax.jit(dist_cg(prob, mesh, b_boxes, n_iter=200, tol=1e-10,
                           precond="schwarz", schwarz_overlap=overlap))
-    x_boxes, rdotr, iters, hist = run()
+    x_boxes, rdotr, iters, status, hist = run()
     assert int(iters) < 200, int(iters)
     pc, _ = make_preconditioner("schwarz", ref, A, schwarz_overlap=overlap)
     res = cg_assembled(A, jnp.asarray(bg), n_iter=200, tol=1e-10, precond=pc)
@@ -443,7 +443,7 @@ it = {}
 for smoother in ("chebyshev", "schwarz"):
     run = jax.jit(dist_cg(prob, mesh, b, n_iter=300, tol=1e-8, precond="pmg",
                           pmg_smoother=smoother))
-    x, rdotr, iters, hist = run()
+    x, rdotr, iters, status, hist = run()
     assert int(iters) < 300, (smoother, int(iters))
     it[smoother] = int(iters)
 print("OK", it)
