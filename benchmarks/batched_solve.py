@@ -1,0 +1,112 @@
+"""Setup amortization for batched multi-RHS solves (beyond the benchmark).
+
+The serving question hipBone's parent workload (Nek5000/RS time stepping)
+answers every step: given one operator/preconditioner setup, how cheap
+does a solve get when B right-hand sides ride one dispatch?  This
+benchmark drives the :class:`repro.serving.SolverEngine` through a
+B ∈ {1, 4, 16} sweep per preconditioner kind and records, per (N, λ,
+kind, dtype, B) case:
+
+  * ``iters_to_tol`` — the max per-column iteration count (columns stop
+    independently; the max is what bounds the dispatch) and ``status`` —
+    "converged" only if *every* column converged;
+  * ``setup_cache`` / ``setup_s`` — whether this dispatch built the setup
+    or reused it, and what the build cost;
+  * ``solve_s`` / ``per_solve_s`` — batched wall time and its per-column
+    share, the amortization curve (per_solve_s falls as B grows while a
+    single setup serves the whole sweep).
+
+The zero-setup-on-hit contract is *asserted*, not just reported: after
+the sweep the engine's cache counters must show exactly one miss per
+(kind) and hits everywhere else, and every hit row must carry
+``setup_s == 0.0``.  ``scripts/compare_bench.py`` gates the
+``batched_records`` section across PRs on iterations and status.
+"""
+from __future__ import annotations
+
+BATCHES = (1, 4, 16)
+KINDS = ("jacobi", "chebyshev")
+TOL = 1e-6
+LAM = 1.0
+
+
+def records(quick: bool = True) -> list[dict]:
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import build_problem
+    from repro.serving import SolveRequest, SolverEngine, SolverServeConfig
+
+    degrees = [3] if quick else [3, 7]
+    out: list[dict] = []
+    for n in degrees:
+        prob = build_problem(
+            n, (4, 4, 4), lam=LAM, deform=0.15, dtype=jnp.float64
+        )
+        rng = np.random.default_rng(0)
+        engine = SolverEngine(SolverServeConfig(max_batch=max(BATCHES)))
+        for kind in KINDS:
+            for batch in BATCHES:
+                reqs = [
+                    SolveRequest(
+                        prob=prob,
+                        b=jnp.asarray(
+                            rng.standard_normal(prob.n_global), prob.dtype
+                        ),
+                        kind=kind,
+                        tol=TOL,
+                        n_iter=500,
+                    )
+                    for _ in range(batch)
+                ]
+                responses = engine.solve(reqs)
+                rec = engine.records[-1]
+                statuses = {r.status_name for r in responses}
+                out.append(
+                    {
+                        "n": n,
+                        "dofs": prob.n_global,
+                        "lam": LAM,
+                        "kind": kind,
+                        "dtype": "fp64",
+                        "batch": batch,
+                        "iters_to_tol": max(r.iterations for r in responses),
+                        "status": (
+                            "converged"
+                            if statuses == {"converged"}
+                            else sorted(statuses - {"converged"})[0]
+                        ),
+                        "setup_cache": rec["setup_cache"],
+                        "setup_s": rec["setup_build_s"],
+                        "solve_s": rec["solve_s"],
+                        "per_solve_s": rec["per_solve_s"],
+                    }
+                )
+        # the zero-setup contract the docstring promises: one miss per
+        # kind, every other dispatch a hit that rebuilt nothing
+        stats = engine.cache.stats()
+        assert stats["misses"] == len(KINDS), stats
+        assert stats["hits"] == len(KINDS) * (len(BATCHES) - 1), stats
+        for r in out:
+            if r["n"] == n and r["setup_cache"] == "hit":
+                assert r["setup_s"] == 0.0, r
+    return out
+
+
+def rows_from(recs: list[dict]) -> list[str]:
+    rows = ["section,n,kind,batch,iters,status,setup,setup_s,per_solve_s"]
+    for r in recs:
+        rows.append(
+            f"batched,{r['n']},{r['kind']},{r['batch']},{r['iters_to_tol']},"
+            f"{r['status']},{r['setup_cache']},{r['setup_s']:.4f},"
+            f"{r['per_solve_s']:.4f}"
+        )
+    return rows
+
+
+def main(quick: bool = True):
+    return rows_from(records(quick))
+
+
+if __name__ == "__main__":
+    print("\n".join(main(quick=False)))

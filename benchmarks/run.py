@@ -7,12 +7,15 @@
   table2   — peak FOM / weak scaling / NekBone-vs-hipBone (paper Table 2)
   exchange — routing-algorithm selection          (paper §MPI Communication)
   precond  — PCG iterations-to-tolerance + FOM    (beyond the benchmark)
+  batched  — multi-RHS setup amortization sweep   (beyond the benchmark)
 
 ``--only`` takes a comma-separated section list (``--only fig3,precond``).
 
 ``--json PATH`` additionally writes a machine-readable summary: every
-section's raw CSV rows plus the precond sweep (``precond_records``) and
-the fig3 sweep (``fig3_records``) as structured records.  Every record in
+section's raw CSV rows plus the precond sweep (``precond_records``), the
+fig3 sweep (``fig3_records``) and the multi-RHS amortization sweep
+(``batched_records``: per-(N, kind, B) max column iterations, setup-cache
+hit/miss state and per-solve wall share) as structured records.  Every record in
 both carries the dry-run roofline triple ``model_bytes`` /
 ``achievable_s`` / ``pct_roofline`` (analytic Eq. 4–6 traffic bound over
 the AOT-compiled program's own HLO roofline time at the TPU_V5E
@@ -48,6 +51,7 @@ def main() -> None:
     quick = not args.full
 
     from benchmarks import (
+        batched_solve,
         exchange_select,
         fig3_operator,
         fig456_scaling,
@@ -63,6 +67,7 @@ def main() -> None:
         "table2": table2_fom.main,
         "exchange": exchange_select.main,
         "precond": None,
+        "batched": None,
     }
     only = set(args.only.split(",")) if args.only else None
     if only:
@@ -85,6 +90,10 @@ def main() -> None:
                 recs = fig3_operator.records(quick=quick)
                 rows = fig3_operator.rows_from(recs)
                 summary["fig3_records"] = recs
+            elif name == "batched":
+                recs = batched_solve.records(quick=quick)
+                rows = batched_solve.rows_from(recs)
+                summary["batched_records"] = recs
             else:
                 rows = list(fn(quick=quick))
             for row in rows:

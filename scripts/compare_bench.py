@@ -5,14 +5,19 @@ Usage:
     python scripts/compare_bench.py BENCH_pr5.json BENCH_pr6.json \
         [--slack N] [--roofline-slack PTS] [--allow-new-sections]
 
-Two gated record sections, compared on the cases both jsons share:
+Three gated record sections, compared on the cases both jsons share:
 
   * ``precond_records`` (key: N, lam, kind, dtype) — fails if any case
     needs more than ``--slack`` extra CG iterations to reach tolerance,
     or loses more than ``--roofline-slack`` percentage points of
     ``pct_roofline``;
   * ``fig3_records`` (key: N) — fails on ``pct_roofline`` drops beyond
-    the slack.
+    the slack;
+  * ``batched_records`` (key: N, lam, kind, dtype, batch) — the
+    multi-RHS amortization sweep; fails on iteration regressions beyond
+    the slack (``iters_to_tol`` is the max per-column count of the
+    dispatch).  Wall-time amortization itself is machine-dependent and
+    reported, never gated.
 
 Independently of the pairwise comparison, every *candidate* row in a
 gated section must report ``status: "converged"`` (the
@@ -45,12 +50,16 @@ import argparse
 import json
 import sys
 
-GATED_SECTIONS = ("precond_records", "fig3_records")
+GATED_SECTIONS = ("precond_records", "fig3_records", "batched_records")
 
 
 def _key(section: str, r: dict) -> tuple:
     if section == "precond_records":
         return (r["n"], r["lam"], r["kind"], r.get("dtype", "fp64"))
+    if section == "batched_records":
+        return (
+            r["n"], r["lam"], r["kind"], r.get("dtype", "fp64"), r["batch"]
+        )
     return (r["n"],)
 
 
@@ -58,6 +67,9 @@ def _fmt_key(section: str, key: tuple) -> str:
     if section == "precond_records":
         n, lam, kind, dtype = key
         return f"N={n} lam={lam} {kind:>16} [{dtype}]"
+    if section == "batched_records":
+        n, lam, kind, dtype, batch = key
+        return f"N={n} lam={lam} {kind:>16} [{dtype}] B={batch}"
     return f"N={key[0]}"
 
 

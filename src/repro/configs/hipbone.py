@@ -82,6 +82,11 @@ class PoissonConfig:
     # scatter/local/gather pipeline, None defers to the backend policy
     # (kernels.ops.should_fuse_operator; HIPBONE_FUSED=0/1 overrides).
     fused_operator: bool | None = None
+    # multi-RHS serving: how many right-hand sides one solver dispatch
+    # carries (core.cg.batched_cg_assembled / serving.SolverEngine slot
+    # width).  1 = the classic single-column solve; the batched-solve
+    # benchmark sweeps {1, 4, 16} to show setup amortization.
+    batch_rhs: int = 1
     # solver guardrails (core.cg.SolveStatus): DIVERGED above
     # divergence_factor·rdotr₀ (squared-norm semantics), STAGNATED after
     # stagnation_window iterations without a stagnation_rtol relative
@@ -153,6 +158,8 @@ class PoissonConfig:
                 f"fused_operator must be None/True/False, "
                 f"got {self.fused_operator!r}"
             )
+        if self.batch_rhs < 1:
+            bad(f"batch_rhs must be >= 1, got {self.batch_rhs}")
         if self.divergence_factor is not None and not self.divergence_factor > 1:
             bad(
                 f"divergence_factor must be > 1 (or None to disable), "
@@ -187,6 +194,40 @@ class PoissonConfig:
         n = self.n_degree
         bx, by, bz = self.local_elems
         return bx * by * bz * n**3
+
+    def precond_kwargs(self) -> dict:
+        """This spec's rung as ``core.precond.make_preconditioner`` kwargs.
+
+        The translation the solver service (``repro.launch.serve``) and
+        the setup-cache key (``core.precond.precond_signature``) share —
+        only knobs relevant to the selected rung are emitted, so two
+        configs differing in an inert knob map to the same setup.
+        """
+        if self.precond == "none":
+            return {}
+        kw: dict = {}
+        if self.precond == "chebyshev":
+            kw["degree"] = self.cheb_degree
+        elif self.precond == "pmg":
+            kw.update(
+                pmg_smooth_degree=self.pmg_smooth_degree,
+                pmg_smoother=self.pmg_smoother,
+                pmg_coarse_op=self.pmg_coarse_op,
+                pmg_coarse_iters=self.pmg_coarse_iters,
+            )
+            if self.pmg_smoother == "schwarz":
+                kw.update(
+                    schwarz_overlap=self.schwarz_overlap,
+                    schwarz_inner_degree=self.schwarz_inner_degree,
+                )
+        elif self.precond == "schwarz":
+            kw.update(
+                schwarz_overlap=self.schwarz_overlap,
+                schwarz_inner_degree=self.schwarz_inner_degree,
+            )
+        if self.precond_dtype is not None:
+            kw["precond_dtype"] = self.precond_dtype
+        return kw
 
 
 CONFIGS = {
@@ -241,6 +282,12 @@ CONFIGS = {
         "hipbone_n7_schwarz_fp32", 7, (8, 8, 8), lam=0.1,
         precond="schwarz", tol=1e-8, dtype="float64",
         precond_dtype="float32", cg_variant="flexible"
+    ),
+    # the serving shape: one Chebyshev setup amortized over a 16-column
+    # RHS slab per dispatch (serving.SolverEngine / batched_cg_assembled)
+    "hipbone_n7_batched": PoissonConfig(
+        "hipbone_n7_batched", 7, (8, 8, 8), precond="chebyshev",
+        tol=1e-6, batch_rhs=16
     ),
 }
 

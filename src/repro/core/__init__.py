@@ -8,10 +8,17 @@ from .cg import (
     CG_VARIANTS,
     CGResult,
     SolveStatus,
+    batched_cg_assembled,
     cg_assembled,
     cg_scattered,
     fused_residual_update,
     status_name,
+)
+from .solver_cache import (
+    SolverCache,
+    SolverSetup,
+    mesh_signature,
+    solver_setup_key,
 )
 from .resilience import (
     PRECOND_DOWNGRADE,
@@ -68,6 +75,7 @@ from .precond import (
     local_operator_diagonal,
     make_pmg_preconditioner,
     make_preconditioner,
+    precond_signature,
     make_transfer_pair,
     make_vcycle,
     pmg_degree_ladder,

@@ -64,6 +64,7 @@ __all__ = [
     "STAGNATION_RTOL",
     "STAGNATION_WINDOW",
     "SolveStatus",
+    "batched_cg_assembled",
     "cg_assembled",
     "cg_scattered",
     "fused_residual_update",
@@ -407,6 +408,94 @@ def cg_assembled(
         stagnation_window=stagnation_window,
         stagnation_rtol=stagnation_rtol,
     )
+
+
+def batched_cg_assembled(
+    operator: Callable[[jax.Array], jax.Array],
+    b_block: jax.Array,
+    x0: jax.Array | None = None,
+    *,
+    n_iter: int = 100,
+    tol: float | None = None,
+    precond: Callable[[jax.Array], jax.Array] | None = None,
+    fused_update: Callable[..., tuple[jax.Array, jax.Array]] | None = None,
+    fused_precond_dot: Callable[..., tuple[jax.Array, jax.Array]] | None = None,
+    record_history: bool = False,
+    cg_variant: str = "standard",
+    divergence_factor: float | None = DIVERGENCE_FACTOR,
+    stagnation_window: int | None = STAGNATION_WINDOW,
+    stagnation_rtol: float = STAGNATION_RTOL,
+) -> CGResult:
+    """Multi-RHS (P)CG: solve ``A x_i = b_i`` for every row of ``b_block``.
+
+    The batched front end of the solver service (ROADMAP "millions of
+    users" direction): ``b_block`` is a ``(B, n_global)`` block of
+    right-hand sides sharing ONE operator and ONE preconditioner setup —
+    every setup cost (assembled diagonals, Lanczos intervals, Schwarz FDM
+    eigendecompositions, Galerkin blocks) is paid once and amortized over
+    the batch, and the B solves run as a single compiled program whose
+    vector stages stream ``(B, n)`` blocks instead of B separate ``(n,)``
+    passes.
+
+    Implementation: :func:`cg_assembled` vmapped over the leading batch
+    dimension.  ``jax.vmap`` of ``lax.while_loop`` runs the loop while ANY
+    column is still active and freezes finished columns with masked
+    (``select``) carry updates, so every column independently stops at
+    ``tol`` — per-column ``iterations`` and ``status`` are *bit-identical*
+    to B standalone :func:`cg_assembled` calls (the zero-RHS column
+    short-circuit included: a zero row reports CONVERGED at 0 iterations).
+    Already-converged columns ride along masked (their carries are frozen,
+    not recomputed), so a batch mixing easy and hard RHS costs the max
+    column's iterations, not the sum.
+
+    Args:
+      operator: single-column A-apply ``(n,) -> (n,)`` (batching is
+        applied here — pass the same apply a standalone solve would use).
+      b_block: ``(B, n_global)`` RHS block.
+      x0: optional ``(B, n_global)`` initial guesses.
+      precond / fused_update / fused_precond_dot: single-column callables,
+        exactly as :func:`cg_assembled` takes them; they are vmapped along
+        with the loop.
+      Everything else: as :func:`cg_assembled` (shared by all columns;
+        per-column tolerances are a grouping concern — the serving engine
+        batches only requests that share them).
+
+    Returns:
+      ``CGResult`` with batched leaves: ``x`` ``(B, n)``, ``rdotr`` /
+      ``iterations`` / ``status`` ``(B,)``, and ``rdotr_history``
+      ``(B, n_iter)`` when ``record_history`` (frozen columns repeat their
+      final value in unreached slots).
+    """
+    if b_block.ndim != 2:
+        raise ValueError(
+            f"b_block must be (B, n_global), got shape {b_block.shape}; "
+            "for a single RHS use cg_assembled (or pass b[None, :])"
+        )
+    if x0 is not None and x0.shape != b_block.shape:
+        raise ValueError(
+            f"x0 shape {x0.shape} must match b_block shape {b_block.shape}"
+        )
+
+    def solve_one(b_i, x0_i):
+        return cg_assembled(
+            operator,
+            b_i,
+            x0_i,
+            n_iter=n_iter,
+            tol=tol,
+            precond=precond,
+            fused_update=fused_update,
+            fused_precond_dot=fused_precond_dot,
+            record_history=record_history,
+            cg_variant=cg_variant,
+            divergence_factor=divergence_factor,
+            stagnation_window=stagnation_window,
+            stagnation_rtol=stagnation_rtol,
+        )
+
+    if x0 is None:
+        return jax.vmap(lambda b_i: solve_one(b_i, None))(b_block)
+    return jax.vmap(solve_one)(b_block, x0)
 
 
 def cg_scattered(

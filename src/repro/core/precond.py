@@ -90,6 +90,7 @@ __all__ = [
     "make_vcycle",
     "make_pmg_preconditioner",
     "make_preconditioner",
+    "precond_signature",
     "PRECOND_KINDS",
     "PMG_SMOOTHERS",
     "PMG_COARSE_OPS",
@@ -751,6 +752,57 @@ def cast_apply(
     """
     cdt, odt = jnp.dtype(compute_dtype), jnp.dtype(out_dtype)
     return lambda r: apply(r.astype(cdt)).astype(odt)
+
+
+# make_preconditioner knobs that shape the built setup, with their defaults.
+# Callable knobs (fused_d_update, galerkin_matvec) are kernel substitutions —
+# they change how a stage is computed, never what it computes — so they are
+# deliberately NOT part of the signature.
+_SIGNATURE_DEFAULTS = {
+    "degree": 2,
+    "power_iters": 15,
+    "lanczos_iters": 10,
+    "lmin_source": "lanczos",
+    "pmg_smooth_degree": None,
+    "pmg_smoother": "chebyshev",
+    "pmg_coarse_op": "redisc",
+    "pmg_coarse_solve": "direct",
+    "pmg_coarse_iters": 16,
+    "pmg_ladder": None,
+    "schwarz_overlap": 1,
+    "schwarz_weighting": "sqrt",
+    "schwarz_inner_degree": SCHWARZ_INNER_DEGREE,
+    "precond_dtype": None,
+}
+
+
+def precond_signature(kind: str, **kwargs) -> tuple:
+    """Canonical hashable signature of a :func:`make_preconditioner` config.
+
+    Every knob that affects the *built setup* is normalized (defaults
+    filled in, ladder tuples frozen, dtypes resolved to their names) and
+    emitted in a fixed order, so two calls that would build the same
+    preconditioner produce equal signatures whatever subset of knobs they
+    spelled out — the keying contract ``core.solver_cache`` relies on.
+    Unknown knobs raise instead of being silently dropped (a typo must not
+    alias two different configs to one cache slot).
+    """
+    if kind not in PRECOND_KINDS:
+        raise ValueError(f"unknown precond {kind!r}; choose from {PRECOND_KINDS}")
+    unknown = set(kwargs) - set(_SIGNATURE_DEFAULTS)
+    if unknown:
+        raise ValueError(
+            f"unknown preconditioner knob(s) {sorted(unknown)}; "
+            f"known: {sorted(_SIGNATURE_DEFAULTS)}"
+        )
+    merged = {**_SIGNATURE_DEFAULTS, **kwargs}
+    if merged["pmg_ladder"] is not None:
+        merged["pmg_ladder"] = tuple(int(d) for d in merged["pmg_ladder"])
+    if merged["precond_dtype"] is not None:
+        merged["precond_dtype"] = jnp.dtype(merged["precond_dtype"]).name
+    return (("kind", kind),) + tuple(
+        (name, merged[name]) for name in sorted(_SIGNATURE_DEFAULTS)
+    )
 
 
 def make_preconditioner(

@@ -1,0 +1,182 @@
+"""Setup cache for the solver service: build once, solve many.
+
+hipBone exists because Nek5000/NekRS amortize one operator/preconditioner
+setup over thousands of solves (every time step re-solves the same
+pressure Poisson system).  This module is that amortization made explicit:
+a :class:`SolverCache` maps a *problem identity* — mesh signature, degree
+N, screen λ, preconditioner configuration, dtypes — to the built
+:class:`SolverSetup` (operator apply, preconditioner apply, spectrum
+estimates), so a repeated request pays **zero** setup work: no assembled
+diagonals, no Lanczos sweeps, no Schwarz FDM eigendecompositions, no
+Galerkin block probing.
+
+Keying contract:
+
+  * the **mesh signature** hashes the full geometry (degree, element-grid
+    shape, node coordinates, the l2g connectivity) — two meshes that
+    differ only by a deformation hash differently;
+  * **λ** and the problem/preconditioner **dtypes** are part of the key
+    (perturbing λ rebuilds; an fp32 chain is a different setup than fp64);
+  * the **preconditioner config** is canonicalized through
+    :func:`core.precond.precond_signature` (defaults filled in), so two
+    spellings of the same config share one entry;
+  * solve-time knobs (tol, n_iter, cg_variant, detector thresholds) are
+    deliberately NOT in the key — they don't change the setup.  Grouping
+    by those is the serving engine's dispatch concern
+    (``repro.serving.SolverEngine``).
+
+Hit/miss counters are first-class: :meth:`SolverCache.stats` feeds the
+benchmark/serving solve records, and the batched-solve benchmark asserts
+the hit path did zero preconditioner setup.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import time
+from collections import OrderedDict
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .precond import PrecondInfo, make_preconditioner, precond_signature
+
+__all__ = [
+    "SolverCache",
+    "SolverSetup",
+    "mesh_signature",
+    "solver_setup_key",
+]
+
+
+def mesh_signature(mesh) -> str:
+    """Deterministic content hash of a ``BoxMesh``'s geometry.
+
+    Hashes degree, element-grid shape, node coordinates and the l2g
+    connectivity (coordinates are rounded through their raw float64 bytes —
+    bit-equal geometry in, equal signature out; any deformation or
+    re-gridding changes it).  Stable across processes, unlike ``id()``-
+    based identity, so cache keys can live in solve records and logs.
+    """
+    h = hashlib.sha256()
+    h.update(f"N={int(mesh.n_degree)};shape={tuple(mesh.shape)};".encode())
+    h.update(np.ascontiguousarray(np.asarray(mesh.coords, np.float64)).tobytes())
+    h.update(np.ascontiguousarray(np.asarray(mesh.l2g, np.int64)).tobytes())
+    return h.hexdigest()[:16]
+
+
+def solver_setup_key(prob, kind: str = "none", **precond_kwargs) -> tuple:
+    """The cache key for (problem, preconditioner config).
+
+    A flat hashable tuple: mesh signature, degree, λ, problem dtype, and
+    the canonicalized preconditioner signature
+    (:func:`core.precond.precond_signature` — defaults filled, so every
+    spelling of the same config maps to the same key).
+    """
+    return (
+        ("mesh", mesh_signature(prob.mesh)),
+        ("n", int(prob.mesh.n_degree)),
+        ("lam", float(prob.lam)),
+        ("dtype", jnp.dtype(prob.dtype).name),
+    ) + precond_signature(kind, **precond_kwargs)
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverSetup:
+    """One cached build: everything a solve needs beyond (b, tol, n_iter)."""
+
+    key: tuple
+    prob: Any                     # the PoissonProblem the setup was built on
+    operator: Callable[[jax.Array], jax.Array]
+    precond: Callable[[jax.Array], jax.Array] | None
+    info: PrecondInfo
+    build_s: float                # wall time the (hit path's skipped) setup cost
+
+
+class SolverCache:
+    """Keyed store of built :class:`SolverSetup`\\ s with hit/miss counters.
+
+    ``max_entries`` bounds the cache LRU-style (least-recently *used*
+    entry evicted first); ``None`` = unbounded, the right default for a
+    benchmark or a service with a fixed problem population.
+    """
+
+    def __init__(self, max_entries: int | None = None):
+        if max_entries is not None and max_entries < 1:
+            raise ValueError(f"max_entries must be >= 1, got {max_entries}")
+        self.max_entries = max_entries
+        self._entries: OrderedDict[tuple, SolverSetup] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.build_s_total = 0.0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: tuple) -> bool:
+        return key in self._entries
+
+    def get_or_build(
+        self,
+        prob,
+        kind: str = "none",
+        *,
+        operator: Callable[[jax.Array], jax.Array] | None = None,
+        **precond_kwargs,
+    ) -> SolverSetup:
+        """Return the setup for (prob, config), building it on first miss.
+
+        On a miss the operator apply (``poisson_assembled``, unless one is
+        injected via ``operator``) and the full preconditioner chain are
+        built and the wall time recorded; on a hit NOTHING is rebuilt —
+        the returned setup is the stored object, and only the hit counter
+        moves (the zero-setup guarantee the batched benchmark asserts).
+        """
+        key = solver_setup_key(prob, kind, **precond_kwargs)
+        entry = self._entries.get(key)
+        if entry is not None:
+            self.hits += 1
+            self._entries.move_to_end(key)
+            return entry
+        self.misses += 1
+        t0 = time.perf_counter()
+        if operator is None:
+            from .operator import poisson_assembled
+
+            operator = poisson_assembled(prob)
+        precond, info = make_preconditioner(
+            kind, prob, operator, **precond_kwargs
+        )
+        build_s = time.perf_counter() - t0
+        entry = SolverSetup(
+            key=key,
+            prob=prob,
+            operator=operator,
+            precond=precond,
+            info=info,
+            build_s=build_s,
+        )
+        self.build_s_total += build_s
+        self._entries[key] = entry
+        if self.max_entries is not None and len(self._entries) > self.max_entries:
+            self._entries.popitem(last=False)
+            self.evictions += 1
+        return entry
+
+    def stats(self) -> dict:
+        """Json-ready counters for solve records / service telemetry."""
+        total = self.hits + self.misses
+        return {
+            "entries": len(self._entries),
+            "hits": self.hits,
+            "misses": self.misses,
+            "evictions": self.evictions,
+            "hit_rate": (self.hits / total) if total else None,
+            "build_s_total": self.build_s_total,
+        }
+
+    def clear(self) -> None:
+        self._entries.clear()

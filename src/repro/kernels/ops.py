@@ -25,9 +25,12 @@ from .poisson_fused import (
 )
 from .streams import (
     LANES,
+    fused_axpy_dot_batched_pallas,
     fused_axpy_dot_pallas,
     fused_cheb_d_update_pallas,
+    fused_jacobi_dot_batched_pallas,
     fused_jacobi_dot_pallas,
+    fused_xpay_batched_pallas,
     fused_xpay_pallas,
     weighted_dot_pallas,
 )
@@ -48,9 +51,13 @@ __all__ = [
     "weighted_dot",
     "fused_jacobi_dot",
     "fused_cheb_d_update",
+    "fused_axpy_dot_batched",
+    "fused_xpay_batched",
+    "fused_jacobi_dot_batched",
     "make_local_op",
     "make_fused_jacobi_dot",
     "make_fused_cheb_d_update",
+    "make_fused_jacobi_dot_batched",
 ]
 
 
@@ -416,6 +423,91 @@ def fused_cheb_d_update(
     br = _stream_block_rows(d_p.size)
     out = fused_cheb_d_update_pallas(a, c, d_p, r_p, block_rows=br, interpret=interp)
     return out[:n].reshape(shape)
+
+
+def _pad_block(x: jax.Array, multiple: int) -> tuple[jax.Array, int]:
+    """Pad the trailing axis of a (B, n) block to a multiple of ``multiple``."""
+    n = x.shape[-1]
+    pad = (-n) % multiple
+    if pad:
+        x = jnp.concatenate(
+            [x, jnp.zeros(x.shape[:-1] + (pad,), x.dtype)], axis=-1
+        )
+    return x, n
+
+
+def fused_axpy_dot_batched(
+    r: jax.Array, ap: jax.Array, alpha: jax.Array, *, interpret: bool | None = None
+) -> tuple[jax.Array, jax.Array]:
+    """Per-column one-pass (r - α·Ap, ‖·‖²) over a (B, n) RHS block.
+
+    ``alpha`` is (B,) — each solve column advances by its own CG step.
+    Returns the updated (B, n) block and the (B,) squared norms.
+    """
+    interp = default_interpret() if interpret is None else interpret
+    shape = r.shape
+    r_p, n = _pad_block(r, LANES)
+    ap_p, _ = _pad_block(ap, LANES)
+    br = _stream_block_rows(r_p.shape[-1])
+    # padded tail contributes alpha*0 - 0 = 0 to both outputs
+    r_new, rr = fused_axpy_dot_batched_pallas(
+        r_p, ap_p, alpha, block_rows=br, interpret=interp
+    )
+    return r_new[:, :n].reshape(shape), rr
+
+
+def fused_xpay_batched(
+    r: jax.Array, p: jax.Array, beta: jax.Array, *, interpret: bool | None = None
+) -> jax.Array:
+    """Per-column r + β·p over a (B, n) block; ``beta`` is (B,)."""
+    interp = default_interpret() if interpret is None else interpret
+    shape = r.shape
+    r_p, n = _pad_block(r, LANES)
+    p_p, _ = _pad_block(p, LANES)
+    br = _stream_block_rows(r_p.shape[-1])
+    out = fused_xpay_batched_pallas(r_p, p_p, beta, block_rows=br, interpret=interp)
+    return out[:, :n].reshape(shape)
+
+
+def fused_jacobi_dot_batched(
+    dinv: jax.Array, r: jax.Array, *, interpret: bool | None = None
+) -> tuple[jax.Array, jax.Array]:
+    """Per-column (D⁻¹r, r·D⁻¹r) over a (B, n) block.
+
+    ``dinv`` stays (n,) — the diagonal stream is shared by every column,
+    never replicated B-fold through memory.
+    """
+    interp = default_interpret() if interpret is None else interpret
+    shape = r.shape
+    d_p, n = _pad_vec(dinv, LANES)
+    r_p, _ = _pad_block(r, LANES)
+    br = _stream_block_rows(r_p.shape[-1])
+    # padded tail: dinv pad is 0 so z and the r·z partials stay 0 there
+    z, rz = fused_jacobi_dot_batched_pallas(
+        d_p, r_p, block_rows=br, interpret=interp
+    )
+    return z[:, :n].reshape(shape), rz
+
+
+def make_fused_jacobi_dot_batched(
+    dinv: jax.Array, *, interpret: bool | None = None, out_dtype=None
+):
+    """Batched counterpart of ``make_fused_jacobi_dot``: r_block -> (z, r·z).
+
+    Same mixed-precision boundary: with ``out_dtype`` the (B, n) block is
+    rounded to ``dinv.dtype`` for the fused pass and widened back.
+    """
+    if out_dtype is None:
+        return lambda r: fused_jacobi_dot_batched(dinv, r, interpret=interpret)
+    odt = jnp.dtype(out_dtype)
+
+    def apply(r: jax.Array) -> tuple[jax.Array, jax.Array]:
+        z, rz = fused_jacobi_dot_batched(
+            dinv, r.astype(dinv.dtype), interpret=interpret
+        )
+        return z.astype(odt), rz.astype(odt)
+
+    return apply
 
 
 def make_fused_jacobi_dot(

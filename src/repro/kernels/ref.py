@@ -15,6 +15,9 @@ __all__ = [
     "weighted_dot_ref",
     "fused_jacobi_dot_ref",
     "fused_cheb_d_update_ref",
+    "fused_axpy_dot_batched_ref",
+    "fused_xpay_batched_ref",
+    "fused_jacobi_dot_batched_ref",
 ]
 
 
@@ -62,3 +65,24 @@ def fused_cheb_d_update_ref(
 ) -> jax.Array:
     """d ← a·d + c·r — reference for the Chebyshev direction update."""
     return a * d + c * r
+
+
+def fused_axpy_dot_batched_ref(
+    r: jax.Array, ap: jax.Array, alpha: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Per-column (r - αAp, ‖·‖²) over a (B, n) block; alpha: (B,)."""
+    return jax.vmap(fused_axpy_dot_ref)(r, ap, alpha)
+
+
+def fused_xpay_batched_ref(
+    r: jax.Array, p: jax.Array, beta: jax.Array
+) -> jax.Array:
+    """Per-column r + β·p over a (B, n) block; beta: (B,)."""
+    return jax.vmap(fused_xpay_ref)(r, p, beta)
+
+
+def fused_jacobi_dot_batched_ref(
+    dinv: jax.Array, r: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """(D⁻¹r, r·D⁻¹r) per column of a (B, n) block; dinv: (n,) shared."""
+    return jax.vmap(fused_jacobi_dot_ref, in_axes=(None, 0))(dinv, r)

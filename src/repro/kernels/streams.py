@@ -19,6 +19,17 @@ walks row blocks; scalar reductions accumulate into a (1, 1) output block
 that every grid step revisits (TPU grids are sequential, so the
 accumulation is deterministic — unlike GPU atomics). α/β arrive as (1, 1)
 SMEM scalars so the same compiled kernel serves every iteration.
+
+Batched (multi-RHS) layouts: the ``*_batched`` variants take a
+``(B, rows, 128)`` block of vectors — the leading-batch-dim layout of the
+batched PCG (``core.cg.batched_cg_assembled``) — on a ``(B, row-blocks)``
+grid.  Per-column scalars (α per RHS, the Σ reductions) become ``(B,)``
+vectors: α/β ride in SMEM as a ``(B, 1)`` table indexed by the batch grid
+axis, and each batch row accumulates into its own revisited ``(1, 1)``
+block of a ``(B, 1)`` output.  Shared streams (the Jacobi diagonal) keep a
+single copy indexed only by the row-block axis, so the batch never
+materializes B copies of per-problem state — the per-batch-seed idiom of
+the pie ``rand_mv`` kernels.
 """
 from __future__ import annotations
 
@@ -31,9 +42,12 @@ from jax.experimental.pallas import tpu as pltpu
 
 __all__ = [
     "fused_axpy_dot_pallas",
+    "fused_axpy_dot_batched_pallas",
     "fused_xpay_pallas",
+    "fused_xpay_batched_pallas",
     "weighted_dot_pallas",
     "fused_jacobi_dot_pallas",
+    "fused_jacobi_dot_batched_pallas",
     "fused_cheb_d_update_pallas",
 ]
 
@@ -105,9 +119,56 @@ def _cheb_d_kernel(a_ref, c_ref, d_ref, r_ref, out_ref):
     out_ref[...] = a * d_ref[...] + c * r_ref[...]
 
 
+def _axpy_dot_batched_kernel(alpha_ref, r_ref, ap_ref, rnew_ref, acc_ref):
+    b = pl.program_id(0)
+    i = pl.program_id(1)
+    alpha = alpha_ref[b, 0]
+    r = r_ref[...]
+    ap = ap_ref[...]
+    r_new = r - alpha * ap
+    rnew_ref[...] = r_new
+    part = jnp.sum(
+        r_new.astype(jnp.float32) * r_new.astype(jnp.float32)
+    ).astype(jnp.float32)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[0, 0] = jnp.float32(0.0)
+
+    acc_ref[0, 0] += part
+
+
+def _jacobi_dot_batched_kernel(dinv_ref, r_ref, z_ref, acc_ref):
+    i = pl.program_id(1)
+    r = r_ref[...]
+    # dinv is the SHARED per-problem stream: one (br, LANES) block serves
+    # every batch row (broadcast against the (1, br, LANES) r block)
+    z = dinv_ref[...][None, :, :] * r
+    z_ref[...] = z
+    part = jnp.sum(r.astype(jnp.float32) * z.astype(jnp.float32)).astype(
+        jnp.float32
+    )
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[0, 0] = jnp.float32(0.0)
+
+    acc_ref[0, 0] += part
+
+
+def _xpay_batched_kernel(beta_ref, r_ref, p_ref, out_ref):
+    b = pl.program_id(0)
+    out_ref[...] = r_ref[...] + beta_ref[b, 0] * p_ref[...]
+
+
 def _as_tiles(x: jax.Array) -> jax.Array:
     """View a (rows*LANES,) vector as (rows, LANES); caller pre-pads."""
     return x.reshape(-1, LANES)
+
+
+def _as_batched_tiles(x: jax.Array) -> jax.Array:
+    """View a (B, rows*LANES) block as (B, rows, LANES); caller pre-pads."""
+    return x.reshape(x.shape[0], -1, LANES)
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
@@ -241,6 +302,119 @@ def fused_jacobi_dot_pallas(
         interpret=interpret,
     )(d2, r2)
     return z.reshape(r.shape), acc[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def fused_axpy_dot_batched_pallas(
+    r: jax.Array,
+    ap: jax.Array,
+    alpha: jax.Array,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Batched (r - α·Ap, Σ(r - α·Ap)²): one pass over a (B, rows, 128) block.
+
+    ``r``/``ap``: (B, rows*128) RHS blocks; ``alpha``: (B,) per-column CG
+    step sizes (an SMEM table indexed by the batch grid axis).  Returns the
+    updated (B, rows*128) block and the (B,) per-column reductions.
+    """
+    r3, ap3 = _as_batched_tiles(r), _as_batched_tiles(ap)
+    nb, rows = r3.shape[0], r3.shape[1]
+    br = min(block_rows, rows)
+    if rows % br:
+        raise ValueError(f"rows={rows} not a multiple of block_rows={br}")
+    alpha2 = jnp.asarray(alpha, r3.dtype).reshape(nb, 1)
+    grid = (nb, rows // br)
+    r_new, acc = pl.pallas_call(
+        _axpy_dot_batched_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, br, LANES), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, br, LANES), lambda b, i: (b, i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, br, LANES), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, 1), lambda b, i: (b, 0), memory_space=pltpu.SMEM),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(r3.shape, r3.dtype),
+            jax.ShapeDtypeStruct((nb, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(alpha2, r3, ap3)
+    return r_new.reshape(r.shape), acc[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def fused_jacobi_dot_batched_pallas(
+    dinv: jax.Array,
+    r: jax.Array,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Batched (D⁻¹r, Σ r·D⁻¹r) over a (B, rows, 128) block, one pass.
+
+    ``dinv``: (rows*128,) — the ONE shared diagonal stream, never
+    replicated per column; ``r``: (B, rows*128).  Returns the (B, rows*128)
+    z block and the (B,) per-column r·z reductions.
+    """
+    d2, r3 = _as_tiles(dinv), _as_batched_tiles(r)
+    nb, rows = r3.shape[0], r3.shape[1]
+    br = min(block_rows, rows)
+    if rows % br:
+        raise ValueError(f"rows={rows} not a multiple of block_rows={br}")
+    z, acc = pl.pallas_call(
+        _jacobi_dot_batched_kernel,
+        grid=(nb, rows // br),
+        in_specs=[
+            pl.BlockSpec((br, LANES), lambda b, i: (i, 0)),
+            pl.BlockSpec((1, br, LANES), lambda b, i: (b, i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, br, LANES), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, 1), lambda b, i: (b, 0), memory_space=pltpu.SMEM),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(r3.shape, r3.dtype),
+            jax.ShapeDtypeStruct((nb, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(d2, r3)
+    return z.reshape(r.shape), acc[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def fused_xpay_batched_pallas(
+    r: jax.Array,
+    p: jax.Array,
+    beta: jax.Array,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = True,
+) -> jax.Array:
+    """Batched r + β·p over a (B, rows, 128) block; β: (B,) SMEM table."""
+    r3, p3 = _as_batched_tiles(r), _as_batched_tiles(p)
+    nb, rows = r3.shape[0], r3.shape[1]
+    br = min(block_rows, rows)
+    if rows % br:
+        raise ValueError(f"rows={rows} not a multiple of block_rows={br}")
+    beta2 = jnp.asarray(beta, r3.dtype).reshape(nb, 1)
+    out = pl.pallas_call(
+        _xpay_batched_kernel,
+        grid=(nb, rows // br),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, br, LANES), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, br, LANES), lambda b, i: (b, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, br, LANES), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(r3.shape, r3.dtype),
+        interpret=interpret,
+    )(beta2, r3, p3)
+    return out.reshape(r.shape)
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))

@@ -1,29 +1,85 @@
-"""Production serve driver: ``python -m repro.launch.serve --arch <id>``."""
+"""Solver-service driver: ``python -m repro.launch.serve --config <id>``.
+
+Feeds the :class:`repro.serving.SolverEngine` two rounds of multi-RHS
+solve requests from a ``PoissonConfig`` spec: the first round pays the
+one-time setup (cache miss), the second reuses it (cache hit, zero
+preconditioner setup) — the amortization profile the batched-solve
+benchmark measures.  Prints per-column iterations/status and the cache
+counters; exits nonzero if any column fails to converge or the second
+round misses the cache.
+
+The seed's LM decode driver lives on as ``examples/serve_lm.py``
+(``repro.serving.lm``).
+"""
 import argparse
+import sys
 
-import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.configs import get_config
-from repro.models.model import init_model
-from repro.serving import Engine, ServeConfig
+from repro.configs.hipbone import CONFIGS, REDUCED
+from repro.core import build_problem
+from repro.serving import SolveRequest, SolverEngine, SolverServeConfig
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument(
+        "--config", default="hipbone_reduced",
+        choices=sorted(CONFIGS) + ["hipbone_reduced"],
+    )
+    ap.add_argument("--requests", type=int, default=None,
+                    help="RHS columns per round (default: config batch_rhs)")
+    ap.add_argument("--max-batch", type=int, default=16,
+                    help="engine slot width per dispatch")
+    ap.add_argument("--rounds", type=int, default=2)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    cfg = get_config(args.arch, reduced=args.reduced)
-    params, _ = init_model(cfg, jax.random.key(0), jnp.float32)
-    eng = Engine(cfg, params, ServeConfig(batch=args.batch, capacity=64))
-    prompts = jax.random.randint(jax.random.key(1), (args.batch, 8), 0,
-                                 cfg.vocab_size)
-    out = eng.generate(prompts, max_new=args.max_new)
-    print("generated shape:", out.shape)
+    cfg = REDUCED if args.config == "hipbone_reduced" else CONFIGS[args.config]
+    n_req = args.requests or max(cfg.batch_rhs, 1)
+    prob = build_problem(
+        cfg.n_degree, cfg.local_elems, lam=cfg.lam, dtype=jnp.dtype(cfg.dtype)
+    )
+    engine = SolverEngine(SolverServeConfig(max_batch=args.max_batch))
+    rng = np.random.default_rng(args.seed)
+
+    print(
+        f"solver service: {cfg.name} N={cfg.n_degree} "
+        f"dofs={prob.n_global} precond={cfg.precond} "
+        f"requests={n_req}/round × {args.rounds} rounds"
+    )
+    failures = 0
+    for rnd in range(args.rounds):
+        reqs = [
+            SolveRequest(
+                prob=prob,
+                b=jnp.asarray(
+                    rng.standard_normal(prob.n_global), prob.dtype
+                ),
+                kind=cfg.precond,
+                precond=cfg.precond_kwargs(),
+                tol=cfg.tol if cfg.tol is not None else 1e-6,
+                n_iter=cfg.n_iter if cfg.tol is None else 500,
+                cg_variant=cfg.cg_variant,
+            )
+            for _ in range(n_req)
+        ]
+        responses = engine.solve(reqs)
+        iters = [r.iterations for r in responses]
+        setup = responses[0].setup_cache
+        print(
+            f"round {rnd}: setup={setup} "
+            f"iterations={iters} "
+            f"status={[r.status_name for r in responses]}"
+        )
+        failures += sum(not r.converged for r in responses)
+        if rnd > 0 and setup != "hit":
+            print("ERROR: repeated round missed the setup cache")
+            failures += 1
+    print("cache:", engine.cache.stats())
+    if failures:
+        sys.exit(1)
 
 
 if __name__ == "__main__":

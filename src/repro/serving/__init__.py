@@ -1,4 +1,18 @@
-"""repro.serving — batched prefill/decode engine over the model zoo."""
-from .engine import Engine, ServeConfig
+"""repro.serving — the solver service (and the seed's LM decode engine).
 
-__all__ = ["Engine", "ServeConfig"]
+``SolverEngine`` (engine.py) is the production face of the repo: batched
+multi-RHS screened-Poisson dispatch over a setup cache.  The original
+LLM prefill/decode engine lives in ``lm.py`` and keeps its historical
+``Engine``/``ServeConfig`` names for ``examples/serve_lm.py``.
+"""
+from .engine import SolveRequest, SolveResponse, SolverEngine, SolverServeConfig
+from .lm import Engine, ServeConfig
+
+__all__ = [
+    "Engine",
+    "ServeConfig",
+    "SolveRequest",
+    "SolveResponse",
+    "SolverEngine",
+    "SolverServeConfig",
+]

@@ -1,0 +1,80 @@
+"""Batched serving engine: prefill + jitted decode loop with KV caches.
+
+Slot-based batching: a fixed batch of request slots decodes in lockstep
+(the decode_32k dry-run shape); prompts are right-aligned into a shared
+capacity. Greedy or temperature sampling.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..models.blocks import MeshContext
+from ..models.config import ModelConfig
+from ..models.model import decode_step, init_caches, prefill
+
+__all__ = ["ServeConfig", "Engine"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    batch: int
+    capacity: int           # max context length
+    temperature: float = 0.0
+    seed: int = 0
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params: Any, scfg: ServeConfig, mc: MeshContext | None = None):
+        self.cfg = cfg
+        self.params = params
+        self.scfg = scfg
+        self.mc = mc or MeshContext()
+        self._decode = jax.jit(
+            functools.partial(decode_step, cfg=cfg, mc=self.mc)
+        )
+        self._prefill = jax.jit(functools.partial(prefill, cfg=cfg, mc=self.mc))
+
+    def _sample(self, logits: jax.Array, key) -> jax.Array:
+        if self.scfg.temperature <= 0:
+            return jnp.argmax(logits[:, -1], axis=-1)
+        return jax.random.categorical(
+            key, logits[:, -1] / self.scfg.temperature, axis=-1
+        )
+
+    def generate(self, prompts: jax.Array, max_new: int) -> jax.Array:
+        """prompts: (B, S0) int32 -> (B, S0 + max_new)."""
+        b, s0 = prompts.shape
+        assert b == self.scfg.batch
+        logits, caches = self._prefill(self.params, prompts)
+        # re-home prefill caches into full-capacity buffers
+        full = init_caches(self.cfg, b, self.scfg.capacity, jnp.dtype(self.cfg.dtype))
+        def place(pref, buf):
+            if pref.shape == buf.shape:
+                return pref
+            sl = [slice(None)] * buf.ndim
+            for i, (a, c) in enumerate(zip(pref.shape, buf.shape)):
+                if a != c:
+                    sl[i] = slice(0, a)
+                    break
+            return buf.at[tuple(sl)].set(pref)
+        caches = jax.tree.map(place, caches, full)
+
+        key = jax.random.key(self.scfg.seed)
+        toks = [self._sample(logits, key)]
+        out = prompts
+        for i in range(max_new):
+            key, sub = jax.random.split(key)
+            tok = toks[-1][:, None]
+            out = jnp.concatenate([out, tok], axis=1)
+            if i == max_new - 1:
+                break
+            logits, caches = self._decode(
+                self.params, tok, jnp.int32(s0 + i), caches
+            )
+            toks.append(self._sample(logits, sub))
+        return out

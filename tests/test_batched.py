@@ -1,0 +1,300 @@
+"""Batched multi-RHS solves, the setup cache, and the solver engine.
+
+The acceptance contract: a (B, n_global) batched solve is *per-column
+bit-identical* to B standalone solves in iterations and status (JAX's
+while_loop batching freezes finished lanes — masked updates — so each
+column stops independently); repeated requests hit the setup cache and
+rebuild nothing.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    SolverCache,
+    batched_cg_assembled,
+    build_problem,
+    cg_assembled,
+    make_preconditioner,
+    poisson_assembled,
+    precond_signature,
+    solver_setup_key,
+)
+from repro.core.solver_cache import mesh_signature
+from repro.serving import SolveRequest, SolverEngine, SolverServeConfig
+
+TOL = 1e-6
+
+
+@pytest.fixture(scope="module")
+def prob():
+    return build_problem(3, (2, 2, 2), lam=1.0, deform=0.1, dtype=jnp.float64)
+
+
+@pytest.fixture(scope="module")
+def operator(prob):
+    return poisson_assembled(prob)
+
+
+def _rhs_block(prob, b, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((b, prob.n_global)), prob.dtype)
+
+
+# -- tentpole acceptance: B=16 bit-parity with standalone solves --------
+
+
+@pytest.mark.parametrize("kind", ["none", "jacobi", "chebyshev", "pmg"])
+def test_batched_b16_matches_16_standalone(prob, operator, kind):
+    pc, _ = make_preconditioner(kind, prob, operator)
+    b_block = _rhs_block(prob, 16)
+    res = batched_cg_assembled(
+        operator, b_block, n_iter=200, tol=TOL, precond=pc
+    )
+    assert res.x.shape == b_block.shape
+    assert res.iterations.shape == (16,) and res.status.shape == (16,)
+    for i in range(16):
+        ref = cg_assembled(
+            operator, b_block[i], n_iter=200, tol=TOL, precond=pc
+        )
+        # the acceptance bar: per-column iterations/status bit-identical
+        assert int(res.iterations[i]) == int(ref.iterations)
+        assert int(res.status[i]) == int(ref.status)
+        # x agrees to solve-dtype round-off (fp32 when x64 is disabled)
+        np.testing.assert_allclose(
+            np.asarray(res.x[i]), np.asarray(ref.x), rtol=1e-5, atol=1e-6
+        )
+
+
+def test_batched_columns_stop_independently(prob, operator):
+    """Easy + hard + zero RHS in one batch report distinct per-column
+    iteration counts, each matching its standalone solve."""
+    # an eigenvector RHS is the classic 1-iteration CG case
+    n = prob.n_global
+    a_mat = np.column_stack(
+        [np.asarray(operator(jnp.eye(n, dtype=prob.dtype)[:, j])) for j in range(n)]
+    )
+    w, v = np.linalg.eigh(a_mat)
+    easy = jnp.asarray(v[:, -1], prob.dtype)
+    hard = _rhs_block(prob, 1, seed=3)[0]
+    zero = jnp.zeros(n, prob.dtype)
+    b_block = jnp.stack([easy, hard, zero])
+    res = batched_cg_assembled(operator, b_block, n_iter=200, tol=TOL)
+    iters = [int(i) for i in res.iterations]
+    assert iters[0] == 1          # eigenvector column: one CG step
+    assert iters[1] > iters[0]    # generic column keeps iterating
+    assert iters[2] == 0          # zero column short-circuits
+    assert all(int(s) == 0 for s in res.status)  # CONVERGED
+    for i in range(3):
+        ref = cg_assembled(operator, b_block[i], n_iter=200, tol=TOL)
+        assert iters[i] == int(ref.iterations)
+        assert int(res.status[i]) == int(ref.status)
+
+
+def test_batched_zero_block_converges_at_zero(prob, operator):
+    res = batched_cg_assembled(
+        operator, jnp.zeros((4, prob.n_global), prob.dtype), tol=TOL
+    )
+    assert [int(i) for i in res.iterations] == [0, 0, 0, 0]
+    assert [int(s) for s in res.status] == [0, 0, 0, 0]
+    assert not np.asarray(res.x).any()
+
+
+def test_batched_x0_and_history(prob, operator):
+    b_block = _rhs_block(prob, 2)
+    base = batched_cg_assembled(
+        operator, b_block, n_iter=50, tol=TOL, record_history=True
+    )
+    assert base.rdotr_history.shape == (2, 50)
+    # x0 threads per column: batched warm start == standalone warm starts
+    # (tol is relative to ‖r₀‖, so this genuinely re-enters the loop)
+    x0 = 0.5 * base.x
+    warm = batched_cg_assembled(operator, b_block, x0, n_iter=50, tol=TOL)
+    for i in range(2):
+        ref = cg_assembled(operator, b_block[i], x0[i], n_iter=50, tol=TOL)
+        assert int(warm.iterations[i]) == int(ref.iterations)
+        assert int(warm.status[i]) == int(ref.status)
+
+
+def test_batched_input_validation(prob, operator):
+    with pytest.raises(ValueError, match="b_block must be"):
+        batched_cg_assembled(operator, jnp.zeros(prob.n_global, prob.dtype))
+    with pytest.raises(ValueError, match="x0 shape"):
+        batched_cg_assembled(
+            operator,
+            jnp.zeros((2, prob.n_global), prob.dtype),
+            jnp.zeros((3, prob.n_global), prob.dtype),
+        )
+
+
+def test_batched_fused_stages_match_unfused(prob, operator):
+    """The Pallas fused residual stage (interpret mode) slots into the
+    batched solve without changing per-column iteration counts."""
+    from repro.kernels import ops
+
+    prob32 = build_problem(3, (2, 2, 1), lam=1.0, dtype=jnp.float32)
+    op32 = poisson_assembled(prob32)
+    b_block = _rhs_block(prob32, 3)
+    plain = batched_cg_assembled(op32, b_block, n_iter=100, tol=1e-4)
+    fused = batched_cg_assembled(
+        op32,
+        b_block,
+        n_iter=100,
+        tol=1e-4,
+        fused_update=lambda r, ap, alpha: ops.fused_axpy_dot(
+            r, ap, alpha, interpret=True
+        ),
+    )
+    assert [int(i) for i in fused.iterations] == [int(i) for i in plain.iterations]
+    assert [int(s) for s in fused.status] == [int(s) for s in plain.status]
+    np.testing.assert_allclose(
+        np.asarray(fused.x), np.asarray(plain.x), rtol=1e-4, atol=1e-5
+    )
+
+
+# -- setup cache --------------------------------------------------------
+
+
+def test_cache_key_determinism(prob):
+    k1 = solver_setup_key(prob, "chebyshev", degree=2)
+    k2 = solver_setup_key(prob, "chebyshev", degree=2)
+    assert k1 == k2 and hash(k1) == hash(k2)
+    # defaults filled: explicit-default spelling == omitted spelling
+    assert solver_setup_key(prob, "chebyshev") == solver_setup_key(
+        prob, "chebyshev", degree=2
+    )
+    # perturbing λ is a different setup
+    prob2 = build_problem(3, (2, 2, 2), lam=1.0 + 1e-9, deform=0.1,
+                          dtype=jnp.float64)
+    assert solver_setup_key(prob2, "chebyshev") != k1
+    # and so is any precond knob change
+    assert solver_setup_key(prob, "chebyshev", degree=3) != k1
+
+
+def test_mesh_signature_tracks_geometry(prob):
+    s1 = mesh_signature(prob.mesh)
+    assert s1 == mesh_signature(prob.mesh)
+    other = build_problem(3, (2, 2, 2), lam=1.0, deform=0.11, dtype=jnp.float64)
+    assert mesh_signature(other.mesh) != s1  # deformation changes coords
+
+
+def test_precond_signature_rejects_unknown_knobs():
+    with pytest.raises(ValueError, match="unknown preconditioner knob"):
+        precond_signature("chebyshev", degre=2)
+
+
+def test_cache_hit_rebuilds_nothing(prob):
+    cache = SolverCache()
+    s1 = cache.get_or_build(prob, "jacobi")
+    assert (cache.hits, cache.misses) == (0, 1)
+    s2 = cache.get_or_build(prob, "jacobi")
+    assert (cache.hits, cache.misses) == (1, 1)
+    # the zero-setup guarantee: the hit returns the stored object itself
+    assert s2 is s1
+    assert s2.precond is s1.precond and s2.operator is s1.operator
+    stats = cache.stats()
+    assert stats["entries"] == 1 and stats["hit_rate"] == 0.5
+    assert stats["build_s_total"] == s1.build_s
+
+
+def test_cache_lru_eviction(prob):
+    cache = SolverCache(max_entries=2)
+    cache.get_or_build(prob, "none")
+    cache.get_or_build(prob, "jacobi")
+    cache.get_or_build(prob, "none")          # refresh "none" (now MRU)
+    cache.get_or_build(prob, "chebyshev")     # evicts LRU = "jacobi"
+    assert len(cache) == 2 and cache.evictions == 1
+    assert solver_setup_key(prob, "none") in cache
+    assert solver_setup_key(prob, "jacobi") not in cache
+
+
+def test_cache_solves_match_uncached(prob, operator):
+    cache = SolverCache()
+    setup = cache.get_or_build(prob, "chebyshev")
+    b = _rhs_block(prob, 1)[0]
+    got = cg_assembled(setup.operator, b, n_iter=200, tol=TOL,
+                       precond=setup.precond)
+    pc, _ = make_preconditioner("chebyshev", prob, operator)
+    want = cg_assembled(operator, b, n_iter=200, tol=TOL, precond=pc)
+    assert int(got.iterations) == int(want.iterations)
+    np.testing.assert_allclose(np.asarray(got.x), np.asarray(want.x),
+                               rtol=1e-10, atol=1e-12)
+
+
+# -- solver engine ------------------------------------------------------
+
+
+def _request(prob, b, kind="jacobi", **kw):
+    return SolveRequest(prob=prob, b=b, kind=kind, tol=TOL, n_iter=200, **kw)
+
+
+def test_engine_batches_and_preserves_order(prob):
+    engine = SolverEngine(SolverServeConfig(max_batch=16))
+    rhs = _rhs_block(prob, 6, seed=7)
+    # interleave two dispatch groups: jacobi and plain
+    reqs = [
+        _request(prob, rhs[i], kind="jacobi" if i % 2 == 0 else "none")
+        for i in range(6)
+    ]
+    responses = engine.solve(reqs)
+    assert len(responses) == 6
+    assert len(engine.records) == 2  # one dispatch per group
+    assert sorted(r["batch"] for r in engine.records) == [3, 3]
+    for i, (req, resp) in enumerate(zip(reqs, responses)):
+        assert resp.converged, f"column {i}"
+        ref = cg_assembled(
+            poisson_assembled(prob), req.b, n_iter=200, tol=TOL,
+            precond=(None if req.kind == "none"
+                     else make_preconditioner(req.kind, prob,
+                                              poisson_assembled(prob))[0]),
+        )
+        assert resp.iterations == int(ref.iterations)
+        assert resp.status == int(ref.status)
+
+
+def test_engine_max_batch_chunks_slabs(prob):
+    engine = SolverEngine(SolverServeConfig(max_batch=2))
+    responses = engine.solve(
+        [_request(prob, b, kind="none") for b in _rhs_block(prob, 5)]
+    )
+    assert [r["batch"] for r in engine.records] == [2, 2, 1]
+    assert {r.batch_size for r in responses} == {1, 2}
+
+
+def test_engine_second_flush_hits_cache(prob):
+    engine = SolverEngine(SolverServeConfig(max_batch=4))
+    first = engine.solve([_request(prob, b) for b in _rhs_block(prob, 2)])
+    assert all(r.setup_cache == "miss" for r in first)
+    second = engine.solve([_request(prob, b) for b in _rhs_block(prob, 2, 5)])
+    assert all(r.setup_cache == "hit" for r in second)
+    assert engine.cache.stats()["misses"] == 1
+    assert engine.records[-1]["setup_build_s"] == 0.0
+    # identical RHS round: bit-identical answers off the cached setup
+    again = engine.solve([_request(prob, b) for b in _rhs_block(prob, 2)])
+    for a, b in zip(first, again):
+        assert a.iterations == b.iterations
+        assert np.array_equal(np.asarray(a.x), np.asarray(b.x))
+
+
+def test_engine_rejects_bad_rhs(prob):
+    engine = SolverEngine()
+    with pytest.raises(ValueError, match="single"):
+        engine.submit(_request(prob, _rhs_block(prob, 2)))
+    with pytest.raises(ValueError, match="n_global"):
+        engine.submit(
+            SolveRequest(prob=prob, b=jnp.zeros(3, prob.dtype))
+        )
+
+
+def test_engine_solve_time_knobs_split_dispatch(prob):
+    """tol/n_iter are dispatch-group keys, not cache keys: two tolerances
+    dispatch separately but share one cached setup."""
+    engine = SolverEngine()
+    rhs = _rhs_block(prob, 2)
+    engine.submit(SolveRequest(prob=prob, b=rhs[0], kind="jacobi", tol=1e-4))
+    engine.submit(SolveRequest(prob=prob, b=rhs[1], kind="jacobi", tol=1e-8))
+    responses = engine.flush()
+    assert len(engine.records) == 2
+    assert responses[0].iterations < responses[1].iterations
+    stats = engine.cache.stats()
+    assert (stats["misses"], stats["hits"]) == (1, 1)

@@ -37,6 +37,18 @@ def _fig3(n, pct):
     return {"n": n, "pct_roofline": pct}
 
 
+def _batched(n, kind, batch, iters, *, lam=1.0, status="converged"):
+    return {
+        "n": n,
+        "lam": lam,
+        "kind": kind,
+        "dtype": "fp64",
+        "batch": batch,
+        "iters_to_tol": iters,
+        "status": status,
+    }
+
+
 def _write(tmp_path, name, summary):
     p = tmp_path / name
     p.write_text(json.dumps(summary))
@@ -224,6 +236,55 @@ def test_non_converged_new_case_also_fails(tmp_path, capsys):
     )
     assert cb.main([b, c]) == 1
     assert "status=stagnated" in capsys.readouterr().out
+
+
+def test_batched_section_gated_on_iters_and_status(tmp_path, capsys):
+    """batched_records rows key on (n, lam, kind, dtype, batch) and gate
+    on iterations + status like precond rows; wall times are ignored."""
+    base = {
+        "precond_records": [_prec(3, "jacobi", 20)],
+        "batched_records": [
+            _batched(3, "jacobi", 1, 30),
+            _batched(3, "jacobi", 16, 31),
+        ],
+    }
+    good = {
+        "precond_records": [_prec(3, "jacobi", 20)],
+        "batched_records": [
+            _batched(3, "jacobi", 1, 30),
+            _batched(3, "jacobi", 16, 31),
+        ],
+    }
+    b = _write(tmp_path, "a.json", base)
+    assert cb.main([b, _write(tmp_path, "b.json", good)]) == 0
+    # B=16 case regresses by 2 iterations: fails at slack 0, passes at 2
+    bad = json.loads(json.dumps(good))
+    bad["batched_records"][1]["iters_to_tol"] = 33
+    c = _write(tmp_path, "c.json", bad)
+    assert cb.main([b, c]) == 1
+    assert "B=16" in capsys.readouterr().out
+    assert cb.main([b, c, "--slack", "2"]) == 0
+    # a non-converged batched row fails outright
+    sick = json.loads(json.dumps(good))
+    sick["batched_records"][0]["status"] = "max_iter"
+    assert cb.main([b, _write(tmp_path, "d.json", sick)]) == 1
+
+
+def test_batched_section_new_needs_acknowledgement(tmp_path):
+    """First PR with batched_records must pass --allow-new-sections."""
+    b = _write(
+        tmp_path, "a.json", {"precond_records": [_prec(3, "jacobi", 20)]}
+    )
+    c = _write(
+        tmp_path,
+        "b.json",
+        {
+            "precond_records": [_prec(3, "jacobi", 20)],
+            "batched_records": [_batched(3, "jacobi", 1, 30)],
+        },
+    )
+    assert cb.main([b, c]) == 1
+    assert cb.main([b, c, "--allow-new-sections"]) == 0
 
 
 def test_legacy_load_records_missing_section(tmp_path):
