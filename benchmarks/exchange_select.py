@@ -1,9 +1,17 @@
 """Exchange-routing selection (paper §MPI Communication behavior).
 
-Times all-to-all / pairwise / crystal-router over a message-size sweep on 8
-emulated ranks — reproducing the paper's claim structure: crystal router
-wins small (latency-bound) messages, pairwise wins large (bandwidth-bound)
-ones, and the library's autotuner picks per size.
+Two layers, matching how hipBone inherits gslib's setup-time selection:
+
+* the legacy *library* sweep (``main``): times all-to-all / pairwise /
+  crystal-router over a message-size ladder on 8 emulated ranks —
+  reproducing the paper's claim structure that the crystal router wins
+  small (latency-bound) messages and pairwise wins large ones;
+* the *solver-site* plan build (``records``): runs the actual
+  ``comms.plan`` autotuner over every halo-exchange site of a sharded
+  pMG solve setup (CG sum, Schwarz expand/contract shells, each coarse
+  level's exchanges) and reports per-site candidate timings, the winning
+  routing and the analytic wire bytes — the ``exchange_records`` section
+  of the benchmark json.
 """
 from __future__ import annotations
 
@@ -41,17 +49,98 @@ for chunk in [16, 256, 4096, 65536]:
 print(json.dumps(out))
 """
 
+# halo-site plan build: the comms.plan autotuner over a real solver setup's
+# site list.  Persistence is disabled — this run is timing *evidence*, not
+# cache state, and must re-measure every time.
+_CHILD_PLAN = r"""
+import os, json
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ["HIPBONE_EXCHANGE_CACHE"] = ""
+import jax
+jax.config.update("jax_enable_x64", True)
+import jax.numpy as jnp
+from repro.compat import make_mesh
+from repro.comms.topology import ProcessGrid
+from repro.comms import plan as xplan
+from repro.core.precond import SCHWARZ_INNER_DEGREE
+from repro.core.distributed import (
+    build_dist_problem, build_pmg_levels, _exchange_sites, _schwarz_setup,
+)
 
-def main(quick: bool = True) -> list[str]:
+cfg = json.loads(os.environ["EXCHANGE_PLAN_CFG"])
+grid = ProcessGrid((2, 2, 2))
+mesh = make_mesh((8,), ("ranks",))
+prob = build_dist_problem(
+    cfg["n"], grid, tuple(cfg["local"]), lam=1.0, dtype=jnp.float64
+)
+levels, _ = build_pmg_levels(prob, None)
+schwarz = [
+    _schwarz_setup(lvl, min(1, lvl.n_degree - 1), SCHWARZ_INNER_DEGREE)
+    for lvl in levels[:-1]
+]
+sites = _exchange_sites(prob, levels, schwarz)
+plan = xplan.build_exchange_plan(
+    mesh, grid, prob.axis_name, sites,
+    policy="auto", repeats=cfg["repeats"],
+)
+recs = plan.records()
+for r in recs:
+    r["n"] = cfg["n"]
+print(json.dumps(recs))
+"""
+
+
+def _run_child(code: str, extra_env: dict | None = None, timeout: int = 600):
     env = dict(os.environ)
     env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.update(extra_env or {})
     res = subprocess.run(
-        [sys.executable, "-c", _CHILD], capture_output=True, text=True,
-        env=env, timeout=600,
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        env=env, timeout=timeout,
     )
     if res.returncode != 0:
         raise RuntimeError(res.stderr[-2000:])
-    data = json.loads(res.stdout.strip().splitlines()[-1])
+    return json.loads(res.stdout.strip().splitlines()[-1])
+
+
+def records(quick: bool = True) -> list[dict]:
+    """Per-site exchange plan records for the json summary.
+
+    Each record: ``site`` (kind@level), per-candidate ``timings``
+    ("routing/wire" -> best seconds), the winning ``routing`` +
+    ``wire_dtype``, analytic ``bytes`` on the wire, and the plan
+    ``signature`` the persistence layer would key on.
+    """
+    cfg = {
+        "n": 4 if quick else 7,
+        "local": [2, 2, 1] if quick else [2, 2, 2],
+        "repeats": 3 if quick else 5,
+    }
+    return _run_child(
+        _CHILD_PLAN,
+        {"EXCHANGE_PLAN_CFG": json.dumps(cfg)},
+        timeout=900,
+    )
+
+
+def rows_from(recs: list[dict]) -> list[str]:
+    """CSV rows from plan records (one per site, winner + best timings)."""
+    rows = ["exchange_plan,site,N,winner,wire,bytes,best_us,candidates"]
+    for r in recs:
+        best = min(r["timings"].values()) if r["timings"] else float("nan")
+        cands = "|".join(
+            f"{k}:{v*1e6:.0f}" for k, v in sorted(r["timings"].items())
+        )
+        rows.append(
+            f"exchange_plan,{r['site']},{r.get('n', '')},{r['routing']},"
+            f"{r['wire_dtype'] or 'native'},{r['bytes']},{best*1e6:.0f},"
+            f"{cands}"
+        )
+    return rows
+
+
+def main(quick: bool = True) -> list[str]:
+    data = _run_child(_CHILD)
     rows = ["exchange,chunk_floats,all_to_all_us,pairwise_us,crystal_us,winner"]
     for chunk, row in data.items():
         rows.append(
@@ -64,3 +153,4 @@ def main(quick: bool = True) -> list[str]:
 
 if __name__ == "__main__":
     print("\n".join(main()))
+    print("\n".join(rows_from(records())))

@@ -13,9 +13,12 @@
 
 ``--json PATH`` additionally writes a machine-readable summary: every
 section's raw CSV rows plus the precond sweep (``precond_records``), the
-fig3 sweep (``fig3_records``) and the multi-RHS amortization sweep
+fig3 sweep (``fig3_records``), the multi-RHS amortization sweep
 (``batched_records``: per-(N, kind, B) max column iterations, setup-cache
-hit/miss state and per-solve wall share) as structured records.  Every record in
+hit/miss state and per-solve wall share) and the halo-exchange plan build
+(``exchange_records``: per-site candidate timings, winning routing, wire
+bytes — the ``comms.plan`` autotuner over a real solver setup's site
+list) as structured records.  Every record in
 both carries the dry-run roofline triple ``model_bytes`` /
 ``achievable_s`` / ``pct_roofline`` (analytic Eq. 4–6 traffic bound over
 the AOT-compiled program's own HLO roofline time at the TPU_V5E
@@ -65,7 +68,7 @@ def main() -> None:
         "table1": table1_blocks.main,
         "fig456": fig456_scaling.main,
         "table2": table2_fom.main,
-        "exchange": exchange_select.main,
+        "exchange": None,
         "precond": None,
         "batched": None,
     }
@@ -94,6 +97,11 @@ def main() -> None:
                 recs = batched_solve.records(quick=quick)
                 rows = batched_solve.rows_from(recs)
                 summary["batched_records"] = recs
+            elif name == "exchange":
+                recs = exchange_select.records(quick=quick)
+                rows = exchange_select.main(quick=quick)
+                rows += exchange_select.rows_from(recs)
+                summary["exchange_records"] = recs
             else:
                 rows = list(fn(quick=quick))
             for row in rows:

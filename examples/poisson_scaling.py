@@ -71,6 +71,15 @@ def main() -> None:
                     help="single-kernel fused assembled apply for the "
                          "interior element block (kernels/poisson_fused.py); "
                          "default: kernels.ops.should_fuse_operator policy")
+    ap.add_argument("--exchange",
+                    choices=["auto", "face_sweep", "crystal", "fused"],
+                    default=None,
+                    help="halo-exchange routing policy (comms.plan): "
+                         "'auto' times the candidates per site at setup "
+                         "and picks winners; a named routing pins every "
+                         "site.  Default: HIPBONE_EXCHANGE env, else auto. "
+                         "Iteration counts are identical under every "
+                         "choice — only wall time moves.")
     args = ap.parse_args()
 
     ranks = args.ranks
@@ -115,7 +124,17 @@ def main() -> None:
                           lmin=lmin, lmax=lmax,
                           precond_dtype=pdtype, cg_variant=variant,
                           two_phase=args.two_phase, record_history=True,
-                          fused_operator=args.fused_operator or None))
+                          fused_operator=args.fused_operator or None,
+                          exchange=args.exchange))
+    plan = getattr(getattr(run, "__wrapped__", run), "exchange_plan", None)
+    if plan is not None:
+        if plan.sites:
+            for rec in plan.records():
+                print(f"exchange plan: {rec['site']:>12} -> {rec['routing']}"
+                      f"/{rec['wire_dtype'] or 'native'}"
+                      + (" (cached)" if rec["from_cache"] else ""))
+        else:
+            print(f"exchange plan: policy {plan.policy!r} pinned at every site")
     x, rdotr, iters, status, hist = run()
     jax.block_until_ready(x)
     t0 = time.perf_counter()

@@ -18,6 +18,12 @@ Three gated record sections, compared on the cases both jsons share:
     the slack (``iters_to_tol`` is the max per-column count of the
     dispatch).  Wall-time amortization itself is machine-dependent and
     reported, never gated.
+  * ``exchange_records`` (key: site, N) — the halo-exchange plan build.
+    Candidate-side validity gate only: each site's winning ``routing``
+    must actually be the argmin of its own reported ``timings`` (a plan
+    that picks a loser is a tuner bug, not a tuning).  The timings
+    themselves are machine-dependent and never compared across jsons;
+    winner changes are reported as information.
 
 Independently of the pairwise comparison, every *candidate* row in a
 gated section must report ``status: "converged"`` (the
@@ -50,7 +56,9 @@ import argparse
 import json
 import sys
 
-GATED_SECTIONS = ("precond_records", "fig3_records", "batched_records")
+GATED_SECTIONS = (
+    "precond_records", "fig3_records", "batched_records", "exchange_records"
+)
 
 
 def _key(section: str, r: dict) -> tuple:
@@ -60,6 +68,8 @@ def _key(section: str, r: dict) -> tuple:
         return (
             r["n"], r["lam"], r["kind"], r.get("dtype", "fp64"), r["batch"]
         )
+    if section == "exchange_records":
+        return (r["site"], r.get("n", 0))
     return (r["n"],)
 
 
@@ -70,6 +80,9 @@ def _fmt_key(section: str, key: tuple) -> str:
     if section == "batched_records":
         n, lam, kind, dtype, batch = key
         return f"N={n} lam={lam} {kind:>16} [{dtype}] B={batch}"
+    if section == "exchange_records":
+        site, n = key
+        return f"{site:>12} N={n}"
     return f"N={key[0]}"
 
 
@@ -108,11 +121,29 @@ def compare_section(
             label = _fmt_key(section, key)
             print(f"{'REGRESSION':>10}  {section[:-8]} {label}: status={status}")
             failures.append(f"{section} {label}: status={status}")
+        if section == "exchange_records":
+            # winner-validity gate: the recorded routing must be the argmin
+            # of the record's own timing sweep (over every wire candidate of
+            # that routing)
+            r = cmap[key]
+            timings = r.get("timings") or {}
+            if timings:
+                best = min(timings, key=timings.get).split("/")[0]
+                if r.get("routing") != best:
+                    label = _fmt_key(section, key)
+                    print(
+                        f"{'REGRESSION':>10}  {section[:-8]} {label}: "
+                        f"winner {r.get('routing')} is not the timed best "
+                        f"({best})"
+                    )
+                    failures.append(f"{section} {label}: invalid winner")
     for key in shared:
         b, c = bmap[key], cmap[key]
         label = _fmt_key(section, key)
         msgs = []
         bad = False
+        if section == "exchange_records":
+            msgs.append(f"winner {b.get('routing')} -> {c.get('routing')}")
         if "iters_to_tol" in b and "iters_to_tol" in c:
             delta = int(c["iters_to_tol"]) - int(b["iters_to_tol"])
             msgs.append(

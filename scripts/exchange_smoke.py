@@ -1,0 +1,62 @@
+#!/usr/bin/env python
+"""CI exchange-policy smoke: every routing, identical iterations/status.
+
+Runs one sharded pMG solve (8 virtual ranks) under each
+``HIPBONE_EXCHANGE`` policy — ``face_sweep``, ``crystal``, ``fused`` and
+``auto`` (timed plan, persistence disabled) — through the *env-var*
+path a production launch would use (``dist_cg(exchange=None)`` defers to
+the env), and fails unless every policy reports the same iteration count
+and solve status.  This is the plan subsystem's core contract: routing
+is a pure performance knob, never a numerics knob.
+"""
+import os
+import sys
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+os.environ["HIPBONE_EXCHANGE_CACHE"] = ""  # smoke runs never write plans
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.compat import make_mesh  # noqa: E402
+from repro.comms.topology import ProcessGrid  # noqa: E402
+from repro.core.cg import status_name  # noqa: E402
+from repro.core.distributed import build_dist_problem, dist_cg  # noqa: E402
+
+
+def main() -> int:
+    grid = ProcessGrid((2, 2, 2))
+    mesh = make_mesh((8,), ("ranks",))
+    prob = build_dist_problem(3, grid, (2, 1, 1), lam=0.8, dtype=jnp.float64)
+    rng = np.random.default_rng(0)
+    b = jnp.asarray(rng.standard_normal((grid.size, prob.m3)))
+
+    results: dict[str, tuple[int, str]] = {}
+    for policy in ("face_sweep", "crystal", "fused", "auto"):
+        os.environ["HIPBONE_EXCHANGE"] = policy  # the production knob path
+        run = dist_cg(prob, mesh, b, n_iter=60, tol=1e-9, precond="pmg")
+        _, _, iters, status, _ = jax.jit(run)()
+        results[policy] = (int(iters), status_name(int(status)))
+        plan = run.exchange_plan
+        print(
+            f"{policy:>10}: iters={int(iters)} status={results[policy][1]} "
+            f"(plan: policy={plan.policy}, {len(plan.sites)} timed sites)"
+        )
+    ref = results["face_sweep"]
+    bad = {p: r for p, r in results.items() if r != ref}
+    if bad:
+        print(f"FAIL: policies disagree with face_sweep {ref}: {bad}")
+        return 1
+    if ref[1] != "converged":
+        print(f"FAIL: smoke solve did not converge: {ref}")
+        return 1
+    print(f"OK: all policies identical at {ref[0]} iterations, {ref[1]}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -21,9 +21,27 @@ from jax.sharding import PartitionSpec as P
 from ..compat import shard_map
 from .exchange import EXCHANGES
 
-__all__ = ["autotune_exchange"]
+__all__ = ["autotune_exchange", "clear_cache"]
 
 _CACHE: dict[tuple, str] = {}
+
+
+def clear_cache() -> None:
+    """Drop every cached winner (tests force a re-time through this)."""
+    _CACHE.clear()
+
+
+def _mesh_key(mesh: jax.sharding.Mesh) -> tuple:
+    """Content identity of a mesh: axis layout + device ids.
+
+    ``id(mesh)`` is wrong twice over — two meshes over the same devices
+    miss each other's timings, and a dead mesh's id can be recycled by a
+    *different* mesh, silently serving it a stale winner.
+    """
+    return (
+        tuple(mesh.shape.items()),
+        tuple(int(d.id) for d in mesh.devices.flat),
+    )
 
 
 def autotune_exchange(
@@ -36,7 +54,7 @@ def autotune_exchange(
     candidates: tuple[str, ...] | None = None,
 ) -> str:
     """Time each exchange algorithm on (P, *chunk_shape) buffers; return winner."""
-    key = (id(mesh), axis_name, tuple(chunk_shape), jnp.dtype(dtype).name)
+    key = (_mesh_key(mesh), axis_name, tuple(chunk_shape), jnp.dtype(dtype).name)
     if key in _CACHE:
         return _CACHE[key]
 

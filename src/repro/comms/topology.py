@@ -70,6 +70,24 @@ class ProcessGrid:
                 pairs.append((r, r + direction * stride))
         return pairs
 
+    def offset_perm(self, offset: tuple[int, int, int]) -> list[tuple[int, int]]:
+        """ppermute pairs shifting by a diagonal ``(ox, oy, oz)`` offset.
+
+        Generalizes :meth:`shift_perm` to edge/corner neighbors — the
+        message table of the fused one-round exchange routings, where all
+        face/edge/corner slabs travel concurrently instead of propagating
+        through sequential dimension sweeps.  Ranks whose offset target
+        falls outside the grid don't send (and receive ppermute zero-fill),
+        exactly like the face-shift boundary handling.
+        """
+        pairs = []
+        for r in range(self.size):
+            c = self.coords(r)
+            cc = tuple(c[d] + offset[d] for d in range(3))
+            if all(0 <= cc[d] < self.shape[d] for d in range(3)):
+                pairs.append((r, self.rank(*cc)))
+        return pairs
+
     def neighbor_count(self, rank: int) -> int:
         """Number of face neighbors (the paper's pairwise message count /2... per direction)."""
         n = 0

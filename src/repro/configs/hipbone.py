@@ -82,6 +82,13 @@ class PoissonConfig:
     # scatter/local/gather pipeline, None defers to the backend policy
     # (kernels.ops.should_fuse_operator; HIPBONE_FUSED=0/1 overrides).
     fused_operator: bool | None = None
+    # halo-exchange routing policy for sharded solves (comms.plan):
+    # "auto" times face_sweep/crystal/fused per exchange site at setup and
+    # records the winners (persisted per content signature), a named
+    # routing pins every site, None defers to HIPBONE_EXCHANGE (default
+    # auto-less face_sweep).  Pure performance knob: iteration counts are
+    # identical under every choice.  Single-device solves ignore it.
+    exchange: str | None = None
     # multi-RHS serving: how many right-hand sides one solver dispatch
     # carries (core.cg.batched_cg_assembled / serving.SolverEngine slot
     # width).  1 = the classic single-column solve; the batched-solve
@@ -157,6 +164,12 @@ class PoissonConfig:
             bad(
                 f"fused_operator must be None/True/False, "
                 f"got {self.fused_operator!r}"
+            )
+        if self.exchange not in (None, "auto", "face_sweep", "crystal", "fused"):
+            bad(
+                f"unknown exchange {self.exchange!r}; use 'auto', "
+                "'face_sweep', 'crystal', 'fused', or None "
+                "(= HIPBONE_EXCHANGE env)"
             )
         if self.batch_rhs < 1:
             bad(f"batch_rhs must be >= 1, got {self.batch_rhs}")

@@ -384,6 +384,65 @@ def chebyshev_apply(
     return apply
 
 
+def chebyshev_apply_deferred(
+    operator: Callable[[jax.Array], jax.Array],
+    operator_pair: Callable[[jax.Array, jax.Array], jax.Array],
+    dinv: jax.Array,
+    lmax: jax.Array | float,
+    *,
+    lmin: jax.Array | float | None = None,
+    degree: int = 2,
+) -> Callable[[jax.Array, jax.Array], jax.Array]:
+    """Chebyshev–Jacobi apply whose FIRST A-apply consumes a deferred input.
+
+    The cross-level V-cycle overlap hands each coarse level its residual as
+    a ``(raw, consistent)`` pair: ``raw`` is the restriction *before* its
+    halo sum-exchange, bitwise final on every interior slot (the exchange
+    only rewrites face slabs), while ``consistent`` carries the exchange.
+    Because the Jacobi base is elementwise, ``d = D⁻¹ raw / θ`` matches
+    ``D⁻¹ con / θ`` bitwise on the interior — so the first A-apply's
+    *interior* element block can start from ``raw`` with no data dependence
+    on the restriction exchange, and XLA overlaps that exchange with the
+    finer level's interior work.  ``operator_pair(d_raw, d_con)`` is that
+    split A-apply (interior gathers from the first argument); it must equal
+    ``operator(d_con)`` bitwise, which keeps this whole apply bit-identical
+    to :func:`chebyshev_apply` on the consistent input.
+
+    Only valid for an *array* ``dinv`` base (elementwise); Schwarz bases
+    transport face values through their expand shells and cannot defer.
+
+    Returns:
+      ``apply(raw, con) -> z`` equal bitwise to
+      ``chebyshev_apply(...)(con)``.
+    """
+    if degree < 1:
+        raise ValueError(f"chebyshev degree must be >= 1, got {degree}")
+    lmax = jnp.asarray(lmax)
+    lmin_v = lmax / CHEB_LMIN_RATIO if lmin is None else jnp.asarray(lmin)
+    theta = 0.5 * (lmax + lmin_v)
+    delta = 0.5 * (lmax - lmin_v)
+    sigma = theta / delta
+
+    def apply(raw: jax.Array, con: jax.Array) -> jax.Array:
+        rho = 1.0 / sigma
+        d = dinv * con / theta
+        z = d
+        res = con
+        for step in range(degree - 1):
+            if step == 0 and raw is not con:
+                d_raw = dinv * raw / theta
+                res = res - operator_pair(d_raw, d)
+            else:
+                res = res - operator(d)
+            rho_new = 1.0 / (2.0 * sigma - rho)
+            d = rho_new * rho * d + (2.0 * rho_new / delta) * (dinv * res)
+            z = z + d
+            rho = rho_new
+        return z
+
+    return apply
+
+
 # ---------------------------------------------------------------------------
 # p-multigrid: degree ladder, transfers, V-cycle
 # ---------------------------------------------------------------------------
@@ -530,6 +589,55 @@ def make_vcycle(
         return z + smooth(r - op(z))                    # post-smooth
 
     return lambda r: cycle(0, r)
+
+
+def make_vcycle_overlapped(
+    operators: Sequence[Callable[[jax.Array], jax.Array]],
+    operators_pair: Sequence[Callable[[jax.Array, jax.Array], jax.Array]],
+    smoothers: Sequence[Callable[[jax.Array], jax.Array]],
+    smoothers_pair: Sequence[Callable[[jax.Array, jax.Array], jax.Array]],
+    restricts_pair: Sequence[
+        Callable[[jax.Array], tuple[jax.Array, jax.Array]]
+    ],
+    prolongs_pair: Sequence[
+        Callable[[jax.Array], tuple[jax.Array, jax.Array]]
+    ],
+    coarse_apply_pair: Callable[[jax.Array, jax.Array], jax.Array],
+) -> Callable[[jax.Array], jax.Array]:
+    """V-cycle with cross-level exchange/compute overlap, bit-identical to
+    :func:`make_vcycle`.
+
+    The sharded transfers end in a halo sum-exchange that only rewrites
+    face slabs — every interior slot of the *raw* (pre-exchange) restricted
+    or prolonged box is already bitwise final.  So each transfer here
+    returns the ``(raw, consistent)`` pair instead of the consistent box
+    alone, and the next consumer starts its interior element work from
+    ``raw``: the coarse level's first smoother A-apply
+    (``smoothers_pair`` / ``coarse_apply_pair``, see
+    :func:`chebyshev_apply_deferred`) overlaps the restriction exchange,
+    and the fine level's post-smooth residual A-apply (``operators_pair``,
+    interior gathers from its first argument) overlaps the prolongation
+    exchange.  Every deferred operand is bitwise equal to its consistent
+    twin on the slots actually read, so the cycle output — and hence PCG
+    iteration counts — cannot move.
+
+    ``smoothers_pair[i]`` may ignore its raw argument (Schwarz bases must:
+    their expand shells transport face values); that degrades the overlap
+    at that level, never the result.
+    """
+    n_smoothed = len(smoothers)
+
+    def cycle(level: int, raw: jax.Array, con: jax.Array) -> jax.Array:
+        if level == n_smoothed:
+            return coarse_apply_pair(raw, con)
+        z = smoothers_pair[level](raw, con)             # pre-smooth (z₀ = 0)
+        raw_c, con_c = restricts_pair[level](con - operators[level](z))
+        zc = cycle(level + 1, raw_c, con_c)
+        p_raw, p_con = prolongs_pair[level](zc)         # coarse-grid corr.
+        resid = con - operators_pair[level](z + p_raw, z + p_con)
+        return (z + p_con) + smoothers[level](resid)    # post-smooth
+
+    return lambda r: cycle(0, r, r)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -33,6 +33,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import json
 import time
 from collections import OrderedDict
 from typing import Any, Callable
@@ -46,9 +47,24 @@ from .precond import PrecondInfo, make_preconditioner, precond_signature
 __all__ = [
     "SolverCache",
     "SolverSetup",
+    "content_signature",
     "mesh_signature",
     "solver_setup_key",
 ]
+
+
+def content_signature(*parts: Any) -> str:
+    """sha256[:16] over a canonical json rendering of ``parts``.
+
+    The :func:`mesh_signature` hashing style for non-mesh identities:
+    stable across processes (no ``id()``, no dict ordering), short enough
+    to live in filenames, records and logs.  ``comms.plan`` keys its
+    persisted exchange plans with this, so a tuned plan sits alongside
+    the solver cache's mesh-signature keys on disk.
+    """
+    h = hashlib.sha256()
+    h.update(json.dumps(parts, sort_keys=True, default=str).encode())
+    return h.hexdigest()[:16]
 
 
 def mesh_signature(mesh) -> str:

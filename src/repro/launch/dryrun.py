@@ -362,6 +362,7 @@ def run_poisson_cell(name: str, mesh_kind: str) -> dict:
         precond_dtype=pc.precond_dtype,
         cg_variant=pc.cg_variant,
         fused_operator=pc.fused_operator,
+        exchange=pc.exchange,
     )
     lowered = jax.jit(run.func).lower(*run.args)
     t_lower = time.time() - t0

@@ -97,6 +97,71 @@ print("OK")
     )
 
 
+def test_halo_routings_bitwise_equivalent():
+    """crystal/fused halo routings == face sweep, bit for bit.
+
+    At the native wire every routing must replicate the face sweep's IEEE
+    reduction tree exactly (that is what makes ``comms.plan`` a pure
+    performance knob); with a narrowed fp32 wire on fp64 boxes the sum
+    routings agree to wire rounding while each stays replica-consistent.
+    """
+    run_subprocess(
+        """
+import jax, numpy as np, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.comms.topology import ProcessGrid
+from repro.comms import halo
+from repro.compat import make_mesh, shard_map
+
+mesh = make_mesh((8,), ("r",))
+rng = np.random.default_rng(0)
+
+def run(fn, boxes):
+    f = jax.jit(shard_map(lambda b: fn(b[0])[None], mesh=mesh,
+                          in_specs=P("r"), out_specs=P("r")))
+    return np.array(f(jnp.asarray(boxes)))
+
+for shape in [(2, 2, 2), (4, 2, 1), (8, 1, 1)]:
+    grid = ProcessGrid(shape)
+    for box_shape, dt in [((3, 4, 5), np.float64), ((3, 3, 3), np.float32)]:
+        boxes = rng.standard_normal((8, *box_shape)).astype(dt)
+        for wire in (None, jnp.float32):
+            bitwise = wire is None or dt == np.float32
+            ref = run(lambda b: halo.sum_exchange(b, grid, "r", wire), boxes)
+            for routing in ("crystal", "fused"):
+                got = run(lambda b: halo.sum_exchange(
+                    b, grid, "r", wire, routing), boxes)
+                if bitwise:
+                    assert np.array_equal(ref, got), (shape, routing, wire)
+                else:
+                    assert np.allclose(ref, got, rtol=1e-6, atol=1e-6)
+            refc = run(lambda b: halo.copy_exchange(b, grid, "r", wire), boxes)
+            gotc = run(lambda b: halo.copy_exchange(
+                b, grid, "r", wire, "fused"), boxes)
+            # copy ships owner values verbatim: bitwise at every wire
+            assert np.array_equal(refc, gotc), (shape, wire)
+            depth = 1
+            refe = run(lambda b: halo.expand_exchange(
+                b, grid, "r", depth, wire), boxes)
+            gote = run(lambda b: halo.expand_exchange(
+                b, grid, "r", depth, wire, "fused"), boxes)
+            assert np.array_equal(refe, gote), (shape, wire)
+            big = rng.standard_normal(
+                (8, *(s + 2 * depth for s in box_shape))).astype(dt)
+            refk = run(lambda b: halo.contract_exchange(
+                b, grid, "r", depth, wire), big)
+            gotk = run(lambda b: halo.contract_exchange(
+                b, grid, "r", depth, wire, "fused"), big)
+            if bitwise:
+                assert np.array_equal(refk, gotk), (shape, wire)
+            else:
+                assert np.allclose(refk, gotk, rtol=1e-5, atol=1e-5)
+print("OK")
+""",
+        timeout=900,
+    )
+
+
 def test_distributed_cg_matches_single_device():
     run_subprocess(
         """

@@ -1,0 +1,240 @@
+"""Exchange-plan subsystem tests (comms.plan + comms.autotune).
+
+Single-process tests cover the pure-python plan logic (forced policies,
+routing menus, signature behavior); subprocess tests (8 fake CPU devices)
+cover the timed sweep, persistence round-trip, and the solver-level
+contract that every routing policy yields bit-identical PCG iteration
+counts and statuses.
+"""
+import pytest
+
+from conftest import run_subprocess
+
+
+# ---------------------------------------------------------------- pure python
+def test_resolve_routing_menus():
+    from repro.comms import plan as xplan
+
+    # sum sites have a staged route; the pair shells fall back cleanly
+    assert xplan.resolve_routing("sum", "crystal") == "crystal"
+    for kind in ("copy", "expand", "contract"):
+        assert xplan.resolve_routing(kind, "crystal") == "face_sweep"
+    for kind in ("sum", "copy", "expand", "contract"):
+        assert xplan.resolve_routing(kind, "face_sweep") == "face_sweep"
+        assert xplan.resolve_routing(kind, "fused") == "fused"
+    with pytest.raises(ValueError, match="unknown exchange routing"):
+        xplan.resolve_routing("sum", "pigeon")
+
+
+def test_forced_plan_skips_timing_entirely():
+    """A non-auto policy never touches the mesh: no timings, no persistence."""
+    from repro.comms import plan as xplan
+
+    plan = xplan.build_exchange_plan(
+        None, None, "ranks", [], policy="crystal"
+    )  # mesh=None proves the forced path never uses it
+    assert not plan.timed and not plan.from_cache and not plan.sites
+    assert plan.lookup("sum", 0) == ("crystal", None)
+    assert plan.lookup("sum", 3) == ("crystal", None)  # any level
+    # pair kinds: crystal policy falls back to the face sweep
+    for kind in ("copy", "expand", "contract"):
+        assert plan.lookup(kind, 0) == ("face_sweep", None)
+
+    with pytest.raises(ValueError, match="unknown exchange policy"):
+        xplan.build_exchange_plan(None, None, "ranks", [], policy="bogus")
+
+
+def test_default_policy_env(monkeypatch):
+    from repro.comms import plan as xplan
+
+    monkeypatch.delenv("HIPBONE_EXCHANGE", raising=False)
+    assert xplan.default_policy() == "face_sweep"
+    monkeypatch.setenv("HIPBONE_EXCHANGE", "fused")
+    assert xplan.default_policy() == "fused"
+    monkeypatch.setenv("HIPBONE_EXCHANGE_CACHE", "")
+    assert xplan.plan_cache_dir() is None  # empty string disables persistence
+
+
+def test_site_descriptor_shares_level():
+    """Same-shaped sites at different levels share one timing class."""
+    from repro.comms.plan import ExchangeSite
+
+    a = ExchangeSite("sum", 1, (3, 5, 5), "float64")
+    b = ExchangeSite("sum", 2, (3, 5, 5), "float64")
+    assert a.key != b.key
+    assert a.descriptor() == b.descriptor()
+    assert a.descriptor() != ExchangeSite("sum", 1, (3, 5, 7), "float64").descriptor()
+    assert a.descriptor() != ExchangeSite("copy", 1, (3, 5, 5), "float64").descriptor()
+
+
+# ------------------------------------------------------------- timed + disk
+def test_plan_persistence_roundtrip():
+    """auto plan: timed once, memoized in-process, reloaded from disk."""
+    run_subprocess(
+        """
+import os, tempfile
+import jax
+jax.config.update("jax_enable_x64", True)
+import jax.numpy as jnp
+from repro.compat import make_mesh
+from repro.comms.topology import ProcessGrid
+from repro.comms import plan as xplan
+from repro.core.distributed import (
+    build_dist_problem, build_pmg_levels, _exchange_sites, _schwarz_setup,
+)
+from repro.core.precond import SCHWARZ_INNER_DEGREE
+
+grid = ProcessGrid((2, 2, 2))
+mesh = make_mesh((8,), ("ranks",))
+prob = build_dist_problem(3, grid, (2, 1, 1), lam=1.0, dtype=jnp.float64)
+levels, _ = build_pmg_levels(prob, None)
+schwarz = [
+    _schwarz_setup(lvl, min(1, lvl.n_degree - 1), SCHWARZ_INNER_DEGREE)
+    for lvl in levels[:-1]
+]
+sites = _exchange_sites(prob, levels, schwarz)
+assert {s.key for s in sites} >= {"sum@0", "copy@0", "expand@0", "contract@0"}
+
+with tempfile.TemporaryDirectory() as tmp:
+    p1 = xplan.build_exchange_plan(
+        mesh, grid, "ranks", sites, policy="auto", repeats=1, cache_dir=tmp)
+    assert p1.timed and not p1.from_cache
+    assert set(p1.sites) == {s.key for s in sites}
+    for sp in p1.sites.values():
+        assert sp.timings and sp.routing == min(
+            sp.timings, key=sp.timings.get).split("/")[0]
+        assert sp.wire_dtype is None       # wire="native" never narrows
+        assert sp.bytes > 0
+    # same-shape coarse levels share one timing sweep (same dict object)
+    files = set(os.listdir(tmp))
+    assert len(files) == 1                 # one plan file persisted
+
+    # in-process memo: second build is the very same object, no new files
+    p2 = xplan.build_exchange_plan(
+        mesh, grid, "ranks", sites, policy="auto", repeats=1, cache_dir=tmp)
+    assert p2 is p1 and set(os.listdir(tmp)) == files
+
+    # disk round-trip: drop the memo, the plan reloads without re-timing
+    xplan._MEMORY.clear()
+    p3 = xplan.build_exchange_plan(
+        mesh, grid, "ranks", sites, policy="auto", repeats=1, cache_dir=tmp)
+    assert p3.from_cache and not p3.timed
+    assert p3.signature == p1.signature
+    for k in p1.sites:
+        kind, lvl = k.split("@")
+        assert p3.lookup(kind, int(lvl)) == p1.lookup(kind, int(lvl))
+
+    # a different wire axis is a different signature (won't cross-load)
+    xplan._MEMORY.clear()
+    p4 = xplan.build_exchange_plan(
+        mesh, grid, "ranks", sites, policy="auto", repeats=1, cache_dir=tmp,
+        wire="auto")
+    assert p4.signature != p1.signature and not p4.from_cache
+    # fp64 boxes got an fp32 wire candidate in the auto sweep
+    assert any("/float32" in lbl
+               for sp in p4.sites.values() for lbl in sp.timings)
+
+    # clear_plan_cache wipes both layers
+    xplan.clear_plan_cache(cache_dir=tmp)
+    assert not xplan._MEMORY and not os.listdir(tmp)
+print("OK")
+"""
+    )
+
+
+def test_autotune_mesh_key_and_nonpow2():
+    """Content-keyed autotune cache + crystal filtered on non-pow2 axes."""
+    run_subprocess(
+        """
+import jax, numpy as np
+from repro.compat import make_mesh
+from repro.comms import autotune
+
+m1 = make_mesh((6,), ("r",))
+# equivalent mesh built a different way (jax may or may not intern them —
+# the content key must not care either way)
+m2 = jax.sharding.Mesh(np.array(jax.devices()).reshape(6), ("r",))
+assert autotune._mesh_key(m1) == autotune._mesh_key(m2)
+# a different axis layout over the same devices is a different identity
+m3 = make_mesh((2, 3), ("a", "b"))
+assert autotune._mesh_key(m3) != autotune._mesh_key(m1)
+
+w1 = autotune.autotune_exchange(m1, "r", (4,), repeats=1)
+n_entries = len(autotune._CACHE)
+w2 = autotune.autotune_exchange(m2, "r", (4,), repeats=1)
+assert w2 == w1
+assert len(autotune._CACHE) == n_entries   # content key hit, no re-time
+
+# 6 ranks: the crystal router needs a power of two and must be filtered
+# even when explicitly offered
+w3 = autotune.autotune_exchange(
+    m1, "r", (8,), repeats=1,
+    candidates=("crystal_router", "pairwise"))
+assert w3 == "pairwise", w3
+
+autotune.clear_cache()
+assert not autotune._CACHE
+print("OK")
+""",
+        devices=6,
+    )
+
+
+# ---------------------------------------------------------------- solver level
+def test_solve_policy_identical_iterations():
+    """Every routing policy: same PCG iterations/status; x to ~1 ulp.
+
+    The exchange primitives are bitwise-identical across routings at the
+    native wire; the full solves still go through *different* XLA programs
+    (different comm graphs change fusion/FMA decisions elsewhere), so x is
+    compared to 1e-11 while iteration counts and statuses are exact.
+    """
+    run_subprocess(
+        """
+import os
+os.environ["HIPBONE_EXCHANGE_CACHE"] = ""
+import jax
+jax.config.update("jax_enable_x64", True)
+import numpy as np, jax.numpy as jnp
+from repro.compat import make_mesh
+from repro.comms.topology import ProcessGrid
+from repro.core.distributed import build_dist_problem, dist_cg
+
+grid = ProcessGrid((2, 2, 2))
+mesh = make_mesh((8,), ("ranks",))
+prob = build_dist_problem(2, grid, (1, 1, 2), lam=0.8, dtype=jnp.float64)
+rng = np.random.default_rng(0)
+b = jnp.asarray(rng.standard_normal((grid.size, prob.m3)))
+
+results = {}
+for policy in ("face_sweep", "crystal", "fused"):
+    run = jax.jit(dist_cg(prob, mesh, b, n_iter=40, tol=1e-9,
+                          precond="pmg", exchange=policy))
+    x, rdotr, iters, status, _ = run()
+    results[policy] = (np.array(x), int(iters), int(status))
+ref = results["face_sweep"]
+for policy in ("crystal", "fused"):
+    x, iters, status = results[policy]
+    assert (iters, status) == ref[1:], (policy, iters, status, ref[1:])
+    assert np.allclose(x, ref[0], rtol=0, atol=1e-11), (
+        policy, np.abs(x - ref[0]).max())
+
+# auto policy: times the sites, still lands on the same trajectory
+run = dist_cg(prob, mesh, b, n_iter=40, tol=1e-9,
+              precond="pmg", exchange="auto")
+plan = run.exchange_plan
+assert plan.timed and plan.sites
+x, rdotr, iters, status, _ = jax.jit(run)()
+assert (int(iters), int(status)) == ref[1:]
+
+# cross-level overlap off: same math, different schedule
+run = jax.jit(dist_cg(prob, mesh, b, n_iter=40, tol=1e-9,
+                      precond="pmg", exchange="face_sweep",
+                      vcycle_overlap=False))
+x, rdotr, iters, status, _ = run()
+assert (int(iters), int(status)) == ref[1:]
+assert np.allclose(np.array(x), ref[0], rtol=0, atol=1e-11)
+print("OK iters", ref[1])
+""",
+        timeout=900,
+    )
