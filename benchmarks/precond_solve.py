@@ -37,7 +37,15 @@ Degrees cover the paper's sweep corners: N ∈ {3, 7, 15} (quick; full adds
 
 ``main`` returns CSV rows; ``records`` returns the same data as dicts for
 the machine-readable BENCH json emitted by ``benchmarks.run``
-(``scripts/compare_bench.py`` gates on the (N, λ, kind, dtype) keys).
+(``scripts/compare_bench.py`` gates on the (N, λ, kind, dtype,
+coefficient) keys).
+
+The variable-coefficient rows (pr10) solve A = -∇·(k(x)∇) + λ(x) with
+the "smooth" family under mixed BCs and the "checker" octant-jump family
+under pure Dirichlet, at N ∈ {3, 7} over the ``VARCOEF_PRECONDS`` ladder
+subset — coefficients reach every rung through the folded g/w streams,
+so per-apply cost is unchanged by construction and the new rows gate on
+iterations/status like every other.
 """
 from __future__ import annotations
 
@@ -79,7 +87,25 @@ def _use_fused_default():
     return ops.fused_override()  # None -> auto: should_fuse_streams
 
 
-def _solve_case(n: int, shape, lam: float, tol: float, use_fused=None):
+# the variable-coefficient rows run a representative ladder subset (the
+# cheap rungs plus the iteration-count champion) — coefficients reach
+# every rung through the same folded g/w streams, so the full 8-rung
+# sweep on the const rows already covers the per-rung cost axis
+VARCOEF_PRECONDS = ("jacobi", "chebyshev", "schwarz", "pmg", "pmg-galerkin-mat")
+# coefficient family -> bc spec for its benchmark rows
+VARCOEF_CASES = (("smooth", "mixed"), ("checker", "dirichlet"))
+
+
+def _solve_case(
+    n: int,
+    shape,
+    lam: float,
+    tol: float,
+    use_fused=None,
+    coefficient: str | None = None,
+    bc=None,
+    preconds=PRECONDS,
+):
     import jax
 
     jax.config.update("jax_enable_x64", True)
@@ -110,14 +136,20 @@ def _solve_case(n: int, shape, lam: float, tol: float, use_fused=None):
         ops.should_fuse_streams(jnp.float32) if use_fused is None else use_fused
     )
 
-    prob = build_problem(n, shape, lam=lam, deform=0.15, dtype=jnp.float64)
+    prob = build_problem(
+        n, shape, lam=lam, deform=0.15, dtype=jnp.float64,
+        coefficient=coefficient, bc=bc,
+    )
     a = poisson_assembled(prob)
     rng = np.random.default_rng(0)
-    b = jnp.asarray(rng.standard_normal(prob.n_global), jnp.float64)
+    b = rng.standard_normal(prob.n_global)
+    if prob.mask is not None:
+        b = b * np.asarray(prob.mask, np.float64)
+    b = jnp.asarray(b, jnp.float64)
     e = prob.mesh.n_elements
 
     out = []
-    for name in PRECONDS:
+    for name in preconds:
         kind, kwargs = PRECOND_RECIPES[name]
         for dtype_mode in ("fp64", "mixed"):
             if dtype_mode == "mixed" and kind == "none":
@@ -197,6 +229,10 @@ def _solve_case(n: int, shape, lam: float, tol: float, use_fused=None):
                     "lam": lam,
                     "kind": name,
                     "dtype": dtype_mode,
+                    # coefficient family ("const" = the legacy constant-λ
+                    # screen; part of compare_bench.py's precond key)
+                    "coefficient": coefficient or "const",
+                    "bc": bc,
                     "iters_to_tol": iters,
                     # SolveStatus wire name; compare_bench.py fails any
                     # gated row whose status is not "converged"
@@ -216,7 +252,14 @@ def _solve_case(n: int, shape, lam: float, tol: float, use_fused=None):
 
 
 def records(quick: bool = True, use_fused=None) -> list[dict]:
-    """Structured sweep results (one dict per (N, λ, precond, dtype) case)."""
+    """Structured sweep results (one dict per (N, λ, precond, dtype) case).
+
+    The constant-λ sweep is unchanged from pr9 (same problems, same rng,
+    same recipes — iteration counts must gate bit-identical); the
+    variable-coefficient rows (``VARCOEF_CASES`` × N ∈ {3, 7} ×
+    ``VARCOEF_PRECONDS``) are a strict addition keyed by their
+    ``coefficient`` field.
+    """
     degrees = [3, 7, 15] if quick else [3, 7, 9, 15]
     shapes = {3: (4, 4, 4), 7: (4, 4, 4), 9: (3, 3, 3), 15: (2, 2, 2)}
     recs: list[dict] = []
@@ -225,15 +268,24 @@ def records(quick: bool = True, use_fused=None) -> list[dict]:
             recs.extend(
                 _solve_case(n, shapes[n], lam, tol=TOL, use_fused=use_fused)
             )
+    for n in (3, 7):
+        for coefficient, bc in VARCOEF_CASES:
+            recs.extend(
+                _solve_case(
+                    n, shapes[n], 1.0, tol=TOL, use_fused=use_fused,
+                    coefficient=coefficient, bc=bc,
+                    preconds=VARCOEF_PRECONDS,
+                )
+            )
     return recs
 
 
 def rows_from(recs: list[dict]) -> list[str]:
     """CSV rows for a list of :func:`records` results."""
     rows = [
-        "precond,N,dofs,lam,kind,dtype,status,iters_to_tol,time_s,"
-        "fom_gflops,pct_roofline,precond_apply_s,cheb_lmax,cheb_lmin,"
-        "pmg_levels"
+        "precond,N,dofs,lam,kind,dtype,coefficient,status,iters_to_tol,"
+        "time_s,fom_gflops,pct_roofline,precond_apply_s,cheb_lmax,"
+        "cheb_lmin,pmg_levels"
     ]
     for r in recs:
         lmax = "" if r["lmax"] is None else f"{r['lmax']:.3f}"
@@ -251,7 +303,8 @@ def rows_from(recs: list[dict]) -> list[str]:
         )
         rows.append(
             f"precond,{r['n']},{r['dofs']},{r['lam']},{r['kind']},"
-            f"{r['dtype']},{r.get('status', 'converged')},"
+            f"{r['dtype']},{r.get('coefficient', 'const')},"
+            f"{r.get('status', 'converged')},"
             f"{r['iters_to_tol']},{r['time_s']:.4f},"
             f"{r['fom_gflops']:.2f},{pct},{papply},{lmax},{lmin},{levels}"
         )

@@ -7,7 +7,9 @@ Usage:
 
 Three gated record sections, compared on the cases both jsons share:
 
-  * ``precond_records`` (key: N, lam, kind, dtype) — fails if any case
+  * ``precond_records`` (key: N, lam, kind, dtype, coefficient — rows
+    without the coefficient field are the "const" family) — fails if any
+    case
     needs more than ``--slack`` extra CG iterations to reach tolerance,
     or loses more than ``--roofline-slack`` percentage points of
     ``pct_roofline``;
@@ -63,7 +65,13 @@ GATED_SECTIONS = (
 
 def _key(section: str, r: dict) -> tuple:
     if section == "precond_records":
-        return (r["n"], r["lam"], r["kind"], r.get("dtype", "fp64"))
+        # coefficient joined the key in pr10; rows predating it (and the
+        # constant-λ rows after it) are the "const" family, so old
+        # baselines keep matching byte-for-byte
+        return (
+            r["n"], r["lam"], r["kind"], r.get("dtype", "fp64"),
+            r.get("coefficient", "const"),
+        )
     if section == "batched_records":
         return (
             r["n"], r["lam"], r["kind"], r.get("dtype", "fp64"), r["batch"]
@@ -75,8 +83,9 @@ def _key(section: str, r: dict) -> tuple:
 
 def _fmt_key(section: str, key: tuple) -> str:
     if section == "precond_records":
-        n, lam, kind, dtype = key
-        return f"N={n} lam={lam} {kind:>16} [{dtype}]"
+        n, lam, kind, dtype, coefficient = key
+        coef = "" if coefficient == "const" else f" k={coefficient}"
+        return f"N={n} lam={lam} {kind:>16} [{dtype}]{coef}"
     if section == "batched_records":
         n, lam, kind, dtype, batch = key
         return f"N={n} lam={lam} {kind:>16} [{dtype}] B={batch}"

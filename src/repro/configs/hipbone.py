@@ -14,6 +14,9 @@ list).
 import dataclasses
 import warnings
 
+from repro.core.coefficients import COEFFICIENTS
+from repro.core.mesh import normalize_bc
+
 __all__ = ["PoissonConfig", "ConfigWarning", "CONFIGS"]
 
 
@@ -40,6 +43,16 @@ class PoissonConfig:
     lam: float = 1.0
     n_iter: int = 100                   # NekBone's fixed CG iteration count
     dtype: str = "float32"
+    # operator generalization knobs (core.coefficients / core.mesh):
+    # coefficient selects the diffusion/screen family for
+    # A = -∇·(k(x)∇) + λ(x) — "const" is the legacy constant-λ screen
+    # (bit-identical builds), "smooth" a C∞ k ∈ [½, 3/2], "checker" a
+    # per-element octant jump of ratio CHECKER_RHO.  bc is a boundary-
+    # condition spec accepted by mesh.normalize_bc: None (legacy, no
+    # essential BCs), "dirichlet"/"neumann"/"mixed", or a 6-tuple of
+    # per-face tags (-x, +x, -y, +y, -z, +z).
+    coefficient: str = "const"
+    bc: str | tuple | None = None
     # preconditioner ladder rung: "none" (NekBone-faithful plain CG),
     # "jacobi" (assembled-diagonal scale), "chebyshev" (degree-`cheb_degree`
     # Chebyshev–Jacobi on the Lanczos-estimated [λ_min, λ_max] interval),
@@ -124,6 +137,27 @@ class PoissonConfig:
             bad(f"tol must be > 0 (or None for fixed-count), got {self.tol}")
         if self.dtype not in ("float32", "float64"):
             bad(f"unknown dtype {self.dtype!r}; use 'float32' or 'float64'")
+        if self.coefficient not in COEFFICIENTS:
+            bad(
+                f"unknown coefficient {self.coefficient!r}; "
+                f"choose from {COEFFICIENTS}"
+            )
+        try:
+            normalize_bc(self.bc)
+        except ValueError as e:
+            bad(f"invalid bc spec: {e}")
+        if self.coefficient == "checker" and any(
+            e % 2 for e in self.local_elems
+        ):
+            warnings.warn(
+                f"PoissonConfig {self.name!r}: coefficient='checker' with "
+                f"odd local_elems {self.local_elems!r} — the octant jump "
+                "planes at x/y/z = ½ only land on element boundaries when "
+                "the per-axis *global* element counts are even; make sure "
+                "the process grid restores evenness",
+                ConfigWarning,
+                stacklevel=3,
+            )
         if self.precond not in ("none", "jacobi", "chebyshev", "schwarz", "pmg"):
             bad(f"unknown precond {self.precond!r}")
         if self.cheb_degree < 1:
@@ -207,6 +241,20 @@ class PoissonConfig:
         n = self.n_degree
         bx, by, bz = self.local_elems
         return bx * by * bz * n**3
+
+    def problem_kwargs(self) -> dict:
+        """This spec's operator knobs as ``core.build_problem`` kwargs.
+
+        ``coefficient="const"`` maps to ``None`` (the legacy sentinel —
+        ``build_problem`` then skips the field machinery entirely and the
+        build is bit-identical to pre-coefficient configs).
+        """
+        return {
+            "coefficient": (
+                None if self.coefficient == "const" else self.coefficient
+            ),
+            "bc": self.bc,
+        }
 
     def precond_kwargs(self) -> dict:
         """This spec's rung as ``core.precond.make_preconditioner`` kwargs.
@@ -295,6 +343,20 @@ CONFIGS = {
         "hipbone_n7_schwarz_fp32", 7, (8, 8, 8), lam=0.1,
         precond="schwarz", tol=1e-8, dtype="float64",
         precond_dtype="float32", cg_variant="flexible"
+    ),
+    # variable-coefficient tier: A = -∇·(k(x)∇) + λ(x) with mixed
+    # Dirichlet/Neumann faces, solved by the iteration-count champion
+    # rung (coefficients fold into the g/w streams at setup — same
+    # kernels, same FLOP count per apply; docs/SOLVERS.md)
+    "hipbone_n7_smooth_mixed": PoissonConfig(
+        "hipbone_n7_smooth_mixed", 7, (8, 8, 8), lam=0.1,
+        coefficient="smooth", bc="mixed",
+        precond="pmg", pmg_coarse_op="galerkin_mat", tol=1e-8
+    ),
+    "hipbone_n7_checker": PoissonConfig(
+        "hipbone_n7_checker", 7, (8, 8, 8), lam=0.1,
+        coefficient="checker", bc="dirichlet",
+        precond="pmg", pmg_coarse_op="galerkin_mat", tol=1e-8
     ),
     # the serving shape: one Chebyshev setup amortized over a 16-column
     # RHS slab per dispatch (serving.SolverEngine / batched_cg_assembled)

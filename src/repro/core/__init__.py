@@ -52,8 +52,22 @@ from .gather_scatter import (
     local_inverse_degree,
     scatter,
 )
+from .coefficients import (
+    COEFFICIENTS,
+    checker_k,
+    coefficient_fields,
+    smooth_k,
+    smooth_k_grad,
+)
 from .geometry import geometric_factors
-from .mesh import BoxMesh, build_box_mesh, partition_elements
+from .mesh import (
+    BC_FACES,
+    BoxMesh,
+    build_box_mesh,
+    dirichlet_mask,
+    normalize_bc,
+    partition_elements,
+)
 from .operator import (
     PoissonProblem,
     build_problem,
@@ -63,6 +77,7 @@ from .operator import (
     poisson_assembled,
     poisson_scattered,
     problem_from_mesh,
+    screen_stream,
 )
 from .precond import (
     PMG_COARSE_OPS,

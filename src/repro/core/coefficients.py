@@ -1,0 +1,105 @@
+"""Named coefficient families for A = -∇·(k(x)∇) + λ(x).
+
+The operator generalization keeps the kernel contract untouched: the
+diffusion coefficient ``k`` is folded *multiplicatively* into the packed
+geometric factors at setup (G carries J·W·(∂r/∂x)(∂r/∂x)ᵀ — scaling all
+six entries by k(x_q) per quadrature point makes DᵀGD discretize
+-∇·(k∇·) exactly), and the screen field λ(x) rides the existing ``w``
+stream as the mass-weighted JW·λ with the kernels' static ``lam`` pinned
+to 1.0 (``core.operator.screen_stream``).  ``local_poisson`` stays three
+MXU contractions; no Pallas kernel signature changes.
+
+Families (``configs.hipbone.PoissonConfig.coefficient``):
+
+  * ``"const"`` — the legacy constant-λ screened Poisson (k ≡ 1,
+    algebraic λI screen); bit-identical to pre-coefficient builds.
+  * ``"smooth"`` — k = 1 + ½·cos(πx)cos(πy)cos(πz) ∈ [½, 3/2], λ(x) = λ
+    as a field (weak mass-weighted screen).  Analytic gradient exported
+    for the manufactured-solutions oracle (``repro.testing.mms``).
+  * ``"checker"`` — per-element octant checkerboard jumping between 1 and
+    ``CHECKER_RHO`` across the x/y/z = ½ planes, evaluated at element
+    centroids so each element carries one constant (quadrature stays
+    exact; element interfaces own the jump).  Needs even element counts
+    for the jump planes to land on element boundaries.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = [
+    "CHECKER_RHO",
+    "COEFFICIENTS",
+    "checker_k",
+    "checker_k_elements",
+    "coefficient_fields",
+    "smooth_k",
+    "smooth_k_grad",
+]
+
+COEFFICIENTS = ("const", "smooth", "checker")
+CHECKER_RHO = 3.0
+
+
+def smooth_k(x, y, z):
+    """Smooth positive diffusion field 1 + ½·cos(πx)cos(πy)cos(πz)."""
+    pi = np.pi
+    return 1.0 + 0.5 * np.cos(pi * x) * np.cos(pi * y) * np.cos(pi * z)
+
+
+def smooth_k_grad(x, y, z):
+    """(∂x k, ∂y k, ∂z k) of :func:`smooth_k` — closed form for the MMS."""
+    pi = np.pi
+    cx, cy, cz = np.cos(pi * x), np.cos(pi * y), np.cos(pi * z)
+    sx, sy, sz = np.sin(pi * x), np.sin(pi * y), np.sin(pi * z)
+    return (
+        -0.5 * pi * sx * cy * cz,
+        -0.5 * pi * cx * sy * cz,
+        -0.5 * pi * cx * cy * sz,
+    )
+
+
+def checker_k(x, y, z, *, rho: float = CHECKER_RHO):
+    """Octant checkerboard: ``rho`` on odd-parity octants of the ½-planes."""
+    parity = (
+        np.floor(2.0 * np.asarray(x)).astype(np.int64)
+        + np.floor(2.0 * np.asarray(y)).astype(np.int64)
+        + np.floor(2.0 * np.asarray(z)).astype(np.int64)
+    ) % 2
+    return np.where(parity == 1, rho, 1.0)
+
+
+def checker_k_elements(coords: np.ndarray, *, rho: float = CHECKER_RHO):
+    """(E, p) per-element-constant checker field from element centroids.
+
+    Evaluating at centroids (not nodes) keeps interface GLL nodes — which
+    sit exactly on the jump planes and belong to both neighbours —
+    unambiguous: each element integrates its own constant.
+    """
+    c = np.asarray(coords).mean(axis=1)  # (E, 3)
+    k_e = checker_k(c[:, 0], c[:, 1], c[:, 2], rho=rho)
+    return np.broadcast_to(k_e[:, None], coords.shape[:2]).copy()
+
+
+def coefficient_fields(name: str | None, coords, lam: float):
+    """(k, lam_field) arrays for a named family, or (None, None) for legacy.
+
+    ``coords`` is the mesh's (E, p, 3) node array.  ``"const"`` (and
+    ``None``) return the legacy sentinels — constant-λ algebraic screen,
+    bit-identical code paths.  The variable families return per-node k and
+    a constant λ *field* (which switches the screen to the weak
+    mass-weighted form — see ``core.operator.screen_stream``).
+    """
+    if name is None or name == "const":
+        return None, None
+    coords = np.asarray(coords)
+    x, y, z = coords[..., 0], coords[..., 1], coords[..., 2]
+    if name == "smooth":
+        k = smooth_k(x, y, z)
+    elif name == "checker":
+        k = checker_k_elements(coords)
+    else:
+        raise ValueError(
+            f"unknown coefficient family {name!r}; choose from {COEFFICIENTS}"
+        )
+    lam_field = np.full(coords.shape[:2], float(lam))
+    return k, lam_field

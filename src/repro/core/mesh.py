@@ -16,7 +16,90 @@ import numpy as np
 
 from . import sem
 
-__all__ = ["BoxMesh", "build_box_mesh", "partition_elements"]
+__all__ = [
+    "BC_FACES",
+    "BoxMesh",
+    "build_box_mesh",
+    "dirichlet_mask",
+    "normalize_bc",
+    "partition_elements",
+]
+
+# face order of a boundary-condition 6-tuple (matches the element-grid axes)
+BC_FACES = ("x_lo", "x_hi", "y_lo", "y_hi", "z_lo", "z_hi")
+_BC_TAGS = ("dirichlet", "neumann")
+
+
+def normalize_bc(bc) -> tuple[str, ...] | None:
+    """Canonicalize a boundary-condition spec to a 6-face tag tuple.
+
+    Accepts ``None`` (legacy: no essential BCs — the operator is the pure
+    screened-Poisson A = S + λ·screen on all DOFs), a shorthand string
+    (``"dirichlet"`` / ``"neumann"`` on all six faces, or ``"mixed"`` =
+    Dirichlet on the two x-faces, Neumann on y/z), or a 6-sequence of
+    per-face tags in :data:`BC_FACES` order.  Neumann faces are *natural*
+    in the weak form — they need no DOF treatment — so an all-Neumann spec
+    produces no mask, only metadata.
+    """
+    if bc is None:
+        return None
+    if isinstance(bc, str):
+        if bc == "dirichlet":
+            return ("dirichlet",) * 6
+        if bc == "neumann":
+            return ("neumann",) * 6
+        if bc == "mixed":
+            return ("dirichlet", "dirichlet") + ("neumann",) * 4
+        raise ValueError(
+            f"unknown bc shorthand {bc!r}; use 'dirichlet'|'neumann'|'mixed' "
+            "or a 6-tuple of per-face tags"
+        )
+    tags = tuple(bc)
+    if len(tags) != 6:
+        raise ValueError(
+            f"bc must name all 6 faces {BC_FACES}, got {len(tags)} entries"
+        )
+    for face, tag in zip(BC_FACES, tags):
+        if tag not in _BC_TAGS:
+            raise ValueError(f"bc[{face}] = {tag!r}; choose from {_BC_TAGS}")
+    return tags
+
+
+def dirichlet_mask(mesh: "BoxMesh", bc) -> np.ndarray | None:
+    """(N_G,) 0/1 mask: 0 on Dirichlet-face DOFs, 1 elsewhere.
+
+    The mask is topological — it reads the structured global grid index
+    (``gx = ex*N + 1`` points per axis, x fastest, exactly the layout
+    :func:`build_box_mesh` assigns), so mesh deformation does not move it.
+    Returns ``None`` when no face is Dirichlet (nothing to mask: Neumann
+    faces are natural).  Operators apply it as A_m = mask∘A∘mask and
+    preconditioners as mask∘M∘mask — both SPD on the interior subspace by
+    congruence — with homogeneous values carried by lifting (see
+    ``repro.testing.mms``).
+    """
+    tags = normalize_bc(bc)
+    if tags is None or all(t == "neumann" for t in tags):
+        return None
+    n = mesh.n_degree
+    ex, ey, ez = mesh.shape
+    gx, gy, gz = ex * n + 1, ey * n + 1, ez * n + 1
+    if gx * gy * gz != mesh.n_global:
+        raise ValueError(
+            "dirichlet_mask needs the structured box numbering: "
+            f"{gx}*{gy}*{gz} != n_global={mesh.n_global}"
+        )
+    g = np.arange(mesh.n_global)
+    ix = g % gx
+    iy = (g // gx) % gy
+    iz = g // (gx * gy)
+    keep = np.ones(mesh.n_global, dtype=bool)
+    for tag, sel in zip(
+        tags,
+        (ix == 0, ix == gx - 1, iy == 0, iy == gy - 1, iz == 0, iz == gz - 1),
+    ):
+        if tag == "dirichlet":
+            keep &= ~sel
+    return keep.astype(np.float64)
 
 
 @dataclasses.dataclass(frozen=True)

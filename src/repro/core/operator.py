@@ -22,9 +22,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import coefficients as _coef
 from . import geometry, sem
 from .gather_scatter import gather, gather_scatter, inverse_degree, scatter
-from .mesh import BoxMesh, build_box_mesh
+from .mesh import BoxMesh, build_box_mesh, dirichlet_mask, normalize_bc
 
 __all__ = [
     "local_poisson",
@@ -36,7 +37,15 @@ __all__ = [
     "cast_problem",
     "poisson_assembled",
     "poisson_scattered",
+    "screen_stream",
 ]
+
+# positivity floor applied when coefficient fields are resampled to a
+# coarser degree: polynomial interpolation of rough (random) fields can
+# overshoot below zero, which would break the SPD-ness every V-cycle level
+# relies on.  A fixed constant (not data-dependent) so the single-device
+# and sharded coarsening paths produce identical values rank by rank.
+COARSE_K_FLOOR = 1e-6
 
 
 def local_poisson(
@@ -134,12 +143,18 @@ class PoissonProblem:
     mesh: BoxMesh
     lam: float
     d: jax.Array            # (N+1, N+1)
-    g: jax.Array            # (E, 6, p)
+    g: jax.Array            # (E, 6, p) — k(x) already folded in when set
     jw: jax.Array           # (E, p) mass diagonal
     l2g: jax.Array          # (E, p) int32
     w_local: jax.Array      # (E, p) inverse degree (scattered layout)
     w_global: jax.Array     # (N_G,) inverse degree (assembled layout)
     dtype: Any
+    # variable-coefficient / boundary-condition extension — all None for
+    # the legacy constant-λ screened Poisson (bit-identical code paths):
+    k: jax.Array | None = None          # (E, p) diffusion field (unfolded copy)
+    lam_field: jax.Array | None = None  # (E, p) screen field λ(x)
+    mask: jax.Array | None = None       # (N_G,) 0 on Dirichlet DOFs
+    bc: tuple | None = None             # 6-face tags (mesh.BC_FACES order)
 
     @property
     def n_global(self) -> int:
@@ -150,6 +165,48 @@ class PoissonProblem:
         return self.mesh.n_local
 
 
+def screen_stream(
+    prob: PoissonProblem,
+) -> tuple[jax.Array | None, float]:
+    """The (w, lam) pair every element kernel consumes for the screen term.
+
+    Classic mode (``lam_field is None``): ``(w_local, λ)`` — the algebraic
+    λ·W screen that assembles to exactly λI (hipBone/NekBone semantics;
+    bit-identical to pre-coefficient builds).
+
+    PDE mode (``lam_field`` set): ``(JW·λ_field, 1.0)`` — the mass-weighted
+    weak screen Zᵀ diag(JW·λ) Z.  No inverse-degree factor enters: the
+    element-wise assembly sum IS the quadrature sum.  ``lam`` stays a
+    static python float either way, which is what lets the variable screen
+    ride the existing ``w`` stream through kernels whose ``lam`` is a
+    static argname (``kernels.poisson`` / ``kernels.poisson_fused``).
+    """
+    if prob.lam_field is None:
+        return prob.w_local, prob.lam
+    return prob.jw * prob.lam_field, 1.0
+
+
+def _eval_field(spec, coords: np.ndarray) -> np.ndarray | None:
+    """Evaluate a coefficient spec on the mesh's (E, p, 3) node array.
+
+    ``spec`` may be None, a scalar, a callable f(x, y, z) -> (E, p), or a
+    ready (E, p) array.
+    """
+    if spec is None:
+        return None
+    if callable(spec):
+        out = spec(coords[..., 0], coords[..., 1], coords[..., 2])
+        return np.broadcast_to(np.asarray(out), coords.shape[:2])
+    arr = np.asarray(spec)
+    if arr.ndim == 0:
+        return np.full(coords.shape[:2], float(arr))
+    if arr.shape != coords.shape[:2]:
+        raise ValueError(
+            f"coefficient field shape {arr.shape} != (E, p) {coords.shape[:2]}"
+        )
+    return arr
+
+
 def build_problem(
     n_degree: int,
     shape: tuple[int, int, int],
@@ -157,30 +214,68 @@ def build_problem(
     lam: float = 1.0,
     deform: float = 0.0,
     dtype: Any = jnp.float32,
+    coefficient: str | None = None,
+    bc: Any = None,
 ) -> PoissonProblem:
-    """Construct mesh, geometric factors and gather-scatter data."""
+    """Construct mesh, geometric factors and gather-scatter data.
+
+    ``coefficient`` selects a named family from ``core.coefficients``
+    (``"const"``/None keeps the legacy constant-λ screen bit-identical;
+    ``"smooth"``/``"checker"`` switch to A = -∇·(k∇) + λ with the weak
+    mass-weighted screen).  ``bc`` is a boundary-condition spec accepted
+    by ``mesh.normalize_bc`` (None = legacy, no essential BCs).
+    """
     m = build_box_mesh(n_degree, shape, deform=deform)
-    return problem_from_mesh(m, lam=lam, dtype=dtype)
+    k, lam_field = _coef.coefficient_fields(coefficient, m.coords, lam)
+    return problem_from_mesh(
+        m, lam=lam, dtype=dtype, k=k, lam_field=lam_field, bc=bc
+    )
 
 
 def problem_from_mesh(
-    m: BoxMesh, *, lam: float = 1.0, dtype: Any = jnp.float32
+    m: BoxMesh,
+    *,
+    lam: float = 1.0,
+    dtype: Any = jnp.float32,
+    k: Any = None,
+    lam_field: Any = None,
+    bc: Any = None,
 ) -> PoissonProblem:
-    """Geometric factors + gather-scatter data for an existing mesh."""
+    """Geometric factors + gather-scatter data for an existing mesh.
+
+    ``k`` / ``lam_field`` accept None, a scalar, an (E, p) array, or a
+    callable f(x, y, z) evaluated on the mesh nodes.  ``k`` is folded into
+    the packed geometric factors here — every downstream consumer (local
+    kernels, diagonals, Galerkin probes, Schwarz means, sharded boxes)
+    sees variable diffusion through the ``g`` stream it already reads.
+    """
     geo = geometry.geometric_factors(m)
     d = sem.derivative_matrix(m.n_degree)
     w_g = inverse_degree(m.l2g, m.n_global)
     w_l = w_g[m.l2g]
+    g = np.asarray(geo["G"])
+    k_arr = _eval_field(k, m.coords)
+    lam_arr = _eval_field(lam_field, m.coords)
+    if k_arr is not None:
+        g = g * k_arr[:, None, :]
+    tags = normalize_bc(bc)
+    mask = None if tags is None else dirichlet_mask(m, tags)
     return PoissonProblem(
         mesh=m,
         lam=float(lam),
         d=jnp.asarray(d, dtype=dtype),
-        g=jnp.asarray(geo["G"], dtype=dtype),
+        g=jnp.asarray(g, dtype=dtype),
         jw=jnp.asarray(geo["JW"], dtype=dtype),
         l2g=jnp.asarray(m.l2g),
         w_local=jnp.asarray(w_l, dtype=dtype),
         w_global=jnp.asarray(w_g, dtype=dtype),
         dtype=dtype,
+        k=None if k_arr is None else jnp.asarray(k_arr, dtype=dtype),
+        lam_field=(
+            None if lam_arr is None else jnp.asarray(lam_arr, dtype=dtype)
+        ),
+        mask=None if mask is None else jnp.asarray(mask, dtype=dtype),
+        bc=tags,
     )
 
 
@@ -205,7 +300,26 @@ def coarsen_problem(prob: PoissonProblem, n_coarse: int) -> PoissonProblem:
     j = sem.interpolation_matrix(mf.n_degree, nc)
     coords = sem.interp_coords_3d(j, mf.coords)
     mesh_c = dataclasses.replace(base, coords=coords)
-    return problem_from_mesh(mesh_c, lam=prob.lam, dtype=prob.dtype)
+    # coefficient fields ride to the coarse level by the same tensor
+    # interpolation as the coordinates (exact on the per-element-constant
+    # checker family, spectrally accurate on smooth ones); k keeps a fixed
+    # positivity floor so every rediscretized level stays SPD, and the
+    # Dirichlet mask is recomputed from the bc tags on the coarse grid.
+    k_c = lam_c = None
+    if prob.k is not None:
+        k_c = np.maximum(
+            sem.interp_field_3d(j, np.asarray(prob.k, np.float64)),
+            COARSE_K_FLOOR,
+        )
+    if prob.lam_field is not None:
+        lam_c = np.maximum(
+            sem.interp_field_3d(j, np.asarray(prob.lam_field, np.float64)),
+            0.0,
+        )
+    return problem_from_mesh(
+        mesh_c, lam=prob.lam, dtype=prob.dtype, k=k_c, lam_field=lam_c,
+        bc=prob.bc,
+    )
 
 
 def cast_problem(prob: PoissonProblem, dtype: Any) -> PoissonProblem:
@@ -217,6 +331,7 @@ def cast_problem(prob: PoissonProblem, dtype: Any) -> PoissonProblem:
     in the narrow dtype while the outer PCG keeps the original problem.
     Setup metadata (mesh, l2g) is shared, not copied.
     """
+    cast = lambda a: None if a is None else a.astype(dtype)
     return dataclasses.replace(
         prob,
         d=prob.d.astype(dtype),
@@ -225,6 +340,9 @@ def cast_problem(prob: PoissonProblem, dtype: Any) -> PoissonProblem:
         w_local=prob.w_local.astype(dtype),
         w_global=prob.w_global.astype(dtype),
         dtype=dtype,
+        k=cast(prob.k),
+        lam_field=cast(prob.lam_field),
+        mask=cast(prob.mask),
     )
 
 
@@ -272,11 +390,16 @@ def poisson_assembled(
         return _kops.make_poisson_assembled_fused(prob, **(fused_kwargs or {}))
 
     op = local_op or local_poisson
+    w_eff, lam_eff = screen_stream(prob)
+    mask = prob.mask
 
     def apply(x_g: jax.Array) -> jax.Array:
+        if mask is not None:
+            x_g = mask * x_g
         x_l = scatter(x_g, prob.l2g)
-        y_l = op(x_l, prob.g, prob.d, prob.lam, prob.w_local)
-        return gather(y_l, prob.l2g, prob.n_global)
+        y_l = op(x_l, prob.g, prob.d, lam_eff, w_eff)
+        y_g = gather(y_l, prob.l2g, prob.n_global)
+        return y_g if mask is None else mask * y_g
 
     apply.fused = False
     return apply
@@ -286,7 +409,19 @@ def poisson_scattered(
     prob: PoissonProblem,
     local_op: Callable[..., jax.Array] | None = None,
 ) -> Callable[[jax.Array], jax.Array]:
-    """NekBone baseline operator: x_L (E, p) -> b_L = (ZZ^T S_L + λI) x_L."""
+    """NekBone baseline operator: x_L (E, p) -> b_L = (ZZ^T S_L + λI) x_L.
+
+    The scattered baseline keeps NekBone's algebraic λI screen; variable k
+    arrives for free through the folded ``g``, but a λ(x) field or
+    Dirichlet mask has no scattered-storage analogue here — the assembled
+    path (:func:`poisson_assembled`) is the variable-coefficient surface.
+    """
+    if prob.lam_field is not None or prob.mask is not None:
+        raise NotImplementedError(
+            "poisson_scattered is the constant-λ NekBone baseline; "
+            "λ(x) fields / Dirichlet masks need the assembled operator "
+            "(poisson_assembled)"
+        )
     op = local_op or local_poisson
 
     def apply(x_l: jax.Array) -> jax.Array:

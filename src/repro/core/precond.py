@@ -78,6 +78,8 @@ from .schwarz import SCHWARZ_INNER_DEGREE, make_schwarz_apply
 __all__ = [
     "local_operator_diagonal",
     "assembled_diagonal",
+    "masked_dinv",
+    "masked_seed",
     "power_lambda_max",
     "lanczos_extremes",
     "jacobi_apply",
@@ -166,10 +168,45 @@ def local_operator_diagonal(
 
 
 def assembled_diagonal(prob) -> jax.Array:
-    """diag(A) on assembled DOFs: Z^T diag(S_L + λW) Z (Z picks out the
-    diagonal entries, so this is just the gather of the local diagonal)."""
-    dloc = local_operator_diagonal(prob.g, prob.d, prob.lam, prob.w_local)
+    """diag(A) on assembled DOFs: Z^T diag(S_L + λ·screen) Z (Z picks out
+    the diagonal entries, so this is just the gather of the local diagonal).
+
+    The screen factors come from ``operator.screen_stream`` — the algebraic
+    λW pair on legacy problems, the mass-weighted JW·λ(x) stream on
+    variable-coefficient ones (k(x) is already folded into ``prob.g``).
+    Deliberately *unmasked* even when ``prob.mask`` is set: the diagonal of
+    the unmasked operator is strictly positive everywhere, so ``1/diag``
+    stays finite; consumers keep M⁻¹ in the Dirichlet-interior subspace by
+    multiplying the *inverse* by the mask (see :func:`masked_dinv`).
+    """
+    from .operator import screen_stream  # lazy: mirrors sibling call sites
+
+    w_eff, lam_eff = screen_stream(prob)
+    dloc = local_operator_diagonal(prob.g, prob.d, lam_eff, w_eff)
     return gather(dloc, prob.l2g, prob.n_global)
+
+
+def masked_dinv(prob, diag: jax.Array) -> jax.Array:
+    """Inverse diagonal restricted to the Dirichlet-interior subspace.
+
+    ``mask ∘ D⁻¹`` (elementwise, hence = mask∘D⁻¹∘mask): zero on Dirichlet
+    DOFs, so every Jacobi/Chebyshev base built from it maps into — and
+    Lanczos/power iterates stay inside — the subspace where the masked
+    operator is SPD.  No-op on unmasked (legacy) problems.
+    """
+    dinv = 1.0 / diag
+    return dinv if prob.mask is None else prob.mask * dinv
+
+
+def masked_seed(prob, v0: jax.Array) -> jax.Array:
+    """Spectrum-estimation seed projected into the BC subspace.
+
+    Unmasked seed components on Dirichlet DOFs sit in the null space of
+    the masked operator: they never propagate under A but linger in the
+    Lanczos orthogonalization, dragging the λ_min Ritz value toward 0 and
+    wrecking the Chebyshev interval.  No-op on legacy problems.
+    """
+    return v0 if prob.mask is None else prob.mask * v0
 
 
 def _default_dot(a: jax.Array, b: jax.Array) -> jax.Array:
@@ -745,20 +782,39 @@ def make_pmg_preconditioner(
         prolongs.append(p_up)
         restricts.append(r_down)
 
+    # Dirichlet masking of the coarse Galerkin applies: the transfer pair
+    # preserves the BC subspace (GLL grids share face nodes, so the lifted
+    # interpolant's face values depend only on face values), but R = Pᵀ
+    # smears interior fine residual onto coarse Dirichlet DOFs — the coarse
+    # operator must be mask∘RAP∘mask to stay SPD on its own subspace.
+    # Rediscretized levels mask inside poisson_assembled already.
+    def _mask_wrap(mask, op):
+        if mask is None:
+            return op
+        return lambda v: mask * op(mask * v)
+
     ops = [operator]
     if coarse_op == "galerkin_mat":
         # materialize P^T A P once: probe the fine element-local operator
-        # for level 1, contract blocks for deeper rungs (core.galerkin)
+        # for level 1, contract blocks for deeper rungs (core.galerkin).
+        # The probing is coefficient-agnostic: variable k rides the folded
+        # prob.g and λ(x) rides the screen stream, so the probe consumes
+        # exactly the streams the fine operator does.
         from .galerkin import galerkin_block_apply, galerkin_ladder_blocks
+        from .operator import screen_stream
 
+        w_eff, lam_eff = screen_stream(prob)
         ladder_blocks = galerkin_ladder_blocks(
-            prob.g, prob.d, prob.lam, prob.w_local, degrees
+            prob.g, prob.d, lam_eff, w_eff, degrees
         )
         for pc_prob, blocks in zip(probs[1:], ladder_blocks):
             ops.append(
-                galerkin_block_apply(
-                    blocks, pc_prob.l2g, pc_prob.n_global,
-                    matvec=galerkin_matvec,
+                _mask_wrap(
+                    pc_prob.mask,
+                    galerkin_block_apply(
+                        blocks, pc_prob.l2g, pc_prob.n_global,
+                        matvec=galerkin_matvec,
+                    ),
                 )
             )
     else:
@@ -767,8 +823,11 @@ def make_pmg_preconditioner(
                 # A_l = R_{l-1} A_{l-1} P_{l-1}, matrix-free through the
                 # chain — every coarse apply recurses to the fine grid
                 ops.append(
-                    lambda v, op=ops[-1], r=restricts[i - 1],
-                    p=prolongs[i - 1]: r(op(p(v)))
+                    _mask_wrap(
+                        probs[i].mask,
+                        lambda v, op=ops[-1], r=restricts[i - 1],
+                        p=prolongs[i - 1]: r(op(p(v))),
+                    )
                 )
             else:
                 ops.append(poisson_assembled(probs[i]))
@@ -776,8 +835,10 @@ def make_pmg_preconditioner(
     smoothers = []
     lmax0 = lmin0 = None
     for i in range(len(probs) - 1):
-        dinv = 1.0 / assembled_diagonal(probs[i])
-        v0 = deterministic_seed_vector(probs[i].n_global, dinv.dtype)
+        dinv = masked_dinv(probs[i], assembled_diagonal(probs[i]))
+        v0 = masked_seed(
+            probs[i], deterministic_seed_vector(probs[i].n_global, dinv.dtype)
+        )
         if smoother == "schwarz":
             base = make_schwarz_apply(
                 probs[i],
@@ -805,12 +866,22 @@ def make_pmg_preconditioner(
     if coarse_solve == "direct":
         eye = jnp.eye(pc.n_global, dtype=dinv.dtype)
         amat = jax.vmap(opc, in_axes=1, out_axes=1)(eye)
+        if pc.mask is not None:
+            # the masked coarse operator has zero rows/columns on Dirichlet
+            # DOFs; put 1 there so the inverse exists, then project the
+            # apply — exactly the subspace inverse, identity-free outside
+            amat = amat + jnp.diag(1.0 - pc.mask.astype(amat.dtype))
         ainv = jnp.linalg.inv(amat)
-        coarse_apply = lambda r: ainv @ r
+        if pc.mask is None:
+            coarse_apply = lambda r: ainv @ r
+        else:
+            coarse_apply = lambda r: pc.mask * (ainv @ (pc.mask * r))
     elif coarse_solve in ("chebyshev", "jacobi"):
-        dinv_c = 1.0 / assembled_diagonal(pc)
+        dinv_c = masked_dinv(pc, assembled_diagonal(pc))
         if coarse_solve == "chebyshev":
-            v0 = deterministic_seed_vector(pc.n_global, dinv_c.dtype)
+            v0 = masked_seed(
+                pc, deterministic_seed_vector(pc.n_global, dinv_c.dtype)
+            )
             lmin_e, lmax_e = lanczos_extremes(opc, dinv_c, v0, iters=lanczos_iters)
             coarse_apply = chebyshev_apply(
                 opc,
@@ -1047,10 +1118,10 @@ def make_preconditioner(
             "schwarz", schwarz_inner_degree, None, overlap=schwarz_overlap
         )
     diag = assembled_diagonal(prob)
-    dinv = 1.0 / diag
+    dinv = masked_dinv(prob, diag)
     if kind == "jacobi":
         return jacobi_apply(dinv), PrecondInfo("jacobi", 1, None)
-    v0 = deterministic_seed_vector(prob.n_global, diag.dtype)
+    v0 = masked_seed(prob, deterministic_seed_vector(prob.n_global, diag.dtype))
     if lmin_source == "lanczos":
         lmin_e, lmax_e = lanczos_extremes(operator, dinv, v0, iters=lanczos_iters)
         lmax = CHEB_SAFETY * lmax_e

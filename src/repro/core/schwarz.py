@@ -51,6 +51,7 @@ __all__ = [
     "SchwarzFDM",
     "element_lengths",
     "element_neighbor_flags",
+    "element_screen_means",
     "build_fdm",
     "fdm_solve",
     "extended_l2g",
@@ -91,7 +92,9 @@ class SchwarzFDM:
       musum: (E, m, m, m) tensor eigenvalue sums ``μ_i + μ_j + μ_k``.
       inner_lo / inner_hi: (E,) per-element Chebyshev interval for the
         diagonally-preconditioned ``H`` (setup-time power iteration).
-      lam: screen parameter λ.
+      lam: screen parameter λ — a float (legacy algebraic screen) or an
+        (E, 1, 1, 1) per-element array (variable-coefficient blocks),
+        broadcasting identically through ``fdm_solve``'s hop.
       overlap: extension width s (m = N + 1 + 2s).
       inner_degree: Chebyshev degree of the block solve.
     """
@@ -102,7 +105,7 @@ class SchwarzFDM:
     musum: jax.Array
     inner_lo: jax.Array
     inner_hi: jax.Array
-    lam: float
+    lam: jax.Array | float
     overlap: int
     inner_degree: int
 
@@ -161,11 +164,13 @@ def build_fdm(
     lengths: np.ndarray,
     flags: np.ndarray,
     n_degree: int,
-    lam: float,
+    lam,
     overlap: int,
     dtype,
     *,
     inner_degree: int = SCHWARZ_INNER_DEGREE,
+    k_elem: np.ndarray | None = None,
+    screen: str = "algebraic",
 ) -> SchwarzFDM:
     """Assemble the per-element FDM factors (numpy setup, cast once).
 
@@ -174,23 +179,46 @@ def build_fdm(
       flags: (E, 3, 2) neighbor-present booleans
         (:func:`element_neighbor_flags`).
       n_degree: polynomial degree N.
-      lam: screen parameter λ.  The screen keeps every block SPD even on an
-        all-Neumann single-element patch where the stiffness alone is
-        singular (a tiny floor guards λ = 0).
+      lam: screen parameter λ — a scalar, or an (E,) per-element array
+        (element means of a λ(x) field).  The screen keeps every block SPD
+        even on an all-Neumann single-element patch where the stiffness
+        alone is singular (a tiny floor guards λ = 0).
       overlap: extension width s in GLL nodes (0 = block Jacobi).
       inner_degree: Chebyshev degree of the in-eigenbasis block solve
         (1 = pure diagonal/fast-diagonalization approximation of the
         screen; 2-3 nearly exact).  The per-element Chebyshev interval is
         estimated here by power iteration on the diagonally-preconditioned
         block operator — pure setup-time numpy.
+      k_elem: optional (E,) element-mean diffusion coefficients.  Each
+        block approximates k_e·(-Δ) by scaling its tensor eigenvalue sums
+        — the same axis-aligned-box spirit as the mean-length fit, and
+        exact for per-element-constant k (the checker family).
+      screen: "algebraic" — the legacy λI screen, which becomes the
+        non-diagonal ``λ(C₃⊗C₂⊗C₁)`` in the eigenbasis; "mass" — the weak
+        λ·M screen of variable-coefficient problems.  Because the
+        eigenbasis is B-orthonormal (``TᵀBT = I``), the mass screen is
+        *exactly* λ·I in-basis — implemented by setting the Gram matrices
+        C to the identity, which makes the block solve exactly diagonal
+        (the one term that breaks tensor structure disappears).
 
     Returns:
       :class:`SchwarzFDM` with jnp arrays in ``dtype``.
     """
+    if screen not in ("algebraic", "mass"):
+        raise ValueError(f"unknown fdm screen {screen!r}; 'algebraic'|'mass'")
     e_total = lengths.shape[0]
     n = int(n_degree)
     m = n + 1 + 2 * int(overlap)
-    lam = float(lam)
+    lam_arr = np.asarray(lam, np.float64)
+    if lam_arr.ndim == 0:
+        lam = float(lam_arr)  # scalar stays a python float (legacy contract)
+    elif lam_arr.shape == (e_total,):
+        lam = lam_arr[:, None, None, None]  # broadcasts through hop / denom
+    else:
+        raise ValueError(
+            f"lam must be a scalar or ({e_total},) element array, "
+            f"got shape {lam_arr.shape}"
+        )
     tmats = np.empty((e_total, 3, m, m))
     cmats = np.empty((e_total, 3, m, m))
     mus = np.empty((e_total, 3, m))
@@ -208,12 +236,16 @@ def build_fdm(
                 cache[key] = sem.fast_diagonalization_1d(a_ext, b_ext)
             t, mu, _ = cache[key]
             tmats[e, d], mus[e, d] = t, mu
-            cmats[e, d] = t.T @ t
+            cmats[e, d] = (
+                np.eye(m) if screen == "mass" else t.T @ t
+            )
 
     mu_r, mu_s, mu_t = mus[:, 0], mus[:, 1], mus[:, 2]
     musum = (
         mu_t[:, :, None, None] + mu_s[:, None, :, None] + mu_r[:, None, None, :]
     )
+    if k_elem is not None:
+        musum = musum * np.asarray(k_elem, np.float64)[:, None, None, None]
     s_r, s_s, s_t = (np.einsum("eii->ei", cmats[:, d]) for d in range(3))
     denom = musum + lam * (
         s_t[:, :, None, None] * s_s[:, None, :, None] * s_r[:, None, None, :]
@@ -254,7 +286,7 @@ def build_fdm(
         musum=jnp.asarray(musum, dtype),
         inner_lo=jnp.asarray(lo[:, None, None, None], dtype),
         inner_hi=jnp.asarray(hi[:, None, None, None], dtype),
-        lam=lam,
+        lam=lam if isinstance(lam, float) else jnp.asarray(lam, dtype),
         overlap=int(overlap),
         inner_degree=int(inner_degree),
     )
@@ -378,6 +410,25 @@ def overlap_counts_global(
     ).reshape(-1)
 
 
+def element_screen_means(prob) -> tuple[np.ndarray | None, object, str]:
+    """``(k_elem, lam, screen)`` for :func:`build_fdm` from a problem.
+
+    Element means of the coefficient fields: the Schwarz blocks are already
+    an axis-aligned separable *approximation* of each element, so per-block
+    mean coefficients are the natural (and for per-element-constant
+    families, exact) extension — any residual variation is absorbed by the
+    outer Chebyshev/CG like the geometry approximation is.  Legacy
+    problems return ``(None, λ, "algebraic")`` — bit-identical factors.
+    """
+    k_e = (
+        None if prob.k is None
+        else np.asarray(prob.k, np.float64).mean(axis=1)
+    )
+    if prob.lam_field is None:
+        return k_e, float(prob.lam), "algebraic"
+    return k_e, np.asarray(prob.lam_field, np.float64).mean(axis=1), "mass"
+
+
 def make_schwarz_apply(
     prob,
     *,
@@ -407,14 +458,17 @@ def make_schwarz_apply(
             f"unknown weighting {weighting!r}; choose from {SCHWARZ_WEIGHTINGS}"
         )
     mesh = prob.mesh
+    k_elem, lam_fdm, screen = element_screen_means(prob)
     fdm = build_fdm(
         element_lengths(mesh.coords, mesh.n_degree),
         element_neighbor_flags(_element_indices(mesh.shape), mesh.shape),
         mesh.n_degree,
-        prob.lam,
+        lam_fdm,
         overlap,
         prob.dtype,
         inner_degree=inner_degree,
+        k_elem=k_elem,
+        screen=screen,
     )
     l2g_ext = jnp.asarray(extended_l2g(mesh.n_degree, mesh.shape, overlap))
     counts = overlap_counts_global(mesh.n_degree, mesh.shape, overlap)
@@ -425,12 +479,17 @@ def make_schwarz_apply(
     else:
         w_in = w_out = None
     n_global = prob.n_global
+    bc_mask = prob.mask
 
     def apply(r: jax.Array) -> jax.Array:
-        rw = r if w_in is None else w_in * r
+        # mask ∘ M ∘ mask keeps the Schwarz apply SPD on the Dirichlet-
+        # interior subspace (the extended blocks read across the boundary)
+        rw = r if bc_mask is None else bc_mask * r
+        rw = rw if w_in is None else w_in * rw
         z = fdm_solve(fdm, scatter_masked(rw, l2g_ext))
         out = gather_masked(z, l2g_ext, n_global)
-        return out if w_out is None else w_out * out
+        out = out if w_out is None else w_out * out
+        return out if bc_mask is None else bc_mask * out
 
     return apply
 

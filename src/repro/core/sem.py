@@ -19,6 +19,7 @@ __all__ = [
     "reference_element",
     "interpolation_matrix",
     "interp_coords_3d",
+    "interp_field_3d",
     "stiffness_matrix_1d",
     "extended_interval_matrices",
     "fast_diagonalization_1d",
@@ -147,6 +148,25 @@ def interp_coords_3d(j: np.ndarray, coords: np.ndarray) -> np.ndarray:
     c3 = np.einsum("sb,etbrc->etsrc", j, c3)
     c3 = np.einsum("tc,ecsrx->etsrx", j, c3)
     return c3.reshape(e, -1, 3)
+
+
+def interp_field_3d(j: np.ndarray, field: np.ndarray) -> np.ndarray:
+    """Sample an element-local scalar field on a different-degree GLL grid.
+
+    ``field``: (E, (nf+1)^3) in (t, s, r) node order; ``j``: the 1-D
+    ``interpolation_matrix(n_from, n_to)``.  The scalar twin of
+    :func:`interp_coords_3d` — resamples per-quadrature-point coefficient
+    fields (k, λ) when ``operator.coarsen_problem`` rediscretizes a
+    p-multigrid level.  Exact on per-element-constant fields (the checker
+    family), spectrally accurate on smooth ones.
+    """
+    e = field.shape[0]
+    nf1 = j.shape[1]
+    f3 = np.asarray(field).reshape(e, nf1, nf1, nf1)
+    f3 = np.einsum("ra,etsa->etsr", j, f3)
+    f3 = np.einsum("sb,etbr->etsr", j, f3)
+    f3 = np.einsum("tc,ecsr->etsr", j, f3)
+    return f3.reshape(e, -1)
 
 
 @functools.lru_cache(maxsize=64)

@@ -90,13 +90,35 @@ def solver_setup_key(prob, kind: str = "none", **precond_kwargs) -> tuple:
     the canonicalized preconditioner signature
     (:func:`core.precond.precond_signature` — defaults filled, so every
     spelling of the same config maps to the same key).
+
+    Variable-coefficient state extends the key only when present — a
+    content hash of the k / λ(x) fields and the normalized bc tags — so
+    every legacy (constant-λ, no-bc) key is *unchanged* byte for byte:
+    cached entries from before the operator generalization still hit, and
+    perturbing a coefficient field or flipping one face's bc tag rebuilds.
     """
-    return (
+    key = (
         ("mesh", mesh_signature(prob.mesh)),
         ("n", int(prob.mesh.n_degree)),
         ("lam", float(prob.lam)),
         ("dtype", jnp.dtype(prob.dtype).name),
-    ) + precond_signature(kind, **precond_kwargs)
+    )
+    coef_parts = []
+    if prob.k is not None:
+        h = hashlib.sha256(
+            np.ascontiguousarray(np.asarray(prob.k, np.float64)).tobytes()
+        )
+        coef_parts.append(("k", h.hexdigest()[:16]))
+    if prob.lam_field is not None:
+        h = hashlib.sha256(
+            np.ascontiguousarray(
+                np.asarray(prob.lam_field, np.float64)
+            ).tobytes()
+        )
+        coef_parts.append(("lam_field", h.hexdigest()[:16]))
+    if prob.bc is not None:
+        coef_parts.append(("bc", tuple(prob.bc)))
+    return key + tuple(coef_parts) + precond_signature(kind, **precond_kwargs)
 
 
 @dataclasses.dataclass(frozen=True)

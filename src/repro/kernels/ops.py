@@ -289,20 +289,34 @@ def make_poisson_assembled_fused(
     Same call signature as the split ``poisson_assembled(prob)`` result —
     x_G -> A x_G — so the two are drop-in interchangeable; the returned
     closure carries ``apply.fused = True`` for introspection.
+
+    Variable-coefficient problems need no kernel changes: k(x) is already
+    folded into ``prob.g`` and the λ(x) screen rides the ``w`` stream with
+    ``lam`` pinned to 1.0 (``core.operator.screen_stream`` — ``lam`` is a
+    static argname in the Pallas jit, which is exactly why the field form
+    cannot go through it); Dirichlet BCs are the same mask∘A∘mask wrap as
+    the split path.
     """
+    from ..core.operator import screen_stream  # lazy: core imports kernels
+
+    w_eff, lam_eff = screen_stream(prob)
+    mask = prob.mask
 
     def apply(x_g: jax.Array) -> jax.Array:
-        return poisson_assembled_fused(
+        if mask is not None:
+            x_g = mask * x_g
+        y_g = poisson_assembled_fused(
             x_g,
             prob.l2g,
             prob.g,
-            prob.w_local,
+            w_eff,
             prob.d,
-            lam=prob.lam,
+            lam=lam_eff,
             block_e=block_e,
             interpret=interpret,
             gather_mode=gather_mode,
         )
+        return y_g if mask is None else mask * y_g
 
     apply.fused = True
     return apply

@@ -39,7 +39,8 @@ def main() -> None:
     cfg = REDUCED if args.config == "hipbone_reduced" else CONFIGS[args.config]
     n_req = args.requests or max(cfg.batch_rhs, 1)
     prob = build_problem(
-        cfg.n_degree, cfg.local_elems, lam=cfg.lam, dtype=jnp.dtype(cfg.dtype)
+        cfg.n_degree, cfg.local_elems, lam=cfg.lam,
+        dtype=jnp.dtype(cfg.dtype), **cfg.problem_kwargs()
     )
     engine = SolverEngine(SolverServeConfig(max_batch=args.max_batch))
     rng = np.random.default_rng(args.seed)

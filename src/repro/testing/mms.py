@@ -1,0 +1,265 @@
+"""Manufactured-solutions convergence oracle for the generalized operator.
+
+The variable-coefficient operator A = -∇·(k(x)∇) + λ(x) with mixed
+Dirichlet/Neumann faces is *proven* correct here, not just regression-
+pinned: pick a closed-form u*, derive f = -∇·(k∇u*) + λu* analytically,
+assemble b = Zᵀ(JW∘f) and solve.  A correct discretization converges
+**spectrally** in the polynomial degree N — the discrete-L2 error drops
+by orders of magnitude per degree step for analytic u* — while any
+consistency bug (a mis-folded k, a wrong screen weight, a mask applied
+on the wrong side) flattens the curve immediately.  That makes the
+convergence sweep a far sharper oracle than any fixed-tolerance
+reference comparison.
+
+Each :class:`MMSCase` pairs a coefficient family with a bc spec whose
+boundary terms vanish identically for its u*:
+
+* Dirichlet faces: u* = 0 there (no lifting needed, b is just masked);
+* Neumann faces: k·∂u*/∂n = 0 there (the natural bc of the weak form —
+  nothing to assemble);
+* the checker case additionally has zero flux at the interior k-jump
+  planes, so the piecewise forcing needs no interface terms.
+
+The screen always rides the weak mass-weighted form (an explicit
+``lam_field``, even for the "const" family): the legacy *algebraic* λI
+screen is deliberately NOT the weak discretization of λu — it is
+NekBone's benchmark semantics — and would cap convergence at the mass-
+lumping error.  See ``core.operator.screen_stream``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import cg_assembled, poisson_assembled
+from ..core import coefficients as coef
+from ..core.mesh import build_box_mesh
+from ..core.operator import PoissonProblem, problem_from_mesh
+
+__all__ = [
+    "MMS_CASES",
+    "MMSCase",
+    "convergence_sweep",
+    "discrete_l2_error",
+    "exact_solution_global",
+    "mms_problem",
+    "mms_rhs",
+]
+
+_PI = np.pi
+
+
+def _u_dirichlet(x, y, z):
+    """sin(πx)sin(πy)sin(πz): vanishes on all six faces of [0,1]³."""
+    return np.sin(_PI * x) * np.sin(_PI * y) * np.sin(_PI * z)
+
+
+def _grad_dirichlet(x, y, z):
+    sx, sy, sz = np.sin(_PI * x), np.sin(_PI * y), np.sin(_PI * z)
+    cx, cy, cz = np.cos(_PI * x), np.cos(_PI * y), np.cos(_PI * z)
+    return _PI * cx * sy * sz, _PI * sx * cy * sz, _PI * sx * sy * cz
+
+
+def _lap_dirichlet(x, y, z):
+    return -3.0 * _PI**2 * _u_dirichlet(x, y, z)
+
+
+def _u_mixed(x, y, z):
+    """sin(πx)cos(πy)cos(πz): u = 0 on the x faces, ∂u/∂n = 0 on y/z faces.
+
+    Matches ``bc="mixed"`` (Dirichlet on x_lo/x_hi, Neumann elsewhere).
+    """
+    return np.sin(_PI * x) * np.cos(_PI * y) * np.cos(_PI * z)
+
+
+def _grad_mixed(x, y, z):
+    sx, sy, sz = np.sin(_PI * x), np.sin(_PI * y), np.sin(_PI * z)
+    cx, cy, cz = np.cos(_PI * x), np.cos(_PI * y), np.cos(_PI * z)
+    return _PI * cx * cy * cz, -_PI * sx * sy * cz, -_PI * sx * cy * sz
+
+
+def _lap_mixed(x, y, z):
+    return -3.0 * _PI**2 * _u_mixed(x, y, z)
+
+
+def _u_neumann(x, y, z):
+    """cos(2πx)cos(2πy)cos(2πz): zero normal derivative on every face AND
+    on the x/y/z = ½ checker jump planes — the flux k·∂u/∂n is continuous
+    (identically zero) across every k-discontinuity, so this smooth u* is
+    the exact weak solution of the piecewise-k interface problem."""
+    return np.cos(2 * _PI * x) * np.cos(2 * _PI * y) * np.cos(2 * _PI * z)
+
+
+def _grad_neumann(x, y, z):
+    sx, sy, sz = np.sin(2 * _PI * x), np.sin(2 * _PI * y), np.sin(2 * _PI * z)
+    cx, cy, cz = np.cos(2 * _PI * x), np.cos(2 * _PI * y), np.cos(2 * _PI * z)
+    return (
+        -2 * _PI * sx * cy * cz,
+        -2 * _PI * cx * sy * cz,
+        -2 * _PI * cx * cy * sz,
+    )
+
+
+def _lap_neumann(x, y, z):
+    return -12.0 * _PI**2 * _u_neumann(x, y, z)
+
+
+@dataclasses.dataclass(frozen=True)
+class MMSCase:
+    """One manufactured solution: (coefficient family, bc spec, u*, ∇u*, Δu*)."""
+
+    name: str
+    coefficient: str            # "const" | "smooth" | "checker"
+    bc: str                     # spec accepted by mesh.normalize_bc
+    exact: Callable             # u*(x, y, z)
+    grad: Callable              # (∂x, ∂y, ∂z) u*
+    lap: Callable               # Δu*
+
+
+MMS_CASES = {
+    c.name: c
+    for c in (
+        MMSCase("const-dirichlet", "const", "dirichlet",
+                _u_dirichlet, _grad_dirichlet, _lap_dirichlet),
+        MMSCase("const-mixed", "const", "mixed",
+                _u_mixed, _grad_mixed, _lap_mixed),
+        MMSCase("smooth-dirichlet", "smooth", "dirichlet",
+                _u_dirichlet, _grad_dirichlet, _lap_dirichlet),
+        MMSCase("smooth-mixed", "smooth", "mixed",
+                _u_mixed, _grad_mixed, _lap_mixed),
+        MMSCase("checker-neumann", "checker", "neumann",
+                _u_neumann, _grad_neumann, _lap_neumann),
+    )
+}
+
+
+def mms_problem(
+    case: MMSCase,
+    n_degree: int,
+    shape: tuple[int, int, int] = (2, 2, 2),
+    *,
+    lam: float = 1.0,
+    dtype=jnp.float64,
+) -> PoissonProblem:
+    """The case's problem at degree ``n_degree`` on a ``shape`` element box.
+
+    Always passes an explicit (constant) ``lam_field`` so the screen is
+    the weak mass form — required for the convergence order; the "const"
+    family here is NOT the legacy algebraic-λI problem (see module doc).
+    """
+    m = build_box_mesh(n_degree, shape)
+    if case.coefficient == "const":
+        k = None
+    elif case.coefficient == "smooth":
+        x, y, z = (m.coords[..., i] for i in range(3))
+        k = coef.smooth_k(x, y, z)
+    elif case.coefficient == "checker":
+        k = coef.checker_k_elements(m.coords)
+    else:
+        raise ValueError(f"unknown coefficient {case.coefficient!r}")
+    return problem_from_mesh(
+        m, lam=lam, dtype=dtype, k=k, lam_field=lam, bc=case.bc
+    )
+
+
+def _forcing(case: MMSCase, coords: np.ndarray, lam: float) -> np.ndarray:
+    """f = -∇·(k∇u*) + λu* on the (E, p) node set, closed form."""
+    x, y, z = coords[..., 0], coords[..., 1], coords[..., 2]
+    u = case.exact(x, y, z)
+    lap = case.lap(x, y, z)
+    if case.coefficient == "smooth":
+        k = coef.smooth_k(x, y, z)
+        kx, ky, kz = coef.smooth_k_grad(x, y, z)
+        ux, uy, uz = case.grad(x, y, z)
+        return -k * lap - (kx * ux + ky * uy + kz * uz) + lam * u
+    if case.coefficient == "checker":
+        # element-constant k: no ∇k term inside elements, and the
+        # interface flux terms vanish for this u* (zero normal flux).
+        return -coef.checker_k_elements(coords) * lap + lam * u
+    return -lap + lam * u
+
+
+def mms_rhs(prob: PoissonProblem, case: MMSCase) -> jnp.ndarray:
+    """Assembled load vector b = mask ∘ Zᵀ(JW ∘ f_L), in the solve dtype."""
+    coords = np.asarray(prob.mesh.coords, np.float64)
+    f_l = _forcing(case, coords, float(prob.lam))
+    b_l = np.asarray(prob.jw, np.float64) * f_l
+    b = np.zeros(prob.n_global)
+    np.add.at(b, np.asarray(prob.mesh.l2g), b_l)
+    if prob.mask is not None:
+        b = b * np.asarray(prob.mask, np.float64)
+    return jnp.asarray(b, prob.dtype)
+
+
+def exact_solution_global(prob: PoissonProblem, case: MMSCase) -> np.ndarray:
+    """u* sampled on the assembled (N_G,) DOF set."""
+    coords = np.asarray(prob.mesh.coords, np.float64)
+    xg = np.zeros((prob.n_global, 3))
+    xg[np.asarray(prob.mesh.l2g)] = coords
+    return case.exact(xg[:, 0], xg[:, 1], xg[:, 2])
+
+
+def discrete_l2_error(
+    prob: PoissonProblem, x, u_exact: np.ndarray
+) -> float:
+    """Relative discrete L2 error √(Σ JW·e²) / √(Σ JW·u*²), e = x − u*.
+
+    Quadrature-weighted over the element-local node set (the assembly sum
+    over duplicated interface nodes IS the quadrature sum), so the norm
+    is mesh-independent and the sweep's errors are comparable across N.
+    """
+    e_l = (np.asarray(x, np.float64) - u_exact)[np.asarray(prob.mesh.l2g)]
+    u_l = u_exact[np.asarray(prob.mesh.l2g)]
+    jw = np.asarray(prob.jw, np.float64)
+    return float(
+        np.sqrt(np.sum(jw * e_l**2)) / np.sqrt(np.sum(jw * u_l**2))
+    )
+
+
+def convergence_sweep(
+    case: MMSCase,
+    degrees=(3, 5, 7, 9),
+    shape: tuple[int, int, int] = (2, 2, 2),
+    *,
+    lam: float = 1.0,
+    dtype=jnp.float64,
+    tol: float = 1e-11,
+    n_iter: int = 2000,
+    fused: bool | None = None,
+    fused_kwargs: dict | None = None,
+    solve=None,
+) -> list[float]:
+    """Relative discrete-L2 errors of the case's solve at each degree.
+
+    The oracle assertion pattern (tests/test_mms.py): errors decrease
+    monotonically (small slack for the last near-roundoff step) and the
+    first/last ratio spans ≥ 4 orders of magnitude — spectral convergence
+    for analytic u*.  ``solve`` overrides the default fp64 plain-CG solve
+    with a custom ``solve(prob, operator, b) -> x`` (the sharded and
+    preconditioned sweeps reuse the same builder + oracle this way);
+    ``fused`` pins the fused/split assembled operator.
+    """
+    errs = []
+    for n in degrees:
+        prob = mms_problem(case, n, shape, lam=lam, dtype=dtype)
+        operator = poisson_assembled(
+            prob, fused=fused, fused_kwargs=fused_kwargs
+        )
+        b = mms_rhs(prob, case)
+        if solve is None:
+            # plain fp64 CG driven deep; the stagnation detector is off —
+            # jump-coefficient spectra plateau for > a window and then
+            # resume (checker at N=9 trips it at ~1e-5 error otherwise).
+            res = cg_assembled(
+                operator, b, n_iter=n_iter, tol=tol, stagnation_window=None
+            )
+            x = res.x
+        else:
+            x = solve(prob, operator, b)
+        errs.append(
+            discrete_l2_error(prob, x, exact_solution_global(prob, case))
+        )
+    return errs

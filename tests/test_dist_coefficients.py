@@ -1,0 +1,147 @@
+"""Sharded variable-coefficient parity: dist_cg vs the single-device solve.
+
+The acceptance bar for the variable-coefficient operator (PR10) is
+iteration-for-iteration parity: a sharded solve with k(x)/λ(x) fields and
+mixed BCs must report *exactly* the same CG iteration count as the
+single-device solve of the identical global problem, for every ladder rung
+(jacobi / chebyshev / schwarz / pmg-galerkin_mat) and again with the whole
+preconditioner chain demoted to fp32 (flexible PCG).  Anything looser
+would let a partitioning bug hide behind "close enough" convergence.
+
+Each test runs one subprocess with 8 fake CPU devices (a 2x2x2 rank grid,
+2x1x1 elements per rank) and loops the rung matrix inside it so the mesh /
+reference-problem setup is paid once.  Slow-marked: the distributed pMG
+jit compile dominates the runtime.
+"""
+import pytest
+
+from conftest import run_subprocess
+
+# Shared subprocess preamble: builds the global reference problem and the
+# matching dist problem, partitions fields/vectors into halo-first box
+# order, and defines check() asserting exact iteration parity + solution
+# agreement.  {checks} is replaced per-test with the rung matrix.
+_TEMPLATE = """
+import jax
+jax.config.update("jax_enable_x64", True)
+import numpy as np, jax.numpy as jnp
+from repro.compat import make_mesh
+from repro.core.distributed import build_dist_problem, dist_cg, _ordered_elements
+from repro.comms.topology import ProcessGrid
+from repro.core import build_problem, poisson_assembled, cg_assembled
+from repro.core.mesh import partition_elements
+from repro.core.precond import make_preconditioner
+
+N = 3
+grid = ProcessGrid((2, 2, 2)); local = (2, 1, 1)
+gshape = (4, 2, 2)
+mesh = make_mesh((8,), ("ranks",))
+rng = np.random.default_rng(0)
+GX, GY = gshape[0]*N+1, gshape[1]*N+1
+
+def box_from_global(prob, vec):
+    out = np.zeros((grid.size, prob.m3))
+    mx, my, mz = prob.box_shape
+    for r in range(grid.size):
+        ci, cj, ck = grid.coords(r)
+        ox, oy, oz = ci*local[0]*N, cj*local[1]*N, ck*local[2]*N
+        x, y, z = np.meshgrid(np.arange(mx), np.arange(my), np.arange(mz),
+                              indexing="ij")
+        gidx = (ox+x) + GX*((oy+y) + GY*(oz+z))
+        out[r] = vec[gidx.transpose(2, 1, 0).reshape(-1)]
+    return out
+
+def box_partition_field(field):
+    # partition an (E, p) element field into (R, E_loc, p) halo-first order
+    ordered, _ = _ordered_elements(local)
+    out = np.zeros((grid.size, local[0]*local[1]*local[2], field.shape[1]))
+    for r in range(grid.size):
+        ci, cj, ck = grid.coords(r)
+        ex = ordered[:, 0] + ci*local[0]
+        ey = ordered[:, 1] + cj*local[1]
+        ez = ordered[:, 2] + ck*local[2]
+        gid = ex + gshape[0]*(ey + gshape[1]*ez)
+        out[r] = field[gid]
+    return out
+
+def check(coef, bc, kind, pdtype=None, variant="standard", **kw):
+    cname = None if coef == "const" else coef
+    ref = build_problem(N, gshape, lam=0.8, coefficient=cname, bc=bc,
+                        dtype=jnp.float64)
+    A = poisson_assembled(ref)
+    prob = build_dist_problem(N, grid, local, lam=0.8, dtype=jnp.float64,
+                              coefficient=cname, bc=bc)
+    if ref.k is not None:
+        k_part = box_partition_field(np.asarray(ref.k, np.float64))
+        assert np.array_equal(k_part, prob.k), (coef, "k field mismatch")
+    bg = rng.standard_normal(ref.n_global)
+    if ref.mask is not None:
+        bg = bg * np.asarray(ref.mask, np.float64)
+    b_boxes = jnp.asarray(box_from_global(prob, bg))
+    dkw = dict(kw)
+    skw = {}
+    if kind == "pmg" and kw.get("pmg_coarse_op") == "galerkin_mat":
+        skw["pmg_coarse_op"] = "galerkin_mat"
+    if kind == "pmg":
+        # force the same iterative coarse solve on both sides so the rung
+        # is comparable down to the last digit
+        skw["pmg_coarse_solve"] = "chebyshev"
+        skw["pmg_coarse_iters"] = 16
+        dkw["pmg_coarse_iters"] = 16
+    if kind == "schwarz":
+        skw["schwarz_overlap"] = dkw["schwarz_overlap"] = 1
+    run = jax.jit(dist_cg(prob, mesh, b_boxes, n_iter=200, tol=1e-10,
+                          precond=kind, cheb_degree=2,
+                          precond_dtype=pdtype, cg_variant=variant, **dkw))
+    x_boxes, rdotr, iters, status, hist = run()
+    assert int(status) == 0, (coef, bc, kind, "status", int(status))
+    pc, info = make_preconditioner(kind, ref, A, degree=2,
+                                   precond_dtype=pdtype, **skw)
+    res = cg_assembled(A, jnp.asarray(bg), n_iter=200, tol=1e-10, precond=pc,
+                       cg_variant=variant)
+    err = np.abs(np.array(x_boxes) - box_from_global(prob,
+                                                     np.array(res.x))).max()
+    tag = (coef, bc, kind, None if pdtype is None else "fp32")
+    print(tag, "dist", int(iters), "single", int(res.iterations),
+          "err %.2e" % err)
+    assert int(iters) == int(res.iterations), tag
+    assert err < 1e-8, (tag, err)
+
+{checks}
+print("PARITY-OK")
+"""
+
+_FP64_CHECKS = """
+# every rung under smooth k(x)/lam(x) with mixed BCs
+for kind, kw in [("jacobi", {}), ("chebyshev", {}), ("schwarz", {}),
+                 ("pmg", {"pmg_coarse_op": "galerkin_mat"})]:
+    check("smooth", "mixed", kind, **kw)
+# bc machinery alone (constant coefficients)
+check("const", "dirichlet", "jacobi")
+# jump coefficients
+check("checker", "dirichlet", "pmg", pmg_coarse_op="galerkin_mat")
+# legacy const/no-bc path stays in parity too
+check("const", None, "jacobi")
+"""
+
+_FP32_CHECKS = """
+# fp32 preconditioner chains inside the fp64 flexible PCG
+for kind, kw in [("jacobi", {}), ("chebyshev", {}), ("schwarz", {}),
+                 ("pmg", {"pmg_coarse_op": "galerkin_mat"})]:
+    check("smooth", "mixed", kind, pdtype=jnp.float32, variant="flexible",
+          **kw)
+"""
+
+
+@pytest.mark.slow
+def test_dist_parity_variable_coefficient_fp64():
+    code = _TEMPLATE.replace("{checks}", _FP64_CHECKS)
+    out = run_subprocess(code, timeout=3500)
+    assert "PARITY-OK" in out
+
+
+@pytest.mark.slow
+def test_dist_parity_variable_coefficient_fp32_chain():
+    code = _TEMPLATE.replace("{checks}", _FP32_CHECKS)
+    out = run_subprocess(code, timeout=3500)
+    assert "PARITY-OK" in out

@@ -38,6 +38,25 @@ def test_fused_matches_split_fp64(n, rng):
     assert rel <= 1e-12
 
 
+@pytest.mark.parametrize("coefficient", ["smooth", "checker"])
+@pytest.mark.parametrize("deform", [0.0, 0.15])
+def test_fused_matches_split_variable_coefficient_fp64(coefficient, deform, rng):
+    """The fused kernel sees k(x)/λ(x)/bc only through its g/w streams and
+    the mask wrap — parity with the split pipeline must stay at fp64
+    round-off, deformed coordinates included."""
+    prob = build_problem(
+        3, (2, 2, 2), lam=0.7, deform=deform, dtype=jnp.float64,
+        coefficient=coefficient, bc="mixed",
+    )
+    x = _rand_x(prob, rng, jnp.float64)
+    want = poisson_assembled(prob, fused=False)(x)
+    got = poisson_assembled(
+        prob, fused=True, fused_kwargs={"interpret": True}
+    )(x)
+    rel = float(jnp.max(jnp.abs(got - want)) / jnp.max(jnp.abs(want)))
+    assert rel <= 1e-12
+
+
 def test_fused_matches_split_fp32(rng):
     prob = build_problem(5, (2, 2, 2), lam=0.9, deform=0.12, dtype=jnp.float32)
     x = _rand_x(prob, rng, jnp.float32)

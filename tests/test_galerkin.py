@@ -87,6 +87,31 @@ def test_materialized_equals_chained_triple_product(prob64):
     )
 
 
+@pytest.mark.parametrize("coefficient", ["smooth", "checker"])
+def test_galerkin_probing_is_coefficient_agnostic(coefficient):
+    """ISSUE tentpole: the block probe consumes exactly the streams the
+    fine operator does — variable k rides the folded g and λ(x) rides the
+    screen stream — so Z_cᵀ[Ĵᵀ(S_k+JWλ)Ĵ]Z_c == R A P with no
+    coefficient-aware code anywhere in the probing path."""
+    from repro.core.operator import screen_stream
+
+    jax.config.update("jax_enable_x64", True)
+    prob = build_problem(
+        4, (2, 2, 2), lam=0.7, deform=0.2, dtype=jnp.float64,
+        coefficient=coefficient,
+    )
+    a = poisson_assembled(prob)
+    pc1 = coarsen_problem(prob, 2)
+    prolong, restrict = make_transfer_pair(prob, pc1)
+    want = _dense(lambda v: restrict(a(prolong(v))), pc1.n_global)
+    w_eff, lam_eff = screen_stream(prob)
+    blocks = galerkin_element_blocks(prob.g, prob.d, lam_eff, w_eff, 2)
+    got = _dense(
+        galerkin_block_apply(blocks, pc1.l2g, pc1.n_global), pc1.n_global
+    )
+    np.testing.assert_allclose(got, want, atol=1e-12)
+
+
 def test_ladder_blocks_match_per_level_probing(prob64):
     """galerkin_ladder_blocks (probe once, contract deeper) equals probing
     the fine operator independently at every coarse degree."""

@@ -34,6 +34,32 @@ def test_poisson_kernel_block_sweep(block_e, rng):
     np.testing.assert_allclose(np.array(got), np.array(want), rtol=2e-5, atol=1e-5)
 
 
+@pytest.mark.parametrize("coefficient", ["smooth", "checker"])
+@pytest.mark.parametrize("deform", [0.0, 0.15])
+def test_poisson_kernel_variable_coefficient_fp64(coefficient, deform, rng):
+    """Variable k(x)/λ(x) reach the Pallas kernel only through the folded
+    g factors and the mass-weighted w stream (``screen_stream``) — parity
+    with the jnp oracle stays at fp64 round-off, deformed coords included."""
+    import jax
+
+    from repro.core.operator import screen_stream
+
+    jax.config.update("jax_enable_x64", True)
+    prob = build_problem(
+        4, (2, 2, 2), lam=0.7, deform=deform, dtype=jnp.float64,
+        coefficient=coefficient, bc="mixed",
+    )
+    w_eff, lam_eff = screen_stream(prob)
+    e, p = prob.mesh.n_elements, prob.mesh.points_per_element
+    u = jnp.asarray(rng.standard_normal((e, p)), jnp.float64)
+    want = ref.poisson_local_ref(u, prob.g, w_eff, prob.d, lam=lam_eff)
+    got = ops.poisson_local(
+        u, prob.g, w_eff, prob.d, lam=lam_eff, interpret=True
+    )
+    rel = float(jnp.max(jnp.abs(got - want)) / jnp.max(jnp.abs(want)))
+    assert rel <= 1e-12
+
+
 def test_poisson_kernel_bf16(rng):
     prob = build_problem(3, (2, 2, 2), lam=1.0, dtype=jnp.bfloat16)
     e, p = prob.mesh.n_elements, prob.mesh.points_per_element

@@ -16,6 +16,7 @@ hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
+from conftest import run_subprocess
 from repro.core import (
     batched_cg_assembled,
     build_problem,
@@ -27,6 +28,7 @@ from repro.core import (
 )
 from repro.core.gather_scatter import gather, scatter
 from repro.core.mesh import build_box_mesh, partition_elements
+from repro.core.operator import problem_from_mesh
 from repro.comms.topology import factor3
 from repro.models.moe import router_topk
 from repro.models.config import ModelConfig
@@ -37,6 +39,12 @@ settings.register_profile("ci", max_examples=25, deadline=None)
 settings.register_profile("thorough", max_examples=200, deadline=None)
 settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "ci"))
 SMALL = settings()  # the loaded profile's budget
+# Coefficient-field strategies build a full problem + preconditioner per
+# example (seconds each, vs milliseconds for the pure-array properties) —
+# a reduced example count keeps them inside the ci leg's wall-clock
+# budget; deadline stays None profile-wide (single examples legitimately
+# exceed hypothesis' default 200 ms deadline under jit compilation).
+HEAVY = settings(SMALL, max_examples=max(settings().max_examples // 3, 5))
 
 
 @SMALL
@@ -197,6 +205,204 @@ def test_cache_key_determinism(n, lam, delta, kind):
     # canonicalization: spelling out a default == omitting it
     assert precond_signature(kind, degree=2) == precond_signature(kind)
     assert precond_signature(kind, degree=3) != precond_signature(kind)
+
+
+def _random_coefficient_problem(n, seed, bc, *, lam=0.8, dtype=jnp.float32):
+    """Random positive k(x)/λ(x) fields on a 2³ box (log-normal k keeps the
+    draws strictly positive with O(10×) contrast — the SPD precondition).
+
+    Field sizes are bounded by n ≤ 3 on 8 elements so the whole strategy
+    stays far inside the hypothesis ``ci`` example budget.
+    """
+    m = build_box_mesh(n, (2, 2, 2))
+    rng = np.random.default_rng(seed)
+    shape = m.coords.shape[:2]
+    k = np.exp(rng.normal(0.0, 0.8, shape))
+    lam_field = 0.05 + np.abs(rng.normal(lam, 0.5, shape))
+    return problem_from_mesh(
+        m, lam=lam, dtype=dtype, k=k, lam_field=lam_field, bc=bc
+    )
+
+
+def _masked_probes(prob, seed, cols=6):
+    """Random probe block restricted to the Dirichlet-interior subspace."""
+    rng = np.random.default_rng(seed)
+    y = rng.standard_normal((prob.n_global, cols)).astype(np.float32)
+    if prob.mask is not None:
+        y = y * np.asarray(prob.mask, np.float32)[:, None]
+    return y
+
+
+def _assert_gram_spd(y, apply, label):
+    mz = np.stack(
+        [np.asarray(apply(jnp.asarray(y[:, j]))) for j in range(y.shape[1])],
+        axis=1,
+    )
+    gram = y.T @ mz
+    asym = np.abs(gram - gram.T).max() / (np.abs(gram).max() + 1e-12)
+    assert asym < 5e-3, f"{label} not symmetric: rel asym {asym}"
+    eig = np.linalg.eigvalsh(0.5 * (gram + gram.T))
+    assert eig.min() > 0, f"{label} not positive definite: min eig {eig.min()}"
+
+
+@HEAVY
+@given(
+    n=st.integers(2, 3),
+    seed=st.integers(0, 1000),
+    bc=st.sampled_from([None, "dirichlet", "mixed", "neumann"]),
+)
+def test_operator_spd_variable_coefficients(n, seed, bc):
+    """A = -∇·(k∇) + λ(x) stays SPD on the Dirichlet-interior subspace for
+    random positive coefficient draws — the property CG itself assumes."""
+    prob = _random_coefficient_problem(n, seed, bc)
+    _assert_gram_spd(
+        _masked_probes(prob, seed + 1), poisson_assembled(prob), "A"
+    )
+
+
+@HEAVY
+@given(
+    n=st.integers(2, 3),
+    seed=st.integers(0, 1000),
+    kind=st.sampled_from(["jacobi", "chebyshev", "pmg", "schwarz"]),
+    bc=st.sampled_from([None, "mixed"]),
+)
+def test_ladder_spd_variable_coefficients(n, seed, kind, bc):
+    """Every preconditioner rung's M⁻¹ stays SPD under random coefficient
+    fields and bc masks (pmg exercises the field-resampling coarsen path,
+    schwarz the element-mean FDM blocks)."""
+    prob = _random_coefficient_problem(n, seed, bc)
+    a = poisson_assembled(prob)
+    pc, _ = make_preconditioner(kind, prob, a)
+    _assert_gram_spd(_masked_probes(prob, seed + 1), pc, f"M⁻¹[{kind}]")
+
+
+@HEAVY
+@given(
+    n=st.integers(2, 3),
+    seed=st.integers(0, 1000),
+    kind=st.sampled_from(["none", "jacobi", "pmg"]),
+)
+def test_cache_key_coefficient_sensitivity(n, seed, kind):
+    """The setup-cache key misses whenever the physics changes — and ONLY
+    then: legacy constant-λ keys are unchanged by the coefficient
+    extension, rebuilding the same fields hits, perturbing one node of k,
+    swapping the family, or flipping a bc tag all miss."""
+    legacy = build_problem(n, (2, 2, 2), lam=0.8, dtype=jnp.float32)
+    const = build_problem(
+        n, (2, 2, 2), lam=0.8, dtype=jnp.float32, coefficient="const"
+    )
+    assert solver_setup_key(legacy, kind) == solver_setup_key(const, kind)
+
+    p1 = _random_coefficient_problem(n, seed, "mixed")
+    p2 = _random_coefficient_problem(n, seed, "mixed")
+    k1 = solver_setup_key(p1, kind)
+    assert k1 == solver_setup_key(p2, kind)          # determinism → hit
+    assert k1 != solver_setup_key(legacy, kind)      # physics differs
+
+    # one node, one ulp-scale (in the stored fp32 dtype) perturbation —
+    # the key hashes the fields as the problem stores them, so the nudge
+    # must survive the dtype cast
+    k_pert = np.asarray(p1.k, np.float64).copy()
+    k_pert.flat[seed % k_pert.size] *= 1.0 + 1e-6
+    p3 = problem_from_mesh(
+        p1.mesh, lam=p1.lam, dtype=jnp.float32, k=k_pert,
+        lam_field=np.asarray(p1.lam_field, np.float64), bc="mixed",
+    )
+    assert solver_setup_key(p3, kind) != k1          # any field bit → miss
+
+    p4 = _random_coefficient_problem(n, seed, "dirichlet")
+    assert solver_setup_key(p4, kind) != k1          # bc tag → miss
+
+    smooth = build_problem(
+        n, (2, 2, 2), lam=0.8, dtype=jnp.float32, coefficient="smooth"
+    )
+    checker = build_problem(
+        n, (2, 2, 2), lam=0.8, dtype=jnp.float32, coefficient="checker"
+    )
+    assert solver_setup_key(smooth, kind) != solver_setup_key(checker, kind)
+
+
+@pytest.mark.slow
+def test_sharded_parity_random_coefficient_fields():
+    """Sharded-vs-single iteration parity holds under random positive
+    coefficient draws, not just the named families — three seeded draws
+    through the full dist_cg stack on 8 fake devices."""
+    run_subprocess(
+        """
+import jax
+jax.config.update("jax_enable_x64", True)
+import numpy as np, jax.numpy as jnp
+from repro.compat import make_mesh
+from repro.comms.topology import ProcessGrid
+from repro.core import build_box_mesh, cg_assembled, poisson_assembled
+from repro.core.operator import problem_from_mesh
+from repro.core.distributed import build_dist_problem, dist_cg, _ordered_elements
+
+N = 3
+grid = ProcessGrid((2, 2, 2)); local = (1, 1, 1); shape = (2, 2, 2)
+mesh = make_mesh((8,), ("ranks",))
+GX, GY = shape[0] * N + 1, shape[1] * N + 1
+ordered, _ = _ordered_elements(local)
+
+
+def partition_field(field):
+    out = np.zeros((grid.size, len(ordered)) + field.shape[1:])
+    for r in range(grid.size):
+        ci, cj, ck = grid.coords(r)
+        ex = ordered[:, 0] + ci * local[0]
+        ey = ordered[:, 1] + cj * local[1]
+        ez = ordered[:, 2] + ck * local[2]
+        out[r] = field[ex + shape[0] * (ey + shape[1] * ez)]
+    return out
+
+
+def boxes_from_global(prob, vec):
+    mx, my, mz = prob.box_shape
+    out = np.zeros((grid.size, prob.m3))
+    for r in range(grid.size):
+        ci, cj, ck = grid.coords(r)
+        ox, oy, oz = ci * local[0] * N, cj * local[1] * N, ck * local[2] * N
+        x, y, z = np.meshgrid(
+            np.arange(mx), np.arange(my), np.arange(mz), indexing="ij"
+        )
+        gidx = (ox + x) + GX * ((oy + y) + GY * (oz + z))
+        out[r] = vec[gidx.transpose(2, 1, 0).reshape(-1)]
+    return out
+
+
+for seed in (0, 7, 42):
+    rng = np.random.default_rng(seed)
+    m = build_box_mesh(N, shape)
+    fshape = m.coords.shape[:2]
+    k = np.exp(rng.normal(0.0, 0.8, fshape))
+    lam_field = 0.05 + np.abs(rng.normal(0.8, 0.5, fshape))
+    ref = problem_from_mesh(
+        m, lam=0.8, dtype=jnp.float64, k=k, lam_field=lam_field, bc="mixed"
+    )
+    bg = rng.standard_normal(ref.n_global) * np.asarray(ref.mask, np.float64)
+    res = cg_assembled(
+        poisson_assembled(ref), jnp.asarray(bg), n_iter=300, tol=1e-10
+    )
+    prob = build_dist_problem(
+        N, grid, local, lam=0.8, dtype=jnp.float64,
+        k=partition_field(k), lam_field=partition_field(lam_field),
+        bc="mixed",
+    )
+    run = jax.jit(dist_cg(prob, mesh, jnp.asarray(boxes_from_global(prob, bg)),
+                          n_iter=300, tol=1e-10))
+    x_boxes, rdotr, iters, status, hist = run()
+    err = np.abs(
+        np.asarray(x_boxes) - boxes_from_global(prob, np.asarray(res.x))
+    ).max()
+    print(seed, int(iters), int(res.iterations), err)
+    assert int(status) == 0, (seed, int(status))
+    assert int(iters) == int(res.iterations), (seed, int(iters), int(res.iterations))
+    assert err < 1e-8, (seed, err)
+print("PARITY-OK")
+""",
+        timeout=900,
+    )
 
 
 @SMALL
